@@ -1,0 +1,121 @@
+"""Shared benchmark substrate: small pretrained models + calibration + PTQ.
+
+Benchmarks need models with REALISTIC activation statistics (anisotropic,
+correlated — that is what separates QERA-exact from QERA-approx from LQER),
+so we briefly pretrain small models on the synthetic corpus and cache the
+weights under experiments/bench_cache/.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.core import PTQConfig, quantize_params
+from repro.core.calibration import LayerStats
+from repro.data.tokenstream import DataConfig, make_batch
+from repro.models import ModelConfig, Taps, forward, init_params
+from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+CACHE_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench_cache"
+
+LM_CFG = ModelConfig(
+    name="bench-lm", family="dense", num_layers=4, d_model=96, num_heads=6,
+    num_kv_heads=3, head_dim=16, d_ff=256, vocab_size=256, max_seq_len=256,
+    scan_layers=False)
+
+ENC_CFG = ModelConfig(
+    name="bench-enc", family="encoder", num_layers=3, d_model=96, num_heads=6,
+    num_kv_heads=6, head_dim=16, d_ff=256, vocab_size=256, max_seq_len=128,
+    num_classes=2, scan_layers=False)
+
+LM_DATA = DataConfig(vocab_size=256, seq_len=64, global_batch=16, seed=7)
+
+
+def pretrained_lm(steps: int = 300, force: bool = False):
+    """Small decoder LM trained on the synthetic corpus (cached)."""
+    mgr = CheckpointManager(CACHE_DIR / "lm", keep=1)
+    if not force and mgr.latest_step() == steps:
+        _, tree, _ = mgr.restore()
+        return tree["params"]
+    params = init_params(LM_CFG, jax.random.PRNGKey(0))
+    opt_cfg = OptimizerConfig(peak_lr=3e-3, schedule="cosine",
+                              warmup_steps=20, total_steps=steps)
+    step_fn = jax.jit(make_train_step(LM_CFG, opt_cfg), donate_argnums=(0, 1))
+    state = init_opt_state(params)
+    for s in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in make_batch(LM_DATA, s).items()}
+        params, state, m = step_fn(params, state, batch)
+    print(f"# pretrained bench LM: final ce {float(m['ce']):.3f}")
+    mgr.save(steps, {"params": params})
+    return params
+
+
+def calib_batches(n_samples: int, seq: int = 64, seed: int = 1234):
+    """Calibration token batches disjoint from training (different seed)."""
+    dc = dataclasses.replace(LM_DATA, seed=seed,
+                             global_batch=max(1, n_samples))
+    return make_batch(dc, 0)["tokens"][:n_samples]
+
+
+def calibrate(params, cfg: ModelConfig, tokens, with_outer: bool = True):
+    """Run Taps over calibration tokens -> {weight_path: LayerStats}."""
+    taps = Taps(with_outer=with_outer)
+    forward(params, {"tokens": jnp.asarray(tokens)}, cfg, taps=taps)
+    return remap_stats(taps.layer_stats())
+
+
+def remap_stats(stats: dict) -> dict[str, LayerStats]:
+    """taps keys 'blocks/i/<sub>/<name>' -> param keys 'blocks/<name>:i'
+    (+ passthrough for non-block layers)."""
+    out = {}
+    for k, v in stats.items():
+        parts = k.split("/")
+        if parts[0] == "blocks":
+            out[f"blocks/{parts[-1]}:{parts[1]}"] = v
+        else:
+            out[k.replace("/", "_")] = v
+            out[k] = v
+    return out
+
+
+def ptq(params, cfg_model: ModelConfig, method: str, rank: int,
+        quantizer: str, stats=None, **kw):
+    qcfg = PTQConfig(method=method, rank=rank, quantizer=quantizer, **kw)
+    return quantize_params(params, qcfg, stats_by_path=stats,
+                           key=jax.random.PRNGKey(0))
+
+
+def model_output_error(params_a, params_b, cfg: ModelConfig, tokens) -> float:
+    """Mean squared error between output logits of two param sets
+    (the paper's Fig. 1 metric)."""
+    la, _, _ = forward(params_a, {"tokens": jnp.asarray(tokens)}, cfg)
+    lb, _, _ = forward(params_b, {"tokens": jnp.asarray(tokens)}, cfg)
+    return float(jnp.mean(jnp.sum((la - lb) ** 2, axis=-1)))
+
+
+def eval_ce(params, cfg: ModelConfig, *, seed: int = 999, batches: int = 4) -> float:
+    """Held-out CE (the WikiText2-perplexity stand-in)."""
+    from repro.models.transformer import cross_entropy
+    dc = dataclasses.replace(LM_DATA, seed=seed)
+    tot = 0.0
+    for s in range(batches):
+        b = make_batch(dc, s)
+        logits, _, _ = forward(params, {"tokens": jnp.asarray(b["tokens"])},
+                               cfg)
+        tot += float(cross_entropy(logits, jnp.asarray(b["labels"])))
+    return tot / batches
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0] if jax.tree.leaves(out)
+                          else jnp.zeros(()))
+    return out, time.time() - t0

@@ -1,0 +1,71 @@
+"""Figure 1 — model output error before fine-tuning vs rank and LoftQ iters.
+
+Paper claims reproduced here:
+  (1) QERA's output error is the lowest at every (bits, rank);
+  (2) QERA's error decreases monotonically with rank;
+  (3) LoftQ: more iterations / higher rank do NOT guarantee lower model
+      output error (weight error decreases — Appendix A.5 — output may not).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    LM_CFG,
+    calib_batches,
+    calibrate,
+    model_output_error,
+    pretrained_lm,
+    ptq,
+)
+
+
+def run(csv_rows: list | None = None) -> dict:
+    params = pretrained_lm()
+    calib = calib_batches(32)
+    eval_toks = calib_batches(16, seed=4321)
+    stats = calibrate(params, LM_CFG, calib)
+
+    results: dict = {}
+    for bits in ["mxint4", "mxint3"]:
+        for rank in [2, 4, 8, 16]:
+            for method in ["qlora", "zeroquant_v2", "lqer", "qera_approx",
+                           "qera_exact"]:
+                qp = ptq(params, LM_CFG, method, rank, bits, stats=stats)
+                err = model_output_error(params, qp, LM_CFG, eval_toks)
+                results[(bits, rank, method)] = err
+        for iters in [1, 2, 3, 5]:
+            qp = ptq(params, LM_CFG, "loftq", 8, bits, stats=stats,
+                     loftq_iters=iters)
+            err = model_output_error(params, qp, LM_CFG, eval_toks)
+            results[(bits, f"loftq_iter{iters}", "loftq")] = err
+
+    # -- claim checks ---------------------------------------------------------
+    checks = {}
+    for bits in ["mxint4", "mxint3"]:
+        ranks = [2, 4, 8, 16]
+        qera = [results[(bits, r, "qera_exact")] for r in ranks]
+        checks[f"{bits}/qera_monotone_in_rank"] = all(
+            qera[i + 1] <= qera[i] * 1.001 for i in range(len(qera) - 1))
+        for r in ranks:
+            best = min(results[(bits, r, m)] for m in
+                       ["qlora", "zeroquant_v2", "lqer", "qera_approx"])
+            checks[f"{bits}/r{r}/qera_exact_lowest"] = \
+                results[(bits, r, "qera_exact")] <= best * 1.001
+
+    if csv_rows is not None:
+        for (bits, rank, method), err in sorted(results.items(),
+                                                key=lambda kv: str(kv[0])):
+            csv_rows.append(
+                f"fig1,{bits},{rank},{method},{err:.6f}")
+        for name, ok in checks.items():
+            csv_rows.append(f"fig1_check,{name},,{'PASS' if ok else 'FAIL'},")
+    return {"results": results, "checks": checks}
+
+
+if __name__ == "__main__":
+    rows: list = []
+    out = run(rows)
+    print("\n".join(rows))

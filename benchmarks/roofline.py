@@ -1,0 +1,102 @@
+"""§Roofline report: reads the dry-run JSON artifacts and prints the
+per-(arch x shape x mesh) table — the three terms, the dominant bottleneck,
+MODEL_FLOPS/HLO ratio, and memory fit."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+HBM_PER_CHIP = 16e9   # v5e
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    cells = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(f.read_text())
+        if mesh and d["mesh"] != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def run(csv_rows: list | None = None) -> dict:
+    cells = load_cells()
+    if not cells:
+        if csv_rows is not None:
+            csv_rows.append("roofline,no-dryrun-artifacts-yet,,")
+        return {}
+    out = {}
+    for d in cells:
+        key = f"{d['arch']}|{d['shape']['name']}|{d['mesh']}"
+        mem = d["full"]["memory"]
+        hbm = (mem["argument_bytes"] + mem["temp_bytes"]
+               + mem["output_bytes"] - mem["alias_bytes"]) / 1e9
+        row = {
+            "fits_16g": hbm <= 16.0,
+            "hbm_gb": round(hbm, 2),
+        }
+        if "roofline" in d:
+            r = d["roofline"]
+            dom = r["bottleneck"]
+            row.update({
+                "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"], "bottleneck": dom,
+                "roofline_fraction": (r["compute_s"] /
+                                      max(r[dom], 1e-12)),
+                "model_flops_ratio": d.get("model_flops_ratio"),
+            })
+        out[key] = row
+        if csv_rows is not None:
+            if "roofline" in d:
+                csv_rows.append(
+                    f"roofline,{key},{row['compute_s']:.3f}/"
+                    f"{row['memory_s']:.3f}/{row['collective_s']:.3f},"
+                    f"bottleneck={row['bottleneck']};frac="
+                    f"{row['roofline_fraction']:.3f};hbm={row['hbm_gb']}GB")
+            else:
+                csv_rows.append(f"roofline,{key},memory-only,"
+                                f"hbm={row['hbm_gb']}GB")
+    return out
+
+
+def markdown_table() -> str:
+    """§Roofline markdown for EXPERIMENTS.md."""
+    cells = load_cells()
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "bottleneck | frac | 6ND/HLO | HBM GB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in cells:
+        mem = d["full"]["memory"]
+        hbm = (mem["argument_bytes"] + mem["temp_bytes"]
+               + mem["output_bytes"] - mem["alias_bytes"]) / 1e9
+        fits = "✅" if hbm <= 16 else f"❌"
+        if "roofline" in d:
+            r = d["roofline"]
+            dom = r["bottleneck"]
+            frac = r["compute_s"] / max(r[dom], 1e-12)
+            ratio = d.get("model_flops_ratio") or 0
+            lines.append(
+                f"| {d['arch']} | {d['shape']['name']} | {d['mesh']} "
+                f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                f"| {r['collective_s']:.3f} | {dom[:-2]} | {frac:.3f} "
+                f"| {ratio:.3f} | {hbm:.1f} | {fits} |")
+        else:
+            lines.append(
+                f"| {d['arch']} | {d['shape']['name']} | {d['mesh']} "
+                f"| — | — | — | (memory-only pass) | — | — "
+                f"| {hbm:.1f} | {fits} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--md" in sys.argv:
+        print(markdown_table())
+    else:
+        rows: list = []
+        run(rows)
+        print("\n".join(rows))

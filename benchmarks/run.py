@@ -1,0 +1,53 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver — one module per paper table/figure:
+
+  fig1_output_error   Fig. 1: output error vs rank & LoftQ iterations
+  fig3_calib_size     Fig. 3: calibration-size monotonicity (QERA vs LQER)
+  table1_qpeft        Tab. 1/2: QPEFT fine-tuning across methods/bits
+  table3_ptq          Tab. 3/4: PTQ quality across methods/bits
+  table8_runtime      Tab. 7/8: init runtime exact vs approx (+sqrtm kernels)
+  kernel_bench        Pallas kernels vs refs + HBM accounting
+  roofline            §Roofline from the dry-run artifacts
+
+Run all:      PYTHONPATH=src python -m benchmarks.run
+Run one:      PYTHONPATH=src python -m benchmarks.run --only table3_ptq
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ["fig1_output_error", "fig3_calib_size", "table1_qpeft",
+           "table3_ptq", "table8_runtime", "kernel_bench", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=BENCHES)
+    args = ap.parse_args()
+    todo = [args.only] if args.only else BENCHES
+
+    rows: list[str] = ["name,us_per_call,derived"]
+    failed = []
+    for name in todo:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run(rows)
+            print(f"# {name}: done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            print(f"# {name}: FAILED\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    print("\n".join(rows))
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,162 @@
+"""Tables 1 & 2 proxy — QPEFT fine-tuning quality across init methods/bits.
+
+Two settings, mirroring the paper:
+  (a) LM continued-pretraining (SlimPajama proxy): quantize the pretrained
+      bench LM, init adapters with {QLoRA, LoftQ, QERA-approx}, fine-tune
+      adapters on fresh corpus, report held-out CE (Δppl analog).
+  (b) encoder classification (GLUE proxy): fp32-pretrain an encoder on task
+      A, quantize, adapt to task B.
+
+Paper claims: QERA init ⇒ better final quality than LoftQ > QLoRA, with the
+gap growing at lower bits; also lower INITIAL loss (better starting point).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    ENC_CFG,
+    LM_CFG,
+    LM_DATA,
+    calib_batches,
+    calibrate,
+    eval_ce,
+    pretrained_lm,
+    ptq,
+)
+from repro.core.qpeft import qpeft_finetune
+from repro.data.tokenstream import make_batch, synth_tokens
+from repro.models import forward, init_params
+from repro.models.transformer import classification_loss, lm_loss
+from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+BITS = {"mxint4": 8, "mxint3": 8, "mxint2": 16}   # bits -> adapter rank
+# qera_exact included: the paper itself uses QERA-exact for the 2-bit GLUE
+# row (Table 1) and recommends approx for >=3-bit QPEFT (Appendix A.8).
+METHODS = ["qlora", "loftq", "qera_approx", "qera_exact"]
+FT_STEPS = 80
+
+
+def _lm_batches(steps: int, seed: int = 5150):
+    dc = dataclasses.replace(LM_DATA, seed=seed)
+    for s in range(steps):
+        yield {k: jnp.asarray(v) for k, v in make_batch(dc, s).items()}
+
+
+def run_lm(csv_rows: list | None = None) -> dict:
+    params = pretrained_lm()
+    stats = calibrate(params, LM_CFG, calib_batches(32))
+    base_ce = eval_ce(params, LM_CFG)
+    results = {("fp32", "-"): base_ce}
+    opt_cfg = OptimizerConfig(peak_lr=1e-3, schedule="cosine", warmup_steps=8,
+                              total_steps=FT_STEPS, weight_decay=0.0)
+
+    for quant, rank in BITS.items():
+        for method in METHODS:
+            qp = ptq(params, LM_CFG, method, rank, quant, stats=stats)
+            init_ce = eval_ce(qp, LM_CFG)
+            tuned, losses = qpeft_finetune(
+                qp, lambda p, b: lm_loss(p, b, LM_CFG),
+                _lm_batches(FT_STEPS), opt_cfg)
+            final_ce = eval_ce(tuned, LM_CFG)
+            results[(quant, method)] = final_ce
+            results[(quant, method, "init")] = init_ce
+            if csv_rows is not None:
+                csv_rows.append(
+                    f"table2_lm,{quant},{method},init_ce={init_ce:.4f},"
+                    f"final_ce={final_ce:.4f}")
+
+    checks = {}
+    for quant in BITS:
+        # QERA always beats no-reconstruction (QLoRA); at 2-bit the exact
+        # solution must beat everything (the paper's aggressive-quant claim;
+        # at CPU bench scale activations are only mildly anisotropic, so
+        # LoftQ-5iter can match approx — the paper sees the same at 4-bit).
+        checks[f"{quant}/qera_beats_qlora_init"] = (
+            results[(quant, "qera_approx", "init")]
+            <= results[(quant, "qlora", "init")] * 1.001)
+    checks["mxint2/qera_exact_init_best"] = (
+        results[("mxint2", "qera_exact", "init")]
+        <= min(results[("mxint2", m, "init")]
+               for m in ["qlora", "loftq", "qera_approx"]) * 1.005)
+    if csv_rows is not None:
+        csv_rows.append(f"table2_lm,fp32,-,final_ce={base_ce:.4f},")
+        for name, ok in checks.items():
+            csv_rows.append(f"table2_check,{name},,{'PASS' if ok else 'FAIL'},")
+    return {"results": results, "checks": checks}
+
+
+# ---------------------------------------------------------------------------
+# encoder classification (GLUE proxy)
+# ---------------------------------------------------------------------------
+
+def _cls_batch(step: int, *, rule: str, batch: int = 32, seq: int = 32,
+               seed: int = 11):
+    dc = dataclasses.replace(LM_DATA, seq_len=seq - 1, global_batch=batch,
+                             seed=seed + (0 if rule == "a" else 5000))
+    toks = synth_tokens(dc, step)[:, :seq]
+    if rule == "a":      # majority of tokens in the lower half of the vocab
+        labels = (np.mean(toks < dc.vocab_size // 2, axis=1) > 0.5)
+    else:                # prevalence of tokens divisible by 3 (> 1/3 base)
+        labels = (np.mean(toks % 3 == 0, axis=1) > 1.0 / 3.0)
+    return {"tokens": jnp.asarray(toks),
+            "labels": jnp.asarray(labels.astype(np.int32))}
+
+
+def _cls_acc(params, step0: int = 900, rule: str = "b", batches: int = 4):
+    accs = []
+    for s in range(batches):
+        b = _cls_batch(step0 + s, rule=rule)
+        logits, _, _ = forward(params, b, ENC_CFG)
+        accs.append(float(jnp.mean(
+            (jnp.argmax(logits, -1) == b["labels"]).astype(jnp.float32))))
+    return float(np.mean(accs))
+
+
+def run_encoder(csv_rows: list | None = None) -> dict:
+    # "pretrain" the encoder fp32 on task A
+    params = init_params(ENC_CFG, jax.random.PRNGKey(0))
+    opt = OptimizerConfig(peak_lr=2e-3, schedule="cosine", warmup_steps=10,
+                          total_steps=150)
+    step_fn = jax.jit(make_train_step(
+        ENC_CFG, opt, loss_fn=classification_loss), donate_argnums=(0, 1))
+    state = init_opt_state(params)
+    for s in range(150):
+        params, state, _ = step_fn(params, state, _cls_batch(s, rule="a"))
+
+    # calibration on task-A-style inputs (the paper: pretraining-domain calib)
+    from benchmarks.common import calibrate as _cal
+    calib_toks = _cls_batch(500, rule="a", batch=32)["tokens"]
+    stats = _cal(params, ENC_CFG, calib_toks)
+
+    opt_ft = OptimizerConfig(peak_lr=2e-3, schedule="cosine", warmup_steps=8,
+                             total_steps=FT_STEPS, weight_decay=0.0)
+    results = {}
+    for quant, rank in [("mxint3", 8), ("mxint2", 16)]:
+        for method in METHODS:
+            qp = ptq(params, ENC_CFG, method, rank, quant, stats=stats)
+            tuned, _ = qpeft_finetune(
+                qp, lambda p, b: classification_loss(p, b, ENC_CFG),
+                (_cls_batch(s, rule="b") for s in range(FT_STEPS)), opt_ft)
+            acc = _cls_acc(tuned, rule="b")
+            results[(quant, method)] = acc
+            if csv_rows is not None:
+                csv_rows.append(f"table1_enc,{quant},{method},acc={acc:.4f}")
+    return {"results": results}
+
+
+def run(csv_rows: list | None = None) -> dict:
+    lm = run_lm(csv_rows)
+    enc = run_encoder(csv_rows)
+    return {"lm": lm, "encoder": enc}
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("\n".join(rows))

@@ -1,0 +1,61 @@
+"""Tables 3 & 4 proxy — PTQ quality (held-out CE = WikiText2-ppl analog).
+
+Methods: w-only, ZeroQuant-V2, LQER, QERA-approx, QERA-exact at 4/3/2-bit
+MXINT.  Paper claims: QERA-approx ≥ LQER ≥ ZeroQuant ≥ w-only; QERA-exact
+best overall; advantage pronounced at 3 bits and below; 4-bit QERA-exact is
+near-lossless.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    LM_CFG,
+    calib_batches,
+    calibrate,
+    eval_ce,
+    pretrained_lm,
+    ptq,
+)
+
+SETUPS = [("mxint4", 8), ("mxint3", 8), ("mxint2", 16)]
+METHODS = ["w_only", "zeroquant_v2", "lqer", "qera_approx", "qera_exact"]
+
+
+def run(csv_rows: list | None = None) -> dict:
+    params = pretrained_lm()
+    stats = calibrate(params, LM_CFG, calib_batches(64))
+    base = eval_ce(params, LM_CFG)
+    results = {("fp32", "-"): base}
+
+    for quant, rank in SETUPS:
+        for method in METHODS:
+            if method == "w_only":
+                qp = ptq(params, LM_CFG, "qlora", 1, quant)  # B=0 -> pure W̃
+            else:
+                qp = ptq(params, LM_CFG, method, rank, quant, stats=stats)
+            ce = eval_ce(qp, LM_CFG)
+            results[(quant, method)] = ce
+            if csv_rows is not None:
+                csv_rows.append(f"table3,{quant},{method},ce={ce:.4f},"
+                                f"delta={ce - base:+.4f}")
+
+    checks = {}
+    for quant, _ in SETUPS:
+        qe = results[(quant, "qera_exact")]
+        checks[f"{quant}/qera_exact_best"] = qe <= min(
+            results[(quant, m)] for m in METHODS[:-1]) * 1.005
+        checks[f"{quant}/recon_beats_w_only"] = (
+            results[(quant, "qera_approx")] <= results[(quant, "w_only")])
+    checks["mxint4/near_lossless"] = (
+        results[("mxint4", "qera_exact")] - base < 0.05)
+    if csv_rows is not None:
+        csv_rows.append(f"table3,fp32,-,ce={base:.4f},delta=+0.0000")
+        for name, ok in checks.items():
+            csv_rows.append(f"table3_check,{name},,{'PASS' if ok else 'FAIL'},")
+    return {"results": results, "checks": checks}
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("\n".join(rows))

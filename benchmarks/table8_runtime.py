@@ -1,0 +1,61 @@
+"""Tables 7/8 — quantization (init) runtime: QERA-exact vs QERA-approx.
+
+Paper: exact pays for the autocorrelation sqrt + scaled SVD; approx is
+2-3x cheaper end-to-end and recommended for QPEFT.  We time the full
+model-quantization pass per method/rank on CPU, plus the sqrtm kernel
+choice (eigh vs Newton-Schulz — the TPU-native alternative)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (
+    LM_CFG,
+    calib_batches,
+    calibrate,
+    pretrained_lm,
+    ptq,
+    timed,
+)
+from repro.core.sqrtm import psd_sqrt_eigh, psd_sqrt_newton_schulz
+
+
+def run(csv_rows: list | None = None) -> dict:
+    params = pretrained_lm()
+    stats = calibrate(params, LM_CFG, calib_batches(32))
+    results = {}
+    for method, rank in [("qera_approx", 8), ("qera_approx", 16),
+                         ("qera_exact", 8), ("qera_exact", 16),
+                         ("zeroquant_v2", 8), ("loftq", 8)]:
+        ptq(params, LM_CFG, method, rank, "mxint4", stats=stats)  # warm JIT
+        _, dt = timed(ptq, params, LM_CFG, method, rank, "mxint4",
+                      stats=stats)
+        results[(method, rank)] = dt
+        if csv_rows is not None:
+            csv_rows.append(f"table8,{method},r{rank},{dt * 1e6:.0f}us")
+
+    # sqrtm microbench: eigh vs Newton-Schulz at growing sizes
+    for n in [96, 256, 512]:
+        x = jax.random.normal(jax.random.PRNGKey(0), (2048, n))
+        r = (x.T @ x) / 2048
+        for name, fn in [("eigh", lambda: psd_sqrt_eigh(r)),
+                         ("newton_schulz",
+                          lambda: psd_sqrt_newton_schulz(r, num_iters=30))]:
+            fn()  # compile
+            t0 = time.time()
+            for _ in range(3):
+                jax.block_until_ready(fn()[0])
+            dt = (time.time() - t0) / 3
+            results[(f"sqrtm_{name}", n)] = dt
+            if csv_rows is not None:
+                csv_rows.append(f"table8_sqrtm,{name},n{n},{dt * 1e6:.0f}us")
+    return {"results": results}
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("\n".join(rows))

@@ -1,0 +1,7 @@
+"""Repo-root conftest: make `benchmarks` (and repo-root modules) importable
+from tests regardless of PYTHONPATH.  Never set XLA flags here — smoke tests
+and benches must see 1 device (dry-run tests spawn their own subprocesses)."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -1,0 +1,18 @@
+"""End-to-end PTQ: pretrain a small LM -> calibrate -> quantize every linear
+with QERA -> compare held-out CE across methods (Table 3 in miniature).
+
+    PYTHONPATH=src python examples/ptq_pipeline.py
+"""
+import sys
+sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
+
+from benchmarks.common import (
+    LM_CFG, calib_batches, calibrate, eval_ce, pretrained_lm, ptq,
+)
+
+params = pretrained_lm(steps=300)
+stats = calibrate(params, LM_CFG, calib_batches(64))
+print(f"fp32 held-out CE: {eval_ce(params, LM_CFG):.4f}")
+for method in ["zeroquant_v2", "lqer", "qera_approx", "qera_exact"]:
+    qp = ptq(params, LM_CFG, method, rank=16, quantizer="mxint2", stats=stats)
+    print(f"mxint2 + {method:13s} rank 16: CE {eval_ce(qp, LM_CFG):.4f}")

@@ -1,0 +1,39 @@
+"""QPEFT: quantize a pretrained LM to 2-bit, initialize the adapters with
+QLoRA / LoftQ / QERA-approx, fine-tune ONLY the adapters, watch convergence
+(Figure 2 / Table 2 in miniature).
+
+    PYTHONPATH=src python examples/qpeft_finetune.py
+"""
+import dataclasses
+import sys
+sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
+
+import jax.numpy as jnp
+
+from benchmarks.common import (
+    LM_CFG, LM_DATA, calib_batches, calibrate, eval_ce, pretrained_lm, ptq,
+)
+from repro.core.qpeft import qpeft_finetune
+from repro.data.tokenstream import make_batch
+from repro.models.transformer import lm_loss
+from repro.train import OptimizerConfig
+
+params = pretrained_lm(steps=300)
+stats = calibrate(params, LM_CFG, calib_batches(32))
+opt = OptimizerConfig(peak_lr=1e-3, schedule="cosine", warmup_steps=8,
+                      total_steps=60, weight_decay=0.0)
+
+def batches(n):
+    dc = dataclasses.replace(LM_DATA, seed=777)
+    for s in range(n):
+        yield {k: jnp.asarray(v) for k, v in make_batch(dc, s).items()}
+
+print(f"fp32 CE {eval_ce(params, LM_CFG):.4f}")
+for method in ["qlora", "loftq", "qera_approx"]:
+    qp = ptq(params, LM_CFG, method, rank=16, quantizer="mxint2", stats=stats)
+    ce0 = eval_ce(qp, LM_CFG)
+    tuned, losses = qpeft_finetune(
+        qp, lambda p, b: lm_loss(p, b, LM_CFG), batches(60), opt)
+    print(f"{method:12s} init CE {ce0:.4f} -> tuned CE "
+          f"{eval_ce(tuned, LM_CFG):.4f}  (train loss "
+          f"{losses[0]:.3f}->{losses[-1]:.3f})")

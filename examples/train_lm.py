@@ -1,0 +1,15 @@
+"""End-to-end training driver example: train a ~small LM for a few hundred
+steps on the synthetic corpus with checkpoints + resume (thin wrapper around
+launch/train.py; use --preset 100m for the 100M-param config).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import sys
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "minicpm-2b", "--reduced", "--steps", "200",
+                     "--batch", "16", "--seq", "64",
+                     "--ckpt-dir", "experiments/train_lm_ckpt"]
+    main()

@@ -1,0 +1,9 @@
+from repro.configs.registry import (
+    ASSIGNED_ARCHS,
+    SHAPES,
+    ShapeSpec,
+    arch_names,
+    dryrun_cells,
+    get_arch,
+    shapes_for,
+)

@@ -1,0 +1,10 @@
+"""llama-2-7b — the paper's central PTQ/QPEFT subject.
+32L d_model=4096 32H MHA d_ff=11008 vocab=32000."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-2-7b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    d_ff=11008, vocab_size=32000, head_dim=128,
+    max_seq_len=4096, dtype="bfloat16",
+)

@@ -1,0 +1,12 @@
+"""llama4-maverick-400b-a17b — MoE, 128 experts top-1, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]  48L d_model=5120 40H
+(GQA kv=8) d_ff=8192 vocab=202048."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=8192, vocab_size=202048, head_dim=128,
+    num_experts=128, moe_top_k=1, capacity_factor=1.25,
+    max_seq_len=32768, dtype="bfloat16",
+)

@@ -1,0 +1,13 @@
+"""llama-3.2-vision-11b — cross-attn image layers every 5th layer (vision
+tower is a stub: input_specs provides precomputed patch embeddings).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]  40L d_model=4096 32H
+(GQA kv=8) d_ff=14336 vocab=128256."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=128256, head_dim=128,
+    cross_attn_every=5, vision_seq=1601,
+    max_seq_len=32768, dtype="bfloat16",
+)

@@ -1,0 +1,14 @@
+"""minicpm-2b — llama-like dense with WSD schedule + mup-style scaling.
+[arXiv:2404.06395; hf]  40L d_model=2304 36H (MHA kv=36) d_ff=5760
+vocab=122753.  embed_scale=12, residual scaled 1.4/sqrt(L), tied embeddings —
+the MiniCPM training recipe knobs (the WSD schedule lives in train/schedules)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b", family="dense",
+    num_layers=40, d_model=2304, num_heads=36, num_kv_heads=36,
+    d_ff=5760, vocab_size=122753, head_dim=64,
+    tie_embeddings=True, embed_scale=12.0, residual_scale=1.4 / 40 ** 0.5,
+    vocab_pad_multiple=256,   # 122753 -> 122880 (sharding divisibility)
+    max_seq_len=32768, dtype="bfloat16",
+)

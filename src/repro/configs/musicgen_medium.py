@@ -1,0 +1,12 @@
+"""musicgen-medium — decoder-only over EnCodec tokens (backbone only; the
+EnCodec frontend is a stub: input_specs provides 4 codebook id streams).
+[arXiv:2306.05284; hf]  48L d_model=1536 24H (kv=24) d_ff=6144 vocab=2048."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    num_layers=48, d_model=1536, num_heads=24, num_kv_heads=24,
+    d_ff=6144, vocab_size=2048, head_dim=64,
+    num_codebooks=4,
+    max_seq_len=32768, dtype="bfloat16",
+)

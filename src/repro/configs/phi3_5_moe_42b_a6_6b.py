@@ -1,0 +1,12 @@
+"""phi3.5-moe-42b-a6.6b — 16 experts top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]  32L d_model=4096 32H (GQA kv=8)
+d_ff=6400 vocab=32064."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=6400, vocab_size=32064, head_dim=128,
+    num_experts=16, moe_top_k=2, capacity_factor=1.25,
+    max_seq_len=32768, dtype="bfloat16",
+)

@@ -1,0 +1,11 @@
+"""phi3-mini-3.8b — RoPE SwiGLU, full MHA.
+[arXiv:2404.14219; unverified]  32L d_model=3072 32H (kv=32) d_ff=8192
+vocab=32064."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b", family="dense",
+    num_layers=32, d_model=3072, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32064, head_dim=96,
+    max_seq_len=32768, dtype="bfloat16",
+)

@@ -1,0 +1,93 @@
+"""Architecture + input-shape registry.
+
+The 10 assigned architectures each pair with the LM shape set below; shape
+applicability rules (assignment spec):
+
+* ``decode_*`` / ``long_*`` lower ``serve_step`` (1 new token against a
+  seq_len cache), not ``train_step``;
+* ``long_500k`` requires sub-quadratic attention — run only for
+  SSM/hybrid/linear-attention archs (zamba2, rwkv6), skipped for pure
+  full-attention archs (recorded in DESIGN.md §4);
+* all archs are decoder-style, so no encoder-only decode skips apply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+_ARCH_MODULES = {
+    "zamba2-7b": "zamba2_7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b_a6_6b",
+    "yi-34b": "yi_34b",
+    "minicpm-2b": "minicpm_2b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "musicgen-medium": "musicgen_medium",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "rwkv6-7b": "rwkv6_7b",
+    # the paper's own models (benchmarks; not part of the 40-cell matrix)
+    "roberta-base": "roberta_base",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "llama-2-7b": "llama2_7b",
+}
+
+ASSIGNED_ARCHS = tuple(n for n in _ARCH_MODULES
+                       if n not in ("roberta-base", "tinyllama-1.1b",
+                                    "llama-2-7b"))
+
+
+def arch_names(include_paper: bool = False) -> list[str]:
+    return list(_ARCH_MODULES) if include_paper else list(ASSIGNED_ARCHS)
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {list(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def shapes_for(name: str) -> list[ShapeSpec]:
+    """Shape set for an arch, applying the long_500k sub-quadratic rule."""
+    cfg = get_arch(name)
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.is_subquadratic:
+        out.append(SHAPES["long_500k"])
+    return out
+
+
+def dryrun_cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; skipped cells flagged when asked."""
+    cells = []
+    for arch in ASSIGNED_ARCHS:
+        run_shapes = {s.name for s in shapes_for(arch)}
+        for sname, spec in SHAPES.items():
+            if sname in run_shapes:
+                cells.append((arch, spec, True))
+            elif include_skipped:
+                cells.append((arch, spec, False))
+    return cells

@@ -1,0 +1,10 @@
+"""roberta-base — the paper's own QPEFT encoder (GLUE experiments).
+12L d_model=768 12H d_ff=3072 vocab=50265, LayerNorm+GELU, learned positions."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="roberta-base", family="encoder",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+    d_ff=3072, vocab_size=50265, head_dim=64,
+    max_seq_len=512, num_classes=2, dtype="float32",
+)

@@ -1,0 +1,11 @@
+"""rwkv6-7b "Finch" — attention-free, data-dependent decay linear RNN.
+[arXiv:2404.05892; hf]  32L d_model=4096 d_ff=14336 vocab=65536."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="rwkv",
+    num_layers=32, d_model=4096, num_heads=64, num_kv_heads=64,
+    d_ff=14336, vocab_size=65536, head_dim=64,
+    rwkv_head_dim=64, rwkv_decay_lora=64, rwkv_chunk=16,
+    max_seq_len=524288, dtype="bfloat16",
+)

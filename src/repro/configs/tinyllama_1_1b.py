@@ -1,0 +1,10 @@
+"""tinyllama-1.1b — the paper's smallest PTQ subject (Table 3).
+22L d_model=2048 32H (GQA kv=4) d_ff=5632 vocab=32000."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b", family="dense",
+    num_layers=22, d_model=2048, num_heads=32, num_kv_heads=4,
+    d_ff=5632, vocab_size=32000, head_dim=64,
+    max_seq_len=2048, dtype="bfloat16",
+)

@@ -1,0 +1,14 @@
+"""zamba2-7b — hybrid Mamba2 + shared attention blocks.
+[arXiv:2411.15242; unverified]  81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64.  Shared transformer block applied every 6 layers
+(single weight copy — the zamba2 signature)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid_mamba",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+    d_ff=14336, vocab_size=32000, head_dim=112,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_conv_width=4,
+    ssm_chunk=256, attn_every=6,
+    max_seq_len=524288, dtype="bfloat16",
+)

@@ -1,0 +1,34 @@
+"""QERA core — the paper's primary contribution.
+
+Closed-form quantization error reconstruction (Theorems 1 & 2), streaming
+activation calibration, PSD matrix square roots, truncated/randomized SVD,
+and the model-level PTQ/QPEFT entry points.
+"""
+
+from repro.core.calibration import (
+    LayerStats,
+    StreamingStats,
+    batch_stats,
+    stats_from_samples,
+)
+from repro.core.solvers import (
+    METHODS,
+    empirical_output_error,
+    expected_output_error,
+    solve,
+    solve_loftq,
+    solve_lqer,
+    solve_qera_approx,
+    solve_qera_exact,
+    solve_qlora,
+    solve_zeroquant_v2,
+)
+from repro.core.sqrtm import psd_sqrt_eigh, psd_sqrt_newton_schulz
+from repro.core.svd import randomized_svd, svd_lowrank, truncated_svd
+from repro.core.api import (
+    PTQConfig,
+    dequantized_weight,
+    is_quantized_linear,
+    quantize_linear,
+    quantize_params,
+)

@@ -1,0 +1,158 @@
+"""Model-level QERA API: calibrate -> quantize every linear -> reconstructed
+params tree.
+
+Convention: a quantized linear replaces its 2-D weight leaf ``w`` with a dict
+``{"w_tilde": W̃, "lora_a": A, "lora_b": B}``; ``models.quantized`` applies it
+as  y = x @ W̃ + (x @ A) @ B.  Embeddings, norms, routers, biases and any 1-D
+params are left in high precision (paper setup: weight-only PTQ of linears).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import LayerStats
+from repro.core.solvers import solve
+from repro.quant.formats import get_quantizer
+from repro.utils.trees import flatten_dict, unflatten_dict
+
+
+DEFAULT_SKIP = (r"embed", r"lm_head", r"router", r"norm", r"scale", r"bias",
+                r"conv", r"a_log", r"dt_bias", r"decay", r"token_shift",
+                r"pos_emb")
+
+
+@dataclasses.dataclass(frozen=True)
+class PTQConfig:
+    method: str = "qera_approx"       # one of core.solvers.METHODS
+    rank: int = 32
+    quantizer: str = "mxint4"
+    svd_method: str = "exact"         # "exact" | "randomized"
+    sqrt_method: str = "eigh"         # "eigh" | "newton_schulz"
+    loftq_iters: int = 5
+    skip_patterns: tuple[str, ...] = DEFAULT_SKIP
+    lowrank_dtype: Any = jnp.float32
+
+    def skips(self, path: str) -> bool:
+        return any(re.search(p, path) for p in self.skip_patterns)
+
+
+def is_quantized_linear(p: Any) -> bool:
+    return isinstance(p, Mapping) and "w_tilde" in p
+
+
+def quantize_linear(w: jax.Array, cfg: PTQConfig,
+                    stats: LayerStats | None = None,
+                    key: jax.Array | None = None) -> dict[str, jax.Array]:
+    """Quantize one (m, n) weight and solve for the rank-k reconstruction."""
+    q = get_quantizer(cfg.quantizer)
+    w32 = w.astype(jnp.float32)
+    w_tilde = q(w32)
+    w_tilde, a, b = solve(
+        cfg.method, w32, w_tilde, cfg.rank, stats=stats, quant_fn=q.fake_quant,
+        key=key, svd_method=cfg.svd_method, sqrt_method=cfg.sqrt_method,
+        loftq_iters=cfg.loftq_iters)
+    return {
+        "w_tilde": w_tilde.astype(w.dtype),
+        "lora_a": a.astype(cfg.lowrank_dtype),
+        "lora_b": b.astype(cfg.lowrank_dtype),
+    }
+
+
+def quantize_params(params: Mapping[str, Any], cfg: PTQConfig,
+                    stats_by_path: Mapping[str, LayerStats] | None = None,
+                    key: jax.Array | None = None,
+                    stats_key_fn: Callable[[str], str] | None = None,
+                    verbose: bool = False) -> dict[str, Any]:
+    """Quantize every eligible 2-D weight in a params tree.
+
+    ``stats_by_path`` maps a weight's flattened path (or its stats key) to the
+    calibration LayerStats of that layer's *input*.  For stacked (scanned)
+    layers — leaves with ndim == 3, (num_layers, m, n) — per-layer stats keys
+    ``{path}:{i}`` are used when present, else a shared ``{path}`` entry.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    stats_by_path = stats_by_path or {}
+    stats_key_fn = stats_key_fn or (lambda p: p)
+
+    flat = flatten_dict(dict(params))
+    out: dict[str, Any] = {}
+    for path, leaf in flat.items():
+        if not hasattr(leaf, "ndim") or cfg.skips(path):
+            out[path] = leaf
+            continue
+        if leaf.ndim == 2:
+            st = stats_by_path.get(stats_key_fn(path))
+            key, sub = jax.random.split(key)
+            out[path] = quantize_linear(leaf, cfg, stats=st, key=sub)
+            if verbose:
+                print(f"quantized {path} {leaf.shape} [{cfg.method}/{cfg.quantizer}]")
+        elif leaf.ndim == 3 and not cfg.skips(path):
+            # stacked layers: quantize each slice with its own stats
+            slices = []
+            for i in range(leaf.shape[0]):
+                st = (stats_by_path.get(f"{stats_key_fn(path)}:{i}")
+                      or stats_by_path.get(stats_key_fn(path)))
+                key, sub = jax.random.split(key)
+                slices.append(quantize_linear(leaf[i], cfg, stats=st, key=sub))
+            out[path] = {
+                k: jnp.stack([s[k] for s in slices]) for k in slices[0]
+            }
+        else:
+            out[path] = leaf
+    return unflatten_dict(out)
+
+
+def dequantized_weight(qlin: Mapping[str, jax.Array]) -> jax.Array:
+    """W̃ + A B — the effective full weight of a quantized linear."""
+    return qlin["w_tilde"] + qlin["lora_a"] @ qlin["lora_b"]
+
+
+def pack_for_serving(qparams: Mapping[str, Any], cfg: PTQConfig) -> dict:
+    """Convert quantized linears to the PACKED layout the Pallas kernel
+    consumes: {"mant" int8, "exp" int8, "bits", "block_size", lora_a/b}.
+
+    W̃ stays packed in HBM (the memory-roofline win — ~3.6x fewer weight
+    bytes at 4-bit); models.layers.linear dispatches to the fused kernel
+    when ``cfg.use_pallas`` is set.  Only MXINT formats pack."""
+    from repro.quant.mxint import MXINT_CONFIGS, mxint_quantize
+
+    if cfg.quantizer not in MXINT_CONFIGS:
+        raise ValueError(f"packing supports MXINT formats, got {cfg.quantizer}")
+    spec = MXINT_CONFIGS[cfg.quantizer]
+
+    def pack(leaf):
+        if not (isinstance(leaf, Mapping) and "w_tilde" in leaf):
+            return leaf
+        w = leaf["w_tilde"]
+        if w.ndim not in (2, 3) or w.shape[-2] % spec.block_size:
+            return leaf                     # expert/odd leaves stay fake-quant
+        mant, exp = mxint_quantize(w, spec.bits, spec.block_size)
+        return {
+            "mant": mant.reshape(w.shape), "exp": exp,
+            "bits": jnp.asarray(spec.bits, jnp.int32),
+            "block_size": jnp.asarray(spec.block_size, jnp.int32),
+            "lora_a": leaf["lora_a"], "lora_b": leaf["lora_b"],
+        }
+
+    flat = flatten_dict(dict(qparams))
+    grouped: dict[str, Any] = {}
+    done = set()
+    for path in list(flat):
+        parent = path.rsplit("/", 1)[0]
+        if parent in done or not path.endswith(("w_tilde", "lora_a", "lora_b")):
+            if not path.endswith(("w_tilde", "lora_a", "lora_b")):
+                grouped[path] = flat[path]
+            continue
+        leaf = {k: flat[f"{parent}/{k}"] for k in ("w_tilde", "lora_a", "lora_b")}
+        packed = pack(leaf)
+        for k, v in packed.items():
+            grouped[f"{parent}/{k}"] = v
+        done.add(parent)
+    return unflatten_dict(grouped)

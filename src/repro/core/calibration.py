@@ -1,0 +1,108 @@
+"""Streaming activation calibration for QERA.
+
+Per linear layer we accumulate, over a calibration stream of row-vector
+inputs x ∈ R^m (tokens × features):
+
+* ``sum_xx``  = Σ xᵀx          -> R_XX  = E[xᵀx]        (QERA-exact)
+* ``sum_x2``  = Σ x∘x          -> E[x²] -> S = diag(√E[x²]) (QERA-approx)
+* ``sum_abs`` = Σ |x|          -> E[|x|]                 (LQER heuristic)
+
+Following the paper's numerics recipe (Appendix A.7): outer products are
+computed in FP32 *in-graph*, cross-batch accumulation happens in FP64 on the
+host.  Batch-level stats are jittable/pjit-able (layer-parallel calibration —
+the paper notes per-layer independence allows full parallelization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("with_outer",))
+def batch_stats(x: jax.Array, with_outer: bool = True):
+    """Stats of one batch. x: (..., m) — leading dims are flattened as tokens."""
+    x = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    count = jnp.asarray(x.shape[0], jnp.float32)
+    sum_x2 = jnp.sum(x * x, axis=0)
+    sum_abs = jnp.sum(jnp.abs(x), axis=0)
+    sum_xx = x.T @ x if with_outer else None
+    return dict(count=count, sum_x2=sum_x2, sum_abs=sum_abs, sum_xx=sum_xx)
+
+
+@dataclasses.dataclass
+class StreamingStats:
+    """Host-side FP64 accumulator (one per layer input)."""
+
+    dim: int
+    with_outer: bool = True
+    count: float = 0.0
+    sum_x2: np.ndarray | None = None
+    sum_abs: np.ndarray | None = None
+    sum_xx: np.ndarray | None = None
+
+    def __post_init__(self):
+        self.sum_x2 = np.zeros(self.dim, np.float64)
+        self.sum_abs = np.zeros(self.dim, np.float64)
+        self.sum_xx = np.zeros((self.dim, self.dim), np.float64) if self.with_outer else None
+
+    def update(self, x: jax.Array) -> None:
+        s = batch_stats(x, with_outer=self.with_outer)
+        self.count += float(s["count"])
+        self.sum_x2 += np.asarray(s["sum_x2"], np.float64)
+        self.sum_abs += np.asarray(s["sum_abs"], np.float64)
+        if self.with_outer:
+            self.sum_xx += np.asarray(s["sum_xx"], np.float64)
+
+    def merge(self, other: "StreamingStats") -> "StreamingStats":
+        assert self.dim == other.dim and self.with_outer == other.with_outer
+        self.count += other.count
+        self.sum_x2 += other.sum_x2
+        self.sum_abs += other.sum_abs
+        if self.with_outer:
+            self.sum_xx += other.sum_xx
+        return self
+
+    # -- finalized statistics ------------------------------------------------
+    @property
+    def mean_x2(self) -> np.ndarray:
+        return self.sum_x2 / max(self.count, 1.0)
+
+    @property
+    def mean_abs(self) -> np.ndarray:
+        return self.sum_abs / max(self.count, 1.0)
+
+    @property
+    def rxx(self) -> np.ndarray:
+        if self.sum_xx is None:
+            raise ValueError("outer-product accumulation disabled")
+        r = self.sum_xx / max(self.count, 1.0)
+        return 0.5 * (r + r.T)
+
+    def as_layer_stats(self) -> "LayerStats":
+        return LayerStats(
+            mean_x2=jnp.asarray(self.mean_x2, jnp.float32),
+            mean_abs=jnp.asarray(self.mean_abs, jnp.float32),
+            rxx=None if self.sum_xx is None else jnp.asarray(self.rxx, jnp.float32),
+            count=self.count,
+        )
+
+
+@dataclasses.dataclass
+class LayerStats:
+    """Finalized per-layer calibration statistics (device arrays)."""
+    mean_x2: jax.Array            # (m,)  E[x_i^2]
+    mean_abs: jax.Array           # (m,)  E[|x_i|]
+    rxx: jax.Array | None         # (m, m) E[x^T x] or None
+    count: float = 0.0
+
+
+def stats_from_samples(x: jax.Array, with_outer: bool = True) -> LayerStats:
+    """One-shot LayerStats from an in-memory sample matrix (tests/benches)."""
+    acc = StreamingStats(dim=x.shape[-1], with_outer=with_outer)
+    acc.update(x)
+    return acc.as_layer_stats()

@@ -1,0 +1,78 @@
+"""QPEFT: quantized parameter-efficient fine-tuning (the paper's §4.2 side).
+
+Pipeline: quantize_params() replaces every linear with
+{"w_tilde", "lora_a", "lora_b"}; here we freeze everything except the
+adapters (+ any extra patterns, e.g. a classifier head) and train only those
+— QLoRA/LoftQ/QERA differ ONLY in the (A, B) initialization, which is
+exactly the paper's experimental contrast.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Mapping
+
+import jax
+
+from repro.train.optimizer import (
+    OptimizerConfig,
+    adamw_update,
+    init_opt_state,
+    make_schedule,
+)
+from repro.utils.trees import flatten_dict, unflatten_dict
+
+TRAINABLE_DEFAULT = (r"lora_a$", r"lora_b$", r"classifier")
+
+
+def split_trainable(params: Mapping[str, Any],
+                    patterns: tuple[str, ...] = TRAINABLE_DEFAULT):
+    flat = flatten_dict(dict(params))
+    train = {k: v for k, v in flat.items()
+             if any(re.search(p, k) for p in patterns)}
+    frozen = {k: v for k, v in flat.items() if k not in train}
+    return train, frozen
+
+
+def merge_params(train: Mapping[str, Any], frozen: Mapping[str, Any]):
+    return unflatten_dict({**dict(frozen), **dict(train)})
+
+
+def make_qpeft_step(loss_fn: Callable, opt_cfg: OptimizerConfig,
+                    frozen: Mapping[str, Any]) -> Callable:
+    """loss_fn(full_params, batch) -> (loss, aux).  Returns
+    step(train_params, opt_state, batch) -> (train_params, opt_state, metrics)
+    updating ONLY the trainable subset."""
+    schedule = make_schedule(opt_cfg)
+
+    def step(train, opt_state, batch):
+        def wrapped(tr):
+            return loss_fn(merge_params(tr, frozen), batch)
+
+        (loss, aux), grads = jax.value_and_grad(wrapped, has_aux=True)(train)
+        train, opt_state, om = adamw_update(train, grads, opt_state, opt_cfg,
+                                            schedule)
+        return train, opt_state, {"loss": loss, "aux": aux, **om}
+
+    return step
+
+
+def qpeft_finetune(params_q: Mapping[str, Any], loss_fn: Callable,
+                   batches, opt_cfg: OptimizerConfig,
+                   patterns: tuple[str, ...] = TRAINABLE_DEFAULT,
+                   eval_fn: Callable | None = None,
+                   log_every: int = 0):
+    """Run adapter-only fine-tuning over an iterable of batches.
+
+    Returns (final_full_params, losses)."""
+    train, frozen = split_trainable(params_q, patterns)
+    step = jax.jit(make_qpeft_step(loss_fn, opt_cfg, frozen),
+                   donate_argnums=(0, 1))
+    opt_state = init_opt_state(train)
+    losses = []
+    for i, batch in enumerate(batches):
+        train, opt_state, m = step(train, opt_state, batch)
+        losses.append(float(m["loss"]))
+        if log_every and i % log_every == 0:
+            print(f"  qpeft step {i}: loss {losses[-1]:.4f}")
+    return merge_params(train, frozen), losses

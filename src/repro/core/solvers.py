@@ -1,0 +1,165 @@
+"""Closed-form and baseline solvers for the quantization-error-reconstruction
+problem  min  E_x || x(W̃ + A_k B_k) − xW ||².
+
+Conventions (paper §3.1): W ∈ R^{m×n} with *row-vector* inputs x ∈ R^m,
+A_k ∈ R^{m×k}, B_k ∈ R^{k×n}.  Every solver returns (A_k, B_k) except LoftQ,
+which also re-quantizes W and returns (W̃, A_k, B_k).
+
+Implemented methods
+  qera_exact     Theorem 1   C_k = (R^(1/2))^{-1} SVD_k(R^(1/2) (W−W̃))
+  qera_approx    Theorem 2   C_k = S^{-1} SVD_k(S (W−W̃)), S = diag(√E[x²])
+  lqer           Zhang'24    same form, S = diag(E[|x|])   (heuristic)
+  zeroquant_v2   Yao'23      S = I  (plain weight-error SVD)
+  loftq          Li'23       iterative q/SVD  (Algorithm 1)
+  qlora          Dettmers'23 A ~ N(0, σ), B = 0 (LoRA init; no reconstruction)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.svd import svd_lowrank
+from repro.core.sqrtm import psd_sqrt_eigh, psd_sqrt_newton_schulz
+
+
+# ----------------------------------------------------------------------------
+# Objective helpers
+# ----------------------------------------------------------------------------
+
+def expected_output_error(p: jax.Array, rxx: jax.Array) -> jax.Array:
+    """E_x ||xP||² = Tr(R_XX P Pᵀ)  (paper Eq. 15). p = W̃ + C_k − W."""
+    return jnp.trace(rxx @ (p @ p.T))
+
+
+def empirical_output_error(x: jax.Array, p: jax.Array) -> jax.Array:
+    """Sample-mean of ||xP||² over rows of x."""
+    e = x @ p
+    return jnp.mean(jnp.sum(e * e, axis=-1))
+
+
+# ----------------------------------------------------------------------------
+# Scaled-SVD core shared by qera_approx / lqer / zeroquant
+# ----------------------------------------------------------------------------
+
+def _scaled_svd_solver(err: jax.Array, s_diag: jax.Array, k: int,
+                       svd_method: str = "exact",
+                       key: jax.Array | None = None):
+    """A = S^{-1} U_k, B = Σ_k V_kᵀ for U Σ Vᵀ = SVD(S · err)."""
+    scaled = s_diag[:, None] * err
+    u, sv, vt = svd_lowrank(scaled, k, method=svd_method, key=key)
+    a = u / s_diag[:, None]
+    b = sv[:, None] * vt
+    return a, b
+
+
+def solve_zeroquant_v2(w: jax.Array, w_tilde: jax.Array, k: int, *,
+                       svd_method: str = "exact", key=None):
+    err = (w - w_tilde).astype(jnp.float32)
+    ones = jnp.ones(w.shape[0], jnp.float32)
+    return _scaled_svd_solver(err, ones, k, svd_method, key)
+
+
+def solve_lqer(w: jax.Array, w_tilde: jax.Array, k: int, mean_abs: jax.Array, *,
+               eps: float = 1e-6, svd_method: str = "exact", key=None):
+    err = (w - w_tilde).astype(jnp.float32)
+    s = jnp.maximum(mean_abs.astype(jnp.float32), eps)
+    return _scaled_svd_solver(err, s, k, svd_method, key)
+
+
+def solve_qera_approx(w: jax.Array, w_tilde: jax.Array, k: int,
+                      mean_x2: jax.Array, *, eps: float = 1e-12,
+                      svd_method: str = "exact", key=None):
+    err = (w - w_tilde).astype(jnp.float32)
+    s = jnp.sqrt(jnp.maximum(mean_x2.astype(jnp.float32), eps))
+    return _scaled_svd_solver(err, s, k, svd_method, key)
+
+
+def solve_qera_exact(w: jax.Array, w_tilde: jax.Array, k: int, rxx: jax.Array, *,
+                     eps: float = 1e-8, sqrt_method: str = "eigh",
+                     svd_method: str = "exact", key=None):
+    """Theorem 1.  sqrt_method: 'eigh' (exact) or 'newton_schulz' (MXU-native)."""
+    err = (w - w_tilde).astype(jnp.float32)
+    rxx = rxx.astype(jnp.float32)
+    if sqrt_method == "eigh":
+        sqrt, inv_sqrt = psd_sqrt_eigh(rxx, eps=eps)
+    elif sqrt_method == "newton_schulz":
+        sqrt, inv_sqrt = psd_sqrt_newton_schulz(rxx, eps=eps)
+    else:
+        raise ValueError(f"unknown sqrt method {sqrt_method!r}")
+    u, sv, vt = svd_lowrank(sqrt @ err, k, method=svd_method, key=key)
+    a = inv_sqrt @ u
+    b = sv[:, None] * vt
+    return a, b
+
+
+def solve_qlora(key: jax.Array, w: jax.Array, k: int, dtype=jnp.float32):
+    """LoRA/QLoRA init: A ~ N(0, 1/m) Gaussian, B = 0 — no error reconstruction."""
+    m, n = w.shape
+    a = jax.random.normal(key, (m, k), dtype) / jnp.sqrt(jnp.asarray(m, dtype))
+    b = jnp.zeros((k, n), dtype)
+    return a, b
+
+
+def solve_loftq(w: jax.Array, quant_fn: Callable[[jax.Array], jax.Array], k: int,
+                iters: int = 5, svd_method: str = "exact", key=None):
+    """LoftQ (Algorithm 1): alternate  W̃ = dq(q(W − A B))  and
+    (A, B) <- SVD_k(W − W̃).  Returns (w_tilde, A, B)."""
+    w = w.astype(jnp.float32)
+    m, n = w.shape
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, n), jnp.float32)
+    w_tilde = w
+    for _ in range(iters):
+        w_tilde = quant_fn(w - a @ b)
+        u, sv, vt = svd_lowrank(w - w_tilde, k, method=svd_method, key=key)
+        sq = jnp.sqrt(sv)
+        a = u * sq[None, :]
+        b = sq[:, None] * vt
+    return w_tilde, a, b
+
+
+# ----------------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------------
+
+METHODS = ("qera_exact", "qera_approx", "lqer", "zeroquant_v2", "loftq", "qlora")
+
+
+def solve(method: str, w, w_tilde, k, *, stats=None, quant_fn=None,
+          key=None, svd_method: str = "exact", sqrt_method: str = "eigh",
+          loftq_iters: int = 5):
+    """Uniform entry point.  Returns (w_tilde, A, B) for every method
+    (LoftQ may replace w_tilde; others pass it through)."""
+    if method == "qera_exact":
+        if stats is None or stats.rxx is None:
+            raise ValueError("qera_exact needs LayerStats with rxx")
+        a, b = solve_qera_exact(w, w_tilde, k, stats.rxx, sqrt_method=sqrt_method,
+                                svd_method=svd_method, key=key)
+    elif method == "qera_approx":
+        if stats is None:
+            raise ValueError("qera_approx needs LayerStats (mean_x2)")
+        a, b = solve_qera_approx(w, w_tilde, k, stats.mean_x2,
+                                 svd_method=svd_method, key=key)
+    elif method == "lqer":
+        if stats is None:
+            raise ValueError("lqer needs LayerStats (mean_abs)")
+        a, b = solve_lqer(w, w_tilde, k, stats.mean_abs,
+                          svd_method=svd_method, key=key)
+    elif method == "zeroquant_v2":
+        a, b = solve_zeroquant_v2(w, w_tilde, k, svd_method=svd_method, key=key)
+    elif method == "loftq":
+        if quant_fn is None:
+            raise ValueError("loftq needs quant_fn")
+        w_tilde, a, b = solve_loftq(w, quant_fn, k, iters=loftq_iters,
+                                    svd_method=svd_method, key=key)
+    elif method == "qlora":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        a, b = solve_qlora(key, w, k)
+    else:
+        raise KeyError(f"unknown method {method!r}; choose from {METHODS}")
+    return w_tilde, a, b

@@ -1,0 +1,67 @@
+"""PSD matrix square roots — the numerical core of QERA-exact.
+
+The paper computes ``R_XX^(1/2)`` with SciPy's blocked-Schur algorithm on CPU
+(Appendix A.4/A.7) and names accelerator-side sqrtm as the key missing
+optimization.  TPU adaptation (DESIGN.md §3): R_XX is symmetric PSD, so
+
+* ``psd_sqrt_eigh``      — exact sqrt/inv-sqrt via eigendecomposition (XLA eigh);
+* ``psd_sqrt_newton_schulz`` — Denman–Beavers/Newton–Schulz coupled iteration,
+  matmul-only (MXU-friendly, shardable under pjit), with spectral-norm
+  pre-scaling for convergence.
+
+Both return (sqrt, inv_sqrt); the inverse is Tikhonov-damped with ``eps``
+(paper Remark 1: add a small diagonal perturbation to recover invertibility).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _symmetrize(a: jax.Array) -> jax.Array:
+    return 0.5 * (a + a.T)
+
+
+@partial(jax.jit, static_argnames=("compute_inverse",))
+def psd_sqrt_eigh(r: jax.Array, eps: float = 1e-8, compute_inverse: bool = True):
+    """Exact PSD sqrt via eigh.  Eigenvalues are clamped at ``eps * max_eig``."""
+    r = _symmetrize(r)
+    w, v = jnp.linalg.eigh(r)
+    floor = jnp.maximum(w[-1], 0.0) * eps + jnp.finfo(r.dtype).tiny
+    w = jnp.maximum(w, floor)
+    sw = jnp.sqrt(w)
+    sqrt = (v * sw) @ v.T
+    if not compute_inverse:
+        return sqrt, None
+    inv_sqrt = (v / sw) @ v.T
+    return sqrt, inv_sqrt
+
+
+@partial(jax.jit, static_argnames=("num_iters",))
+def psd_sqrt_newton_schulz(r: jax.Array, num_iters: int = 30, eps: float = 1e-8):
+    """Coupled Newton–Schulz iteration for (sqrt, inv-sqrt) of a PSD matrix.
+
+    Y_{k+1} = Y_k (3I - Z_k Y_k) / 2,  Z_{k+1} = (3I - Z_k Y_k) Z_k / 2
+    with Y_0 = R / ||R||_F, Z_0 = I; converges when ||I - R/||R||_F|| < 1,
+    guaranteed for the Frobenius pre-scaling.  Pure matmuls: lowers to MXU
+    dots and shards cleanly (each step is 2 GEMMs).
+    """
+    r = _symmetrize(r.astype(jnp.float32))
+    n = r.shape[0]
+    ident = jnp.eye(n, dtype=r.dtype)
+    r = r + eps * jnp.trace(r) / n * ident  # Tikhonov damping
+    norm = jnp.linalg.norm(r)
+    y = r / norm
+    z = ident
+
+    def body(_, yz):
+        y, z = yz
+        t = 0.5 * (3.0 * ident - z @ y)
+        return (y @ t, t @ z)
+
+    y, z = jax.lax.fori_loop(0, num_iters, body, (y, z))
+    s = jnp.sqrt(norm)
+    return y * s, z / s

@@ -1,0 +1,55 @@
+"""Truncated and randomized SVD.
+
+QERA needs only the top-k factors of (scaled) weight-error matrices with
+k <= 64 << min(m, n).  Dense SVD is O(mn·min(m,n)); the randomized (Halko)
+sketch is O(mnk) of *matmul* work — the TPU-native choice (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("k",))
+def truncated_svd(a: jax.Array, k: int):
+    """Exact top-k SVD factors: returns (U_k, s_k, Vt_k)."""
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    return u[:, :k], s[:k], vt[:k, :]
+
+
+@partial(jax.jit, static_argnames=("k", "oversample", "power_iters"))
+def randomized_svd(a: jax.Array, k: int, *, key: jax.Array,
+                   oversample: int = 8, power_iters: int = 2):
+    """Halko-style randomized top-k SVD.
+
+    sketch = A @ Omega (m×n · n×(k+p)); optional power iterations
+    (A Aᵀ)^q sharpen the spectrum; QR orthonormalizes; small SVD finishes.
+    All heavy ops are GEMMs -> MXU.
+    """
+    m, n = a.shape
+    p = min(k + oversample, min(m, n))
+    omega = jax.random.normal(key, (n, p), dtype=a.dtype)
+    y = a @ omega
+    for _ in range(power_iters):
+        y = a @ (a.T @ y)
+        y, _ = jnp.linalg.qr(y)
+    q, _ = jnp.linalg.qr(y)
+    b = q.T @ a                      # (p, n) — small
+    ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    u = q @ ub
+    return u[:, :k], s[:k], vt[:k, :]
+
+
+def svd_lowrank(a: jax.Array, k: int, *, method: str = "exact",
+                key: jax.Array | None = None):
+    """Dispatcher used by the solvers."""
+    if method == "exact":
+        return truncated_svd(a, k)
+    if method == "randomized":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return randomized_svd(a, k, key=key)
+    raise ValueError(f"unknown svd method {method!r}")

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for QERA's compute hot-spots.
+
+mxint_matmul    — fused MXINT dequant GEMM + low-rank epilogue (serving path)
+mxint_quant     — on-device blockwise MXINT packing
+flash_attention — online-softmax attention (prefill path)
+
+ops.py holds the jit'd public wrappers (padding + interpret fallback);
+ref.py the pure-jnp oracles every kernel is tested against.
+EXAMPLE.md documents the layout conventions.
+"""
+
+from repro.kernels.ops import (
+    flash_attention,
+    quantize_weights,
+    quantized_matmul,
+    quantized_matmul_packed,
+)

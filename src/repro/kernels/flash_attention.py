@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: online-softmax (flash) attention with GQA.
+
+Serving the QERA-quantized models still needs a fast attention prefill; this
+kernel keeps the (Sq x Skv) score matrix out of HBM entirely.  Standard
+running-max/denominator formulation:
+
+  grid = (batch, heads, Sq/bq, Skv/bkv), kv innermost;
+  scratch: m (bq,1), l (bq,1), acc (bq, d) in VMEM;
+  K/V BlockSpecs index heads via h // group so GQA needs no host-side repeat.
+
+Causal masking uses absolute tile offsets; fully-masked kv tiles above the
+diagonal contribute exp(-inf)=0 (correct, if not skipped — the dry-run/roofline
+path uses the jnp chunked implementation; this kernel is the TPU target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            sm_scale: float, causal: bool, block_q: int, block_kv: int,
+            kv_len: int):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bkv, d)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bkv, d)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+    kv_ids = ikv * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kv_ids < kv_len
+    if causal:
+        q_ids = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        mask = jnp.logical_and(mask, q_ids >= kv_ids)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ikv == pl.num_programs(3) - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,        # (B, H, Sq, D)
+    k: jax.Array,        # (B, Hkv, Skv, D)
+    v: jax.Array,        # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    kv_len: int | None = None,   # valid kv prefix (defaults to Skv)
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = h // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    if kv_len is None:
+        kv_len = skv
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, (
+        f"seq ({sq},{skv}) must divide blocks ({block_q},{block_kv}) "
+        "— use kernels.ops wrapper for padding")
+
+    grid = (bsz, h, sq // block_q, skv // block_kv)
+    kernel = functools.partial(
+        _kernel, sm_scale=sm_scale, causal=causal, block_q=block_q,
+        block_kv=block_kv, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h_, i, j: (b, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b, h_, i, j: (b, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b, h_, i, j: (b, h_ // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h_, i, j: (b, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: fused MXINT dequant-matmul with low-rank epilogue.
+
+Computes  y = x @ dq(Wq) + t @ B   where t = x @ A is the small (M, r)
+low-rank activation (r ≤ 64), Wq is stored packed in HBM as int8 mantissas
+(K, N) plus int8 shared exponents (K/bs, N).
+
+This is the serving hot loop of QERA-style PTQ: weight bytes moved from HBM
+drop ~4x at 4-bit vs bf16 (memory-roofline win), dequantization happens in
+VMEM right before the MXU dot, and the low-rank correction is fused into the
+final K-step epilogue so y is written exactly once.
+
+Tiling: grid = (M/bm, N/bn, K/bk), K innermost for accumulation in an
+f32 VMEM scratch tile (bm, bn).  bk must be a multiple of the MXINT block
+size so each exponent tile covers whole blocks.  MXU-aligned defaults:
+bm = bn = bk = 128 (>= 8x128 VREG lanes, f32 accumulate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, mant_ref, exp_ref, t_ref, b_ref, o_ref, acc_ref, *,
+            bits: int, block_size: int, out_dtype):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # In-VMEM dequant: scale[u, n] applies to mantissa rows u*bs:(u+1)*bs.
+    mant = mant_ref[...]                          # (bk, bn) int8
+    exp = exp_ref[...]                            # (bk//bs, bn) int8
+    scale = jnp.exp2(exp.astype(jnp.float32) - (bits - 2))
+    bk, bn = mant.shape
+    nblk = bk // block_size
+    scale_full = jnp.broadcast_to(
+        scale[:, None, :], (nblk, block_size, bn)).reshape(bk, bn)
+    w = mant.astype(jnp.float32) * scale_full
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == pl.num_programs(2) - 1)
+    def _epilogue():
+        lowrank = jnp.dot(t_ref[...].astype(jnp.float32),
+                          b_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + lowrank).astype(out_dtype)
+
+
+def mxint_matmul_lowrank_pallas(
+    x: jax.Array,        # (M, K)
+    mant: jax.Array,     # (K, N) int8
+    exp: jax.Array,      # (K // block_size, N) int8
+    t: jax.Array,        # (M, r)  = x @ A, precomputed (r is tiny)
+    b: jax.Array,        # (r, N)
+    *,
+    bits: int,
+    block_size: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    kn, n = mant.shape
+    r = t.shape[1]
+    assert kn == k and exp.shape == (k // block_size, n) and b.shape == (r, n)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"shapes ({m},{k},{n}) must divide blocks ({block_m},{block_k},{block_n}) "
+        "— use kernels.ops wrapper for padding")
+    assert block_k % block_size == 0, "block_k must cover whole MXINT blocks"
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    kernel = functools.partial(_kernel, bits=bits, block_size=block_size,
+                               out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((block_k // block_size, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((block_m, r), lambda i, j, s: (i, 0)),
+            pl.BlockSpec((r, block_n), lambda i, j, s: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, mant, exp, t, b)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: blockwise MXINT quantization.
+
+One program quantizes a (block_size, block_n) tile: shared-exponent
+reduction over the block dimension, overflow-aware exponent bump, mantissa
+round/clip — all in VMEM.  Used to (re)pack weights on device, e.g. after an
+optimizer step in QAT-style flows, without a round-trip through HBM floats.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, mant_ref, exp_ref, *, bits: int):
+    w = w_ref[...].astype(jnp.float32)            # (bs, bn)
+    maxabs = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    safe = jnp.where(maxabs > 0, maxabs, 1.0)
+    e = jnp.floor(jnp.log2(safe)).astype(jnp.int32)
+    e = jnp.clip(e, -126, 127)
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.exp2(e.astype(jnp.float32) - (bits - 2))
+    over = jnp.round(maxabs / scale) > qmax
+    e = jnp.where(over, e + 1, e)
+    scale = jnp.exp2(e.astype(jnp.float32) - (bits - 2))
+    mant_ref[...] = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    exp_ref[...] = e.astype(jnp.int8)
+
+
+def mxint_quantize_pallas(w: jax.Array, *, bits: int, block_size: int,
+                          block_n: int = 128, interpret: bool = False):
+    """w: (K, N) -> (mant int8 (K, N), exp int8 (K//bs, N))."""
+    k, n = w.shape
+    assert k % block_size == 0 and n % block_n == 0, (
+        f"shape ({k},{n}) must divide (block_size={block_size}, block_n={block_n})")
+    grid = (k // block_size, n // block_n)
+    kernel = functools.partial(_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_size, block_n), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_size, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, n), jnp.int8),
+            jax.ShapeDtypeStruct((k // block_size, n), jnp.int8),
+        ],
+        interpret=interpret,
+    )(w)

@@ -1,0 +1,104 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handle non-aligned shapes by padding to block multiples (cropped on the way
+out), pick interpret mode automatically off-TPU, and expose a uniform API the
+model layer can call:
+
+    quantized_matmul(x, packed, a, b)    # the QER serving GEMM
+    quantize_weights(w, bits, block_size)
+    flash_attention(q, k, v, causal=..., kv_len=...)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mxint_matmul import mxint_matmul_lowrank_pallas
+from repro.kernels.mxint_quant import mxint_quantize_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.quant.mxint import PackedMXINT
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("bits", "block_size", "block_m", "block_n",
+                                   "block_k", "interpret"))
+def quantized_matmul(x: jax.Array, mant: jax.Array, exp: jax.Array,
+                     a: jax.Array, b: jax.Array, *, bits: int, block_size: int,
+                     block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                     interpret: bool | None = None) -> jax.Array:
+    """y = x @ dq(mant, exp) + (x @ a) @ b; x may have leading batch dims."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = mant.shape[1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    bm = min(block_m, max(8, m))
+    bk = block_k
+    if k % bk:                       # shrink to a divisor covering MX blocks
+        bk = block_size
+    bn = block_n if n % block_n == 0 else n
+
+    t = x2.astype(jnp.float32) @ a.astype(jnp.float32)
+    x2p = _pad_to(x2, 0, bm)
+    tp = _pad_to(t, 0, bm)
+    y = mxint_matmul_lowrank_pallas(
+        x2p, mant, exp, tp, b, bits=bits, block_size=block_size,
+        block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    return y[:m].reshape(*lead, n)
+
+
+def quantized_matmul_packed(x: jax.Array, packed: PackedMXINT, a: jax.Array,
+                            b: jax.Array, **kw) -> jax.Array:
+    return quantized_matmul(x, packed.mant, packed.exp, a, b,
+                            bits=packed.bits, block_size=packed.block_size, **kw)
+
+
+@partial(jax.jit, static_argnames=("bits", "block_size", "interpret"))
+def quantize_weights(w: jax.Array, *, bits: int, block_size: int,
+                     interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    k, n = w.shape
+    bn = 128 if n % 128 == 0 else n
+    return mxint_quantize_pallas(w, bits=bits, block_size=block_size,
+                                 block_n=bn, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "sm_scale", "kv_len", "block_q",
+                                   "block_kv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    kv_len: int | None = None, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    sq, skv = q.shape[2], k.shape[2]
+    if kv_len is None:
+        kv_len = skv
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bkv)
+    vp = _pad_to(v, 2, bkv)
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, sm_scale=sm_scale, kv_len=kv_len,
+        block_q=bq, block_kv=bkv, interpret=interpret)
+    return out[:, :, :sq, :]

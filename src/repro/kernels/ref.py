@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the semantic reference the kernels/tests assert against —
+no tiling, no VMEM reasoning, just the math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.mxint import mxint_quantize, mxint_dequantize
+
+
+def mxint_matmul_lowrank_ref(x: jax.Array, mant: jax.Array, exp: jax.Array,
+                             a: jax.Array, b: jax.Array, bits: int,
+                             block_size: int) -> jax.Array:
+    """y = x @ dq(Wq) + (x @ A) @ B  with f32 accumulation.
+
+    x: (M, K); mant: (K, N) int8; exp: (K//bs, N) int8; a: (K, r); b: (r, N).
+    """
+    k, n = mant.shape
+    mant_b = mant.reshape(k // block_size, block_size, n)
+    w = mxint_dequantize(mant_b, exp, bits, out_shape=(k, n), dtype=jnp.float32)
+    x32 = x.astype(jnp.float32)
+    y = x32 @ w + (x32 @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    return y
+
+
+def mxint_quantize_ref(w: jax.Array, bits: int, block_size: int):
+    """(mant int8 (K, N), exp int8 (K//bs, N)) — flat-mantissa layout."""
+    mant, exp = mxint_quantize(w, bits, block_size)
+    k, n = w.shape[-2], w.shape[-1]
+    return mant.reshape(*w.shape[:-2], k, n), exp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, sm_scale: float | None = None,
+                        kv_len: int | None = None) -> jax.Array:
+    """Naive softmax attention with GQA head-group broadcast.
+
+    q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D); returns (B, H, Sq, D).
+    """
+    bq, h, sq, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * sm_scale
+    skv = k.shape[2]
+    if kv_len is not None:
+        mask = jnp.arange(skv)[None, :] < kv_len
+        s = jnp.where(mask, s, -jnp.inf)
+    if causal:
+        cm = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(cm, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,7 @@
+# NOTE: never import repro.launch.dryrun from here — it sets XLA_FLAGS at
+# import time and must only be imported as a standalone entry point.
+from repro.launch.mesh import (
+    make_mesh_by_name,
+    make_production_mesh,
+    make_tiny_mesh,
+)

@@ -1,0 +1,366 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Test hook only — must also run before any jax import; the production
+# default above stays exactly as specified.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+Because per-layer params are scanned, XLA's cost model counts the loop body
+ONCE regardless of trip count.  We therefore compile each cell three times:
+
+  * full-L         -> memory_analysis (buffer sizes are trip-count-exact)
+  * L = p, L = 2p  -> cost deltas: per-layer-group flops/bytes/collectives
+                      (p = the layer period: 1, attn_every, or
+                      cross_attn_every), extrapolated to the real depth.
+
+Roofline terms (TPU v5e targets): compute = FLOPs/(197 TF/s); memory =
+bytes/(819 GB/s); collective = ICI bytes/(50 GB/s per link), all per device.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh prod
+  python -m repro.launch.dryrun --all --mesh prod --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SHAPES, ShapeSpec, dryrun_cells, get_arch
+from repro.launch import specs as S
+from repro.launch.mesh import make_mesh_by_name
+from repro.models.config import ModelConfig, reduced
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.sharding import rules
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import make_microbatched_train_step, make_train_step
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device ICI bytes by collective opcode, from post-SPMD HLO text.
+
+    Per instruction we take the LARGEST shape on the line (gathered size for
+    all-gather, full size for all-reduce / all-to-all, input for
+    reduce-scatter) and double all-reduce (ring: reduce-scatter+all-gather).
+    """
+    out = {op: 0.0 for op in _COLL_OPS}
+    counts = {op: 0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "fusion" in stripped.split("=")[0]:
+            continue
+        op = next((o for o in _COLL_OPS
+                   if f" {o}(" in stripped or f"{o}-start(" in stripped), None)
+        if op is None:
+            continue
+        best = 0
+        for dt, dims in _SHAPE_RE.findall(stripped):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            best = max(best, n * _DTYPE_BYTES[dt])
+        mult = 2.0 if op == "all-reduce" else 1.0
+        out[op] += best * mult
+        counts[op] += 1
+    out["total"] = sum(out[o] for o in _COLL_OPS)
+    out["counts"] = counts
+    return out
+
+
+def analyze(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": None if ma is None else {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def _microbatches(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                  tokens_budget: int = 32_768) -> int:
+    if shape.kind != "train":
+        return 1
+    ax = rules.batch_axes(mesh, shape.global_batch)
+    dp = 1
+    for a in ax:
+        dp *= mesh.shape[a]
+    b_loc = shape.global_batch // dp
+    mb = 1
+    while (b_loc % (mb * 2) == 0
+           and (b_loc // mb) * shape.seq_len > tokens_budget):
+        mb *= 2
+    return mb
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+               microbatches: int = 1):
+    """Returns (jitted_fn, arg_structs) ready to .lower(*args)."""
+    pshard, pstructs = S.param_shardings(cfg, mesh)
+    bstructs, bshard = S.batch_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig()
+        ostructs, oshard = S.opt_structs_shardings(cfg, mesh, pstructs, pshard)
+        if microbatches > 1:
+            fn = make_microbatched_train_step(cfg, opt_cfg, microbatches)
+        else:
+            fn = make_train_step(cfg, opt_cfg)
+        jitted = jax.jit(fn, in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        return jitted, (pstructs, ostructs, bstructs)
+
+    if shape.kind == "prefill":
+        cstructs, cshard = S.cache_structs_shardings(cfg, shape, mesh)
+        fn = make_prefill_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(pshard, bshard),
+                         out_shardings=(None, cshard))
+        return jitted, (pstructs, bstructs)
+
+    if shape.kind == "decode":
+        cstructs, cshard = S.cache_structs_shardings(cfg, shape, mesh)
+        fn = make_decode_step(cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, cshard, bshard, None),
+            out_shardings=(None, cshard),
+            donate_argnums=(1,))
+        clen = jax.ShapeDtypeStruct((), jnp.int32)
+        return jitted, (pstructs, cstructs, bstructs, clen)
+
+    raise ValueError(shape.kind)
+
+
+def _layer_period(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid_mamba" and cfg.attn_every:
+        return cfg.attn_every
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        return cfg.cross_attn_every
+    return 1
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch      # decode: 1 token/seq
+
+
+def run_cell(arch: str, shape: ShapeSpec, mesh_name: str, *,
+             use_reduced: bool = False, out_dir: Path | None = None,
+             skip_costs: bool = False,
+             cfg_overrides: dict | None = None) -> dict:
+    mesh = make_mesh_by_name(mesh_name)
+    n_dev = 1
+    for a in mesh.axis_names:
+        n_dev *= mesh.shape[a]
+
+    cfg = get_arch(arch)
+    if use_reduced:
+        cfg = reduced(cfg)
+        shape = ShapeSpec(shape.name, seq_len=min(shape.seq_len, 64),
+                          global_batch=min(shape.global_batch, 8),
+                          kind=shape.kind)
+    cfg = S.tune_for_cell(cfg, shape, mesh)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    mb = _microbatches(cfg, shape, mesh)
+
+    result = {"arch": arch, "shape": dataclasses.asdict(shape),
+              "mesh": mesh_name, "devices": n_dev, "microbatches": mb,
+              "reduced": use_reduced,
+              "attn_chunk": cfg.attn_chunk, "remat": cfg.remat}
+
+    # ---- full-depth compile: memory analysis --------------------------------
+    t0 = time.time()
+    jitted, args = build_cell(cfg, shape, mesh, microbatches=mb)
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    full = analyze(compiled)
+    result["compile_seconds_full"] = round(time.time() - t0, 2)
+    result["full"] = full
+    print(compiled.memory_analysis())
+
+    # ---- cost extrapolation: (L = p vs 2p) x (S1 vs S2) fit ----------------
+    # Cost compiles run fully UNROLLED (scan_layers=False + python chunk
+    # loops) at two small sequence/cache lengths so every FLOP is visible to
+    # the cost model, then each component is fit as a*S + b*S^2 (train /
+    # prefill; attention is the quadratic part) or a + b*C (decode, linear in
+    # cache length) and evaluated at the real shape.
+    if not skip_costs:
+        import numpy as np
+
+        p = _layer_period(cfg)
+        is_decode = shape.kind == "decode"
+        # decode costs are affine in cache length (2 points); train/prefill
+        # need constant + linear + quadratic terms (weight all-gathers are
+        # constant in S, matmuls linear, attention quadratic) -> 3 points.
+        s_points = (2048, 4096) if is_decode else (512, 1024, 2048)
+        costs: dict = {}
+        for mult in (1, 2):
+            for s_small in s_points:
+                # cost-mode chunk policy:
+                # * inner chunk count capped at 8 (XLA fusion params charge
+                #   the FULL projection arrays once per unrolled chunk — an
+                #   O(nc*S) accounting artifact; capping nc makes it linear
+                #   and inflates only the negligible intra-chunk term);
+                # * attention q-chunk FIXED across S points so the measured
+                #   bytes match the real chunked (flash) K/V re-read traffic.
+                ccfg = dataclasses.replace(
+                    cfg, num_layers=p * mult, scan_layers=False,
+                    chunk_python_loop=True,
+                    attn_chunk=0 if is_decode else 256,
+                    rwkv_chunk=max(cfg.rwkv_chunk, s_small // 8),
+                    ssm_chunk=max(cfg.ssm_chunk, s_small // 8))
+                cshape = ShapeSpec(shape.name, seq_len=s_small,
+                                   global_batch=shape.global_batch,
+                                   kind=shape.kind)
+                jit_l, args_l = build_cell(ccfg, cshape, mesh, microbatches=1)
+                with mesh:
+                    comp = jit_l.lower(*args_l).compile()
+                costs[(mult, s_small)] = analyze(comp)
+        groups = cfg.num_layers / p
+        s_real = shape.seq_len
+
+        def fit_eval(vals: list[float]) -> float:
+            """Fit polynomial basis through (s_points, vals), eval at s_real."""
+            if is_decode:                       # v = a + b*C
+                s1, s2 = s_points
+                b_ = (vals[1] - vals[0]) / (s2 - s1)
+                a_ = vals[0] - b_ * s1
+                return max(a_ + b_ * s_real, 0.0)
+            vand = np.array([[1.0, s_, s_ * s_] for s_ in s_points])
+            coef = np.linalg.solve(vand, np.array(vals, np.float64))
+            if coef[2] < 0:
+                # sub-quadratic component + accounting noise: refit affine
+                # through the two largest points (never extrapolate negative
+                # curvature to 16-64x the fit range)
+                s2, s3 = s_points[1], s_points[2]
+                b_ = (vals[2] - vals[1]) / (s3 - s2)
+                a_ = vals[2] - b_ * s3
+                return max(a_ + b_ * s_real, 0.0)
+            return float(max(coef[0] + coef[1] * s_real
+                             + coef[2] * s_real * s_real, 0.0))
+
+        def extrap(key, sub=None) -> float:
+            def get(mult, s_):
+                v = costs[(mult, s_)][key]
+                return v if sub is None else v[sub]
+            # layer-group delta and base, each fit over S then combined
+            layer = fit_eval([max(get(2, s_) - get(1, s_), 0.0)
+                              for s_ in s_points])
+            base = fit_eval([max(get(1, s_) - (get(2, s_) - get(1, s_)), 0.0)
+                             for s_ in s_points])
+            return base + groups * layer
+
+        flops_dev = extrap("flops")
+        bytes_dev = extrap("bytes_accessed")
+        coll_dev = extrap("collectives", "total")
+        result["per_device"] = {
+            "flops": flops_dev, "bytes_accessed": bytes_dev,
+            "collective_bytes": coll_dev,
+            "collective_detail": {
+                op: extrap("collectives", op) for op in _COLL_OPS},
+        }
+        terms = {
+            "compute_s": flops_dev / HW["peak_flops"],
+            "memory_s": bytes_dev / HW["hbm_bw"],
+            "collective_s": coll_dev / HW["ici_bw"],
+        }
+        terms["bottleneck"] = max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+        result["roofline"] = terms
+        mf = model_flops(cfg, shape)
+        result["model_flops"] = mf
+        hlo_global = flops_dev * n_dev
+        result["hlo_flops_global"] = hlo_global
+        result["model_flops_ratio"] = mf / hlo_global if hlo_global else None
+
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        fn = out_dir / f"{arch}__{shape.name}__{mesh_name}.json"
+        fn.write_text(json.dumps(result, indent=2))
+        print("wrote", fn)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="prod",
+                    choices=["prod", "pod", "tiny", "tiny_pod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--skip-costs", action="store_true",
+                    help="memory-analysis compile only (multi-pod pass)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    if args.all:
+        ok, failed = 0, []
+        for arch, spec, run in dryrun_cells(include_skipped=True):
+            if not run:
+                print(f"SKIP {arch} x {spec.name} (sub-quadratic rule)")
+                continue
+            try:
+                t0 = time.time()
+                run_cell(arch, spec, args.mesh, use_reduced=args.reduced,
+                         out_dir=out, skip_costs=args.skip_costs)
+                print(f"OK {arch} x {spec.name} x {args.mesh} "
+                      f"({time.time()-t0:.1f}s)")
+                ok += 1
+            except Exception as e:  # noqa: BLE001 — report and continue
+                print(f"FAIL {arch} x {spec.name}: {type(e).__name__}: {e}")
+                failed.append((arch, spec.name, str(e)[:200]))
+        print(f"\n{ok} cells OK, {len(failed)} failed")
+        for f in failed:
+            print("  FAILED:", f)
+        raise SystemExit(1 if failed else 0)
+
+    spec = SHAPES[args.shape or "train_4k"]
+    res = run_cell(args.arch or "yi-34b", spec, args.mesh,
+                   use_reduced=args.reduced, out_dir=out,
+                   skip_costs=args.skip_costs)
+    print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

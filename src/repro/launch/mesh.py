@@ -1,0 +1,37 @@
+"""Mesh construction.  Functions, not module-level constants — importing this
+module never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; the multi-pod mesh adds a leading 'pod' axis
+    (2 pods = 512 chips).  'pod' composes with 'data' for batch sharding —
+    only the gradient all-reduce crosses the pod boundary."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_tiny_mesh(*, multi_pod: bool = False):
+    """(2,2)/(2,2,2) mesh for CI-scale sharding tests (8 forced devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_mesh_by_name(name: str):
+    return {
+        "prod": lambda: make_production_mesh(multi_pod=False),
+        "pod": lambda: make_production_mesh(multi_pod=True),
+        "tiny": lambda: make_tiny_mesh(multi_pod=False),
+        "tiny_pod": lambda: make_tiny_mesh(multi_pod=True),
+    }[name]()

@@ -1,0 +1,204 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing harness — named experiment variants over dry-run cells.
+
+Each variant = (cell, hypothesis, set of changes); results land in
+experiments/perf/<variant>.json and feed EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m repro.launch.perf --variant yi_train_bf16_params
+    PYTHONPATH=src python -m repro.launch.perf --all
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SHAPES, get_arch
+from repro.core.api import DEFAULT_SKIP
+from repro.launch import specs as S
+from repro.launch.dryrun import run_cell
+from repro.sharding import rules
+
+
+def _cast_params_bf16(structs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 else s, structs)
+
+
+def _packed_struct_tree(structs, *, rank: int = 32, block_size: int = 32):
+    """Transform param structs into the packed-quantized serving layout
+    (int8 mantissa + int8 exponents + bf16 low-rank terms)."""
+    from repro.utils.trees import flatten_dict, unflatten_dict
+
+    def skips(path):
+        return any(re.search(p, path) for p in DEFAULT_SKIP)
+
+    flat = flatten_dict(dict(structs))
+    out = {}
+    for path, leaf in flat.items():
+        if (hasattr(leaf, "ndim") and leaf.ndim in (2, 3) and not skips(path)
+                and leaf.shape[-2] % block_size == 0):
+            lead = leaf.shape[:-2]
+            m, n = leaf.shape[-2:]
+            out[f"{path}/mant"] = jax.ShapeDtypeStruct(leaf.shape, jnp.int8)
+            out[f"{path}/exp"] = jax.ShapeDtypeStruct(
+                (*lead, m // block_size, n), jnp.int8)
+            out[f"{path}/bits"] = jax.ShapeDtypeStruct((), jnp.int32)
+            out[f"{path}/block_size"] = jax.ShapeDtypeStruct((), jnp.int32)
+            out[f"{path}/lora_a"] = jax.ShapeDtypeStruct(
+                (*lead, m, rank), jnp.bfloat16)
+            out[f"{path}/lora_b"] = jax.ShapeDtypeStruct(
+                (*lead, rank, n), jnp.bfloat16)
+        else:
+            out[path] = leaf
+    return unflatten_dict(out)
+
+
+def _patched_param_structs(transform):
+    """Context-free monkeypatch of specs.param_structs for one variant."""
+    orig = S.param_structs
+
+    def patched(cfg):
+        return transform(orig(cfg))
+
+    return orig, patched
+
+
+from repro.configs.registry import ShapeSpec
+
+# short-context, small-batch decode: the weight-bound serving regime where
+# the paper's deployment claim lives (B=16 so batch shards once over 'data')
+DECODE_B16 = ShapeSpec("decode_4k_b16", 4096, 16, "decode")
+
+VARIANTS = {
+    # ---- cell 1: yi-34b train_4k (most collective-bound) -------------------
+    "yi_train_baseline": dict(cell=("yi-34b", "train_4k"), hypo="baseline"),
+    "yi_train_bf16_params": dict(
+        cell=("yi-34b", "train_4k"), params="bf16",
+        hypo="FSDP weight all-gathers move f32 bytes; bf16 params (f32 "
+             "moments) halve the dominant constant collective term"),
+    "yi_train_bf16_mb4": dict(
+        cell=("yi-34b", "train_4k"), params="bf16", tokens_budget=16384,
+        hypo="on top of bf16 params, 4 microbatches halve live activations "
+             "(memory-fit headroom) without changing collective bytes"),
+    # ---- cell 2: llama4-maverick train_4k (EP; does not fit) ---------------
+    "llama4_train_baseline": dict(cell=("llama4-maverick-400b-a17b",
+                                        "train_4k"), hypo="baseline"),
+    "llama4_train_bf16_all": dict(
+        cell=("llama4-maverick-400b-a17b", "train_4k"), params="bf16",
+        moments="bfloat16",
+        hypo="36.9GB args = f32 params+moments; bf16 everything (the "
+             "production 8-bit-optimizer stand-in) brings args under HBM"),
+    "llama4_train_ep_data": dict(
+        cell=("llama4-maverick-400b-a17b", "train_4k"), params="bf16",
+        moments="bfloat16", expert_axis="data",
+        hypo="EP over 'model' makes MoE dispatch cross the TP axis; "
+             "aligning experts with the batch shards (EP=DP, TP inside "
+             "the expert FFN) cuts dispatch collective bytes"),
+    # ---- cell 3: yi-34b decode_32k (the paper's serving case) --------------
+    "yi_decode_baseline": dict(cell=("yi-34b", "decode_32k"), hypo="baseline"),
+    "yi_decode_b16_baseline": dict(
+        cell=("yi-34b", None), shape_spec=DECODE_B16,
+        hypo="baseline for the weight-bound regime: B=16, 4k ctx -> weights "
+             "(0.53GB/dev) >= cache (0.5GB/dev), so weight streaming is the "
+             "roofline term the paper's method attacks"),
+    "yi_decode_b16_quantized": dict(
+        cell=("yi-34b", None), shape_spec=DECODE_B16, packed=True,
+        hypo="same cell with QERA-packed int4 weights: weight bytes/device "
+             "0.53GB -> ~0.15GB; memory term should drop ~2x where weights "
+             "dominate"),
+    "yi_decode_quantized": dict(
+        cell=("yi-34b", "decode_32k"), packed=True,
+        hypo="decode streams every weight once per token: QERA-packed "
+             "int4-mantissa weights (+rank-32 bf16 low-rank) cut weight "
+             "bytes ~3.6x -> memory-roofline win (the paper's deployment "
+             "claim, measured from the compiled artifact)"),
+    "yi_train_noattnchunk": dict(
+        cell=("yi-34b", "train_4k"), cfg_overrides={"attn_chunk": 0},
+        hypo="SPMD warns 'involuntary full rematerialization' at the q-chunk "
+             "dynamic-slice over the SP-sharded seq axis -> batch-replicated "
+             "f32 reshards; at 4k seq chunking is unnecessary (scores "
+             "B*H*S/16*S*4B ~ 2GB) so attn_chunk=0 removes the pathology"),
+    # ---- memory-fit fixes for the over-16GB train cells ---------------------
+    "cmdr_train_bf16_mb8": dict(
+        cell=("command-r-plus-104b", "train_4k"), params="bf16",
+        tokens_budget=8192,
+        hypo="51.7GB cmd-r train: bf16 params + 8 microbatches divide live "
+             "activations; target < 16GB"),
+    "zamba_train_bf16_mb4": dict(
+        cell=("zamba2-7b", "train_4k"), params="bf16", tokens_budget=16384,
+        hypo="40.9GB zamba2 train: f32 ssm-chunk intermediates scale with "
+             "microbatch tokens; bf16 params + mb4 should fit"),
+}
+
+
+def run_variant(name: str, out_dir: Path) -> dict:
+    v = VARIANTS[name]
+    arch, shape_name = v["cell"]
+    shape = v.get("shape_spec") or SHAPES[shape_name]
+
+    import repro.launch.dryrun as DR
+
+    orig_structs = S.param_structs
+    orig_axis = rules.EXPERT_AXIS
+    orig_opt = S.opt_structs_shardings
+    orig_mb = DR._microbatches
+    try:
+        if v.get("params") == "bf16":
+            S.param_structs = _patched_param_structs(_cast_params_bf16)[1]
+        if v.get("packed"):
+            S.param_structs = _patched_param_structs(
+                partial(_packed_struct_tree, rank=32))[1]
+        if v.get("expert_axis"):
+            rules.set_expert_axis(v["expert_axis"])
+        if v.get("moments"):
+            S.opt_structs_shardings = partial(orig_opt,
+                                              moment_dtype=jnp.bfloat16)
+        if v.get("tokens_budget"):
+            DR._microbatches = (lambda cfg, shape_, mesh_:
+                                orig_mb(cfg, shape_, mesh_,
+                                        tokens_budget=v["tokens_budget"]))
+        res = run_cell(arch, shape, "prod", out_dir=None,
+                       cfg_overrides=v.get("cfg_overrides"))
+    finally:
+        S.param_structs = orig_structs
+        rules.set_expert_axis(orig_axis)
+        S.opt_structs_shardings = orig_opt
+        DR._microbatches = orig_mb
+
+    res["variant"] = name
+    res["hypothesis"] = v["hypo"]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{name}.json").write_text(json.dumps(res, indent=2))
+    mem = res["full"]["memory"]
+    hbm = (mem["argument_bytes"] + mem["temp_bytes"] + mem["output_bytes"]
+           - mem["alias_bytes"]) / 1e9
+    print(f"{name}: hbm={hbm:.2f}GB roofline={res.get('roofline')}")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", choices=list(VARIANTS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    out = Path(args.out)
+    todo = list(VARIANTS) if args.all else [args.variant]
+    for name in todo:
+        try:
+            run_variant(name, out)
+        except Exception as e:  # noqa: BLE001
+            print(f"VARIANT {name} FAILED: {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

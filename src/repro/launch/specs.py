@@ -1,0 +1,121 @@
+"""input_specs: ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+Weak-type-correct, shardable, no device allocation.  The train cells feed
+``train_step(params, opt_state, batch)``; prefill feeds
+``prefill_step(params, batch)``; decode feeds
+``decode_step(params, cache, batch, cache_len)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params
+from repro.serve.engine import cache_shapes
+from repro.sharding import rules
+from repro.train.optimizer import init_opt_state
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    """(struct_tree, sharding_tree) for the data batch of one cell."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    bspec = rules.batch_spec(mesh, b, extra_dims=1)
+
+    if cfg.family == "audio":
+        toks = _sds((b, cfg.num_codebooks, s), jnp.int32)
+        tspec = rules.batch_spec(mesh, b, extra_dims=2)
+    else:
+        toks = _sds((b, s), jnp.int32)
+        tspec = bspec
+
+    structs: dict[str, Any] = {"tokens": toks}
+    shardings: dict[str, Any] = {"tokens": NamedSharding(mesh, tspec)}
+    if shape.kind == "train":
+        structs["labels"] = toks
+        shardings["labels"] = NamedSharding(mesh, tspec)
+    if cfg.family == "vlm":
+        structs["image_embeds"] = _sds((b, cfg.vision_seq, cfg.d_model),
+                                       cfg.compute_dtype)
+        shardings["image_embeds"] = NamedSharding(
+            mesh, rules.batch_spec(mesh, b, extra_dims=2))
+    return structs, shardings
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    structs = param_structs(cfg)
+    return rules.with_mesh(rules.param_specs(structs), mesh), structs
+
+
+def opt_structs_shardings(cfg: ModelConfig, mesh: Mesh, pstructs, pshard,
+                          moment_dtype=None):
+    ostructs = jax.eval_shape(partial(init_opt_state,
+                                      moment_dtype=moment_dtype), pstructs)
+    oshard = {"m": pshard, "v": pshard,
+              "step": NamedSharding(mesh, P())}
+    return ostructs, oshard
+
+
+def cache_structs_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    structs = cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    b = shape.global_batch
+    shardings: dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        kv = NamedSharding(mesh, rules.kv_cache_spec(
+            mesh, b, kv_heads=cfg.num_kv_heads))
+        shardings["blocks"] = {"k": kv, "v": kv}
+    elif cfg.family == "hybrid_mamba":
+        sp = rules.ssm_cache_specs(mesh, b)
+        shardings["blocks"] = {k: NamedSharding(mesh, v) for k, v in sp.items()}
+        if cfg.attn_every:
+            akv = NamedSharding(mesh, rules.kv_cache_spec(
+                mesh, b, kv_heads=cfg.num_kv_heads))
+            shardings["shared_attn"] = {"k": akv, "v": akv}
+    elif cfg.family == "rwkv":
+        sp = rules.rwkv_cache_specs(mesh, b)
+        shardings["blocks"] = {k: NamedSharding(mesh, v) for k, v in sp.items()}
+    return structs, shardings
+
+
+def tune_for_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                  *, score_budget_bytes: float = 512e6) -> ModelConfig:
+    """Per-cell runtime knobs: bf16 compute, remat for train, and an
+    attention q-chunk sized so live scores stay under ``score_budget_bytes``
+    per device (B_loc * H * chunk * S_kv * 4B <= budget)."""
+    b_loc = shape.global_batch // max(
+        1, int(jnp.prod(jnp.asarray(
+            [mesh.shape[a] for a in rules.batch_axes(mesh, shape.global_batch)]
+        )))) if rules.batch_axes(mesh, shape.global_batch) else shape.global_batch
+    overrides: dict[str, Any] = {
+        "dtype": "bfloat16", "scan_layers": True,
+        "act_sp": True,
+        "mesh_axes": tuple((a, mesh.shape[a]) for a in mesh.axis_names),
+    }
+    if shape.kind == "train":
+        overrides["remat"] = True
+    if shape.kind in ("train", "prefill") and cfg.family not in ("rwkv",):
+        skv = shape.seq_len
+        denom = max(1, b_loc * cfg.num_heads * skv * 4)
+        chunk = int(score_budget_bytes // denom)
+        chunk = max(64, min(shape.seq_len, 1 << (chunk.bit_length() - 1))) \
+            if chunk >= 1 else 64
+        if shape.seq_len % chunk:
+            chunk = 64
+        overrides["attn_chunk"] = min(chunk, shape.seq_len)
+    return dataclasses.replace(cfg, **overrides)

@@ -1,0 +1,9 @@
+from repro.models.config import ModelConfig, reduced
+from repro.models.transformer import (
+    classification_loss,
+    cross_entropy,
+    forward,
+    init_params,
+    lm_loss,
+)
+from repro.models.layers import Taps

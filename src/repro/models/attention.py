@@ -1,0 +1,181 @@
+"""Attention: q-chunked flash-style jnp implementation + KV-cache decode.
+
+The jnp path is what the pjit/GSPMD dry-run lowers (collectives visible in
+HLO); the Pallas flash kernel (kernels/flash_attention.py) is the TPU serving
+target and is numerically cross-checked against the same ref oracle.
+
+q-chunking bounds the live score tensor to (B, H, chunk, S_kv) — required for
+prefill_32k, harmless elsewhere.  GQA is einsum-grouped (no kv head repeat).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, linear
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Hkv, G, Sq, D); k: (B, Hkv, Skv, D) -> (B, Hkv, G, Sq, Skv)."""
+    return jnp.einsum("bkgqd,bksd->bkgqs", q, k)
+
+
+def _gqa_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    return jnp.einsum("bkgqs,bksd->bkgqd", p, v)
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+         q_offset: int | jax.Array = 0, kv_len: int | jax.Array | None = None,
+         chunk: int = 0, python_loop: bool = False) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D).  ``q_offset`` is the absolute
+    position of q[0] (decode: cache length); ``kv_len`` masks cache tails.
+    ``chunk`` > 0 iterates q-chunks to bound live score memory; each chunk is
+    rematerialized in the backward pass (flash-attention-style memory).
+    ``python_loop`` unrolls the chunk loop in HLO (dry-run cost accounting —
+    XLA's cost model counts a scan body once regardless of trip count).
+    """
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    scale = 1.0 / (d ** 0.5)
+
+    vec = (kv_len is not None and getattr(kv_len, "ndim", 0) == 1)
+
+    def block(qc: jax.Array, off) -> jax.Array:
+        s = _gqa_scores(qc.astype(jnp.float32), k.astype(jnp.float32)) * scale
+        kv_ids = jnp.arange(skv)
+        sq_c = qc.shape[3]
+        if vec:
+            # per-row cache lengths/offsets (continuous-batching decode)
+            mask = jnp.ones((b, 1, 1, sq_c, skv), bool)
+            mask &= (kv_ids[None, :] < kv_len[:, None])[:, None, None, None]
+            if causal:
+                q_ids = off[:, None] + jnp.arange(sq_c)[None, :]   # (B, Sq)
+                mask &= (q_ids[:, :, None] >= kv_ids[None, None, :]
+                         )[:, None, None]
+        else:
+            mask = jnp.ones((sq_c, skv), bool)
+            if kv_len is not None:
+                mask &= (kv_ids < kv_len)[None, :]
+            if causal:
+                q_ids = off + jnp.arange(sq_c)
+                mask &= q_ids[:, None] >= kv_ids[None, :]
+            mask = mask[None, None, None]
+        s = jnp.where(mask, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        # rows with no visible kv (fully masked) produce nan softmax -> zero
+        row_ok = jnp.any(mask, axis=-1, keepdims=True)
+        p = jnp.where(row_ok, p, 0.0)
+        return _gqa_out(p, v.astype(jnp.float32)).astype(q.dtype)
+
+    if chunk and sq > chunk and sq % chunk == 0:
+        # per-chunk remat: backward recomputes this chunk's scores instead of
+        # storing them — O(chunk * Skv) live scores instead of O(Sq * Skv).
+        block_ckpt = jax.checkpoint(block, static_argnums=())
+        nq = sq // chunk
+        if python_loop:
+            outs = [block(qg[:, :, :, i * chunk:(i + 1) * chunk, :],
+                          q_offset + i * chunk) for i in range(nq)]
+            out = jnp.concatenate(outs, axis=3)
+        else:
+            qs = jnp.moveaxis(qg.reshape(b, hkv, g, nq, chunk, d), 3, 0)
+            offs = q_offset + jnp.arange(nq) * chunk
+
+            def body(_, xs):
+                qc, off = xs
+                return None, block_ckpt(qc, off)
+
+            _, outs = jax.lax.scan(body, None, (qs, offs))
+            out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, sq, d)
+    else:
+        out = block(qg, q_offset)
+    return out.reshape(b, h, sq, d)
+
+
+def attention_block(p: Mapping[str, Any], x: jax.Array, angles: jax.Array, *,
+                    num_heads: int, num_kv_heads: int, head_dim: int,
+                    causal: bool = True, chunk: int = 0,
+                    python_loop: bool = False,
+                    cache: Mapping[str, jax.Array] | None = None,
+                    cache_len: jax.Array | None = None,
+                    constrain=None,
+                    taps=None, prefix: str = "", use_pallas: bool = False):
+    """Self-attention with optional KV cache (decode / prefill-fill).
+
+    x: (B, S, D).  Returns (out, new_cache) where new_cache is None when no
+    cache was passed.  ``angles`` must already be sliced to x's positions.
+    """
+    b, s, _ = x.shape
+    q = linear(p["wq"], x, taps=taps, name=f"{prefix}wq", use_pallas=use_pallas)
+    k = linear(p["wk"], x, taps=taps, name=f"{prefix}wk", use_pallas=use_pallas)
+    v = linear(p["wv"], x, taps=taps, name=f"{prefix}wv", use_pallas=use_pallas)
+    q = q.reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    q = apply_rope(q, angles)
+    k = apply_rope(k, angles)
+    if constrain is not None and cache is None:
+        # sequence-parallel attention: q seq over 'model', full k/v local.
+        # Without this GSPMD may shard the head_dim CONTRACTION (head counts
+        # rarely divide the TP axis), all-reducing every score tile.
+        q = constrain(q, ("dp", None, "model", None))
+        k = constrain(k, ("dp", None, None, None))
+        v = constrain(v, ("dp", None, None, None))
+
+    new_cache = None
+    if cache is not None:
+        # insert into cache at cache_len, attend over the whole cache
+        ck, cv = cache["k"], cache["v"]
+        idx = (jnp.zeros((), jnp.int32) if cache_len is None else cache_len)
+        if getattr(idx, "ndim", 0) == 1:
+            # per-row insertion positions (continuous-batching decode, s == 1)
+            upd = jax.vmap(lambda c, val, i: jax.lax.dynamic_update_slice(
+                c, val, (jnp.zeros((), idx.dtype), i, jnp.zeros((), idx.dtype))))
+            ck = upd(ck, k.astype(ck.dtype), idx)
+            cv = upd(cv, v.astype(cv.dtype), idx)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, 0, idx, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, 0, idx, 0))
+        new_cache = {"k": ck, "v": cv}
+        out = sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=causal,
+                   q_offset=idx, kv_len=idx + s, chunk=chunk,
+                   python_loop=python_loop)
+    else:
+        out = sdpa(q, k, v, causal=causal, chunk=chunk,
+                   python_loop=python_loop)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, num_heads * head_dim)
+    if constrain is not None and cache is None:
+        out = constrain(out, ("dp", "model", None))   # stay sequence-parallel
+    out = linear(p["wo"], out, taps=taps, name=f"{prefix}wo", use_pallas=use_pallas)
+    return out, new_cache
+
+
+def cross_attention_block(p: Mapping[str, Any], x: jax.Array,
+                          kv_embeds: jax.Array, *, num_heads: int,
+                          num_kv_heads: int, head_dim: int,
+                          taps=None, prefix: str = "", use_pallas: bool = False):
+    """Cross-attention onto precomputed (stub-frontend) embeddings.
+
+    x: (B, S, D); kv_embeds: (B, S_img, D). Non-causal, no RoPE (llama3.2-V
+    style cross blocks use no positional rotation on image keys).
+    """
+    b, s, _ = x.shape
+    s_kv = kv_embeds.shape[1]
+    q = linear(p["wq"], x, taps=taps, name=f"{prefix}wq", use_pallas=use_pallas)
+    k = linear(p["wk"], kv_embeds, taps=taps, name=f"{prefix}wk", use_pallas=use_pallas)
+    v = linear(p["wv"], kv_embeds, taps=taps, name=f"{prefix}wv", use_pallas=use_pallas)
+    q = q.reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s_kv, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s_kv, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    out = sdpa(q, k, v, causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, num_heads * head_dim)
+    return linear(p["wo"], out, taps=taps, name=f"{prefix}wo", use_pallas=use_pallas)

@@ -1,0 +1,185 @@
+"""ModelConfig — one dataclass describing every supported architecture family.
+
+Families:
+  dense         pre-norm GQA transformer (llama-style: RoPE + SwiGLU)
+  moe           dense attention + top-k routed expert MLPs
+  hybrid_mamba  Mamba2 (SSD) blocks with a *shared* attention block every
+                ``attn_every`` layers (zamba2)
+  rwkv          RWKV-6 "Finch": data-dependent-decay linear attention + channel mix
+  vlm           dense + cross-attention to precomputed image embeddings every
+                ``cross_attn_every``-th layer (frontend stubbed)
+  audio         dense decoder over ``num_codebooks`` EnCodec token streams
+                (frontend stubbed; per-codebook embeddings and heads)
+  encoder       bidirectional encoder (RoBERTa) for the paper's QPEFT benches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 256
+    vocab_size: int = 256
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    max_seq_len: int = 8192
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # moe
+    num_experts: int = 0
+    moe_top_k: int = 1
+    capacity_factor: float = 1.25
+
+    # hybrid_mamba (Mamba2 SSD)
+    ssm_state: int = 64
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 64
+    attn_every: int = 0              # shared attn block period (zamba2: 6)
+
+    # rwkv6
+    rwkv_head_dim: int = 64
+    rwkv_decay_lora: int = 64
+    rwkv_chunk: int = 16     # with the -8 logw clamp, 16 keeps exp() in f32 range
+
+    # vlm
+    cross_attn_every: int = 0        # cross-attn block period (llama3.2-V: 5)
+    vision_seq: int = 1601           # patch tokens from the (stubbed) tower
+    # audio
+    num_codebooks: int = 0
+
+    # encoder
+    num_classes: int = 0
+
+    # vocab padding (shardability: pad to a multiple, mask pad logits)
+    vocab_pad_multiple: int = 1
+
+    # numerics / scaling (minicpm-style mup knobs)
+    dtype: str = "float32"
+    embed_scale: float = 1.0
+    residual_scale: float = 1.0
+    logit_cap: float = 0.0
+
+    # runtime switches
+    scan_layers: bool = True
+    remat: bool = False
+    attn_chunk: int = 0              # q-chunk for memory-bounded attention
+    chunk_python_loop: bool = False  # unroll inner chunk loops in HLO (dry-run
+                                     # cost accounting; see launch/dryrun.py)
+    act_sp: bool = False             # sequence-parallel activation constraints
+    mesh_axes: tuple = ()            # ((name, size), ...) for act constraints
+    use_pallas: bool = False         # kernels in the serving path (TPU)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = max(self.vocab_pad_multiple, 1)
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def compute_dtype(self):
+        return DTYPES[self.dtype]
+
+    @property
+    def d_inner(self) -> int:        # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Can this arch decode with O(1)/O(s) state at 500k context?"""
+        return self.family in ("hybrid_mamba", "rwkv")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, f, v, l = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        hd, h, kv = self.hd, self.num_heads, self.num_kv_heads
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        mlp = 3 * d * f
+        if self.family == "moe":
+            mlp = self.num_experts * 3 * d * f + d * self.num_experts
+        if self.family == "hybrid_mamba":
+            di, n, g = self.d_inner, self.ssm_state, self.ssm_heads
+            blk = d * (2 * di + 2 * n + g) + di * d + 3 * g
+            n_attn = 1 if self.attn_every else 0
+            return v * d + l * blk + n_attn * (attn + mlp) + d * v
+        if self.family == "rwkv":
+            tm = 5 * d * d + 2 * d * self.rwkv_decay_lora + 6 * d
+            cm = 2 * d * f + d * d
+            return v * d + l * (tm + cm) + d * v
+        base = v * d + l * (attn + mlp) + d * v
+        if self.family == "vlm" and self.cross_attn_every:
+            n_cross = l // self.cross_attn_every
+            base += n_cross * attn
+        if self.family == "audio" and self.num_codebooks:
+            base += (self.num_codebooks - 1) * v * d * 2
+        return base
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts) — the N in 6·N·D."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f, v, l = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        hd, h, kv = self.hd, self.num_heads, self.num_kv_heads
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        mlp_active = self.moe_top_k * 3 * d * f + d * self.num_experts
+        return v * d + l * (attn + mlp_active) + d * v
+
+    def validate(self) -> "ModelConfig":
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0 or \
+            self.family in ("rwkv",), "heads must divide kv heads"
+        if self.family == "moe":
+            assert self.num_experts > 0 and self.moe_top_k >= 1
+        if self.family == "hybrid_mamba":
+            assert self.d_inner % self.ssm_head_dim == 0
+        if self.family == "rwkv":
+            assert self.d_model % self.rwkv_head_dim == 0
+        if self.family == "audio":
+            assert self.num_codebooks > 0
+        return self
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    small = dict(
+        num_layers=max(2, (cfg.attn_every or cfg.cross_attn_every or 0) or 2),
+        d_model=64, num_heads=4, num_kv_heads=min(cfg.num_kv_heads, 4) or 4,
+        d_ff=128, vocab_size=128, max_seq_len=256,
+        head_dim=16,
+        num_experts=min(cfg.num_experts, 4),
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+        rwkv_head_dim=16, rwkv_decay_lora=8, rwkv_chunk=8,
+        vision_seq=24,
+        vocab_pad_multiple=1,
+        dtype="float32", scan_layers=cfg.scan_layers, remat=False,
+    )
+    if cfg.family == "hybrid_mamba":
+        small["num_layers"] = 2 * (cfg.attn_every or 2)
+    if cfg.family == "vlm":
+        small["num_layers"] = 2 * (cfg.cross_attn_every or 2)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small).validate()

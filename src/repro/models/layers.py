@@ -1,0 +1,143 @@
+"""Primitive layers shared by every family (pure functions, params = pytrees).
+
+``linear`` dispatches on the param leaf: a plain array applies x @ W; a
+quantized dict {"w_tilde", "lora_a", "lora_b"} applies the QERA serving form
+x @ W̃ + (x @ A) @ B (optionally through the fused Pallas kernel when the
+packed representation {"mant", "exp", ...} is present and use_pallas is on).
+
+``Taps`` implements calibration capture: when a Taps object is threaded
+through a forward pass, every linear records its *input* statistics keyed by
+the layer path — exactly what the QERA solvers consume.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+
+class Taps:
+    """Calibration stats collector (host side, python-loop forwards only)."""
+
+    def __init__(self, with_outer: bool = True):
+        self.with_outer = with_outer
+        self.stats: dict[str, Any] = {}
+
+    def record(self, name: str, x: jax.Array) -> None:
+        from repro.core.calibration import StreamingStats
+        acc = self.stats.get(name)
+        if acc is None:
+            acc = self.stats[name] = StreamingStats(
+                dim=x.shape[-1], with_outer=self.with_outer)
+        acc.update(x)
+
+    def layer_stats(self) -> dict[str, Any]:
+        return {k: v.as_layer_stats() for k, v in self.stats.items()}
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def linear(p: Any, x: jax.Array, *, taps: Taps | None = None,
+           name: str = "", use_pallas: bool = False) -> jax.Array:
+    """x @ W for plain leaves; QER form for quantized dicts.
+
+    Packed dicts ({"mant","exp",...}) dispatch to the fused Pallas kernel on
+    TPU or to an in-graph dequant (GSPMD-shardable; weights stream as int8 —
+    the serving memory-roofline win) elsewhere.
+    """
+    if taps is not None and name:
+        taps.record(name, x)
+    if isinstance(p, Mapping):
+        if "mant" in p:
+            if use_pallas:
+                from repro.kernels.ops import quantized_matmul
+                return quantized_matmul(
+                    x, p["mant"], p["exp"], p["lora_a"], p["lora_b"],
+                    bits=int(p["bits"]), block_size=int(p["block_size"]))
+            mant, exp = p["mant"], p["exp"]
+            bs = mant.shape[-2] // exp.shape[-2]      # static from shapes
+            scale = jnp.exp2(exp.astype(jnp.float32)
+                             - (p["bits"].astype(jnp.float32) - 2))
+            w = (mant.astype(jnp.float32)
+                 * jnp.repeat(scale, bs, axis=-2)).astype(x.dtype)
+            y = x @ w
+            t = x @ p["lora_a"].astype(x.dtype)
+            return y + t @ p["lora_b"].astype(x.dtype)
+        w = p["w_tilde"]
+        y = x @ w.astype(x.dtype)
+        t = x @ p["lora_a"].astype(x.dtype)
+        return y + t @ p["lora_b"].astype(x.dtype)
+    return x @ p.astype(x.dtype)
+
+
+def embed(table: jax.Array, ids: jax.Array, scale: float = 1.0) -> jax.Array:
+    out = jnp.take(table, ids, axis=0)
+    return out * scale if scale != 1.0 else out
+
+
+def swiglu(p: Mapping[str, Any], x: jax.Array, *, taps=None, prefix="",
+           use_pallas=False, constrain=None) -> jax.Array:
+    g = linear(p["wg"], x, taps=taps, name=f"{prefix}wg", use_pallas=use_pallas)
+    u = linear(p["wu"], x, taps=taps, name=f"{prefix}wu", use_pallas=use_pallas)
+    if constrain is not None:
+        # pin hidden activations (and thus their backward cotangents — the
+        # transpose of a sharding constraint is the same constraint) to
+        # batch-on-data + TP-on-ffn; without this GSPMD reshards cotangents
+        # to batch-REPLICATED layouts and all-reduces (B,S,F) tensors.
+        g = constrain(g, ("dp", None, "model"))
+        u = constrain(u, ("dp", None, "model"))
+    h = jax.nn.silu(g) * u
+    return linear(p["wd"], h, taps=taps, name=f"{prefix}wd", use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, max_seq: int, theta: float) -> jax.Array:
+    """(max_seq, head_dim//2) complex rotation angles."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_seq, dtype=jnp.float32)
+    return jnp.outer(t, inv)          # (S, hd/2)
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (..., S, hd); angles: (S, hd/2) — rotate interleaved pairs."""
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def init_dense(key: jax.Array, shape, scale: float | None = None,
+               dtype=jnp.float32) -> jax.Array:
+    if scale is None:
+        scale = 1.0 / (shape[-2] ** 0.5) if len(shape) >= 2 else 0.02
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def key_iter(key: jax.Array):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub

@@ -1,0 +1,213 @@
+"""Mamba2 (SSD) block — chunked-parallel scan, TPU-friendly.
+
+State-space duality formulation (Dao & Gu 2024), minimal but faithful:
+
+  h_t = exp(dt_t·A_head) · h_{t-1} + dt_t · B_t ⊗ x_t      (state (P, N))
+  y_t = C_t · h_t + D_head · x_t
+
+Chunked algorithm (chunk length Lc): within a chunk the output is an
+attention-like masked matmul with cumulative-decay weights (MXU work); the
+inter-chunk state is carried by a lax.scan — O(S·Lc) instead of O(S²),
+numerically safe because all exponents are differences of a monotone
+cumulative sum (≤ 0).
+
+Shapes: d_inner = expand·d_model, P = ssm_head_dim, H = d_inner/P,
+N = ssm_state, G (B/C groups) = 1.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import linear, rms_norm
+
+
+def mamba2_param_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    """Projections are SPLIT per segment (z/x/B/C/dt) instead of one fused
+    in_proj: each output axis then has a single logical meaning and shards
+    cleanly under TP (fused axes would mix segments across model shards)."""
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    return {
+        "w_z": (d, di),
+        "w_x": (d, di),
+        "w_b": (d, n),
+        "w_c": (d, n),
+        "w_dt": (d, h),
+        "conv_x": (w, di),
+        "conv_b": (w, n),
+        "conv_c": (w, n),
+        "a_log": (h,),
+        "dt_bias": (h,),
+        "d_skip": (h,),
+        "gate_norm": (di,),
+        "out_proj": (di, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv, width W.  x: (B, S, C); w: (W, C).
+
+    state: (B, W-1, C) previous inputs (decode) — returns (y, new_state).
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):, :]
+    return y, new_state
+
+
+def _projections(p, x, cfg: ModelConfig, cache, taps, prefix, use_pallas,
+                 constrain=None):
+    """Split z/x/B/C/dt projections + per-segment causal convs."""
+    if constrain is not None:
+        x = constrain(x, ("dp", None, None))
+    z = linear(p["w_z"], x, taps=taps, name=f"{prefix}w_z", use_pallas=use_pallas)
+    xr = linear(p["w_x"], x, taps=taps, name=f"{prefix}w_x", use_pallas=use_pallas)
+    br = linear(p["w_b"], x, taps=taps, name=f"{prefix}w_b", use_pallas=use_pallas)
+    cr = linear(p["w_c"], x, taps=taps, name=f"{prefix}w_c", use_pallas=use_pallas)
+    dt = linear(p["w_dt"], x, taps=taps, name=f"{prefix}w_dt", use_pallas=use_pallas)
+    if constrain is not None:
+        z = constrain(z, ("dp", None, "model"))
+        xr = constrain(xr, ("dp", None, "model"))
+        br = constrain(br, ("dp", None, None))
+        cr = constrain(cr, ("dp", None, None))
+    cs = {} if cache is None else cache
+    xc, st_x = _causal_conv(xr, p["conv_x"], cs.get("conv_x"))
+    bc, st_b = _causal_conv(br, p["conv_b"], cs.get("conv_b"))
+    cc, st_c = _causal_conv(cr, p["conv_c"], cs.get("conv_c"))
+    conv_state = {"conv_x": st_x, "conv_b": st_b, "conv_c": st_c}
+    return (z, jax.nn.silu(xc), jax.nn.silu(bc), jax.nn.silu(cc), dt,
+            conv_state)
+
+
+def mamba2_block(p: Mapping[str, Any], x: jax.Array, cfg: ModelConfig, *,
+                 cache: Mapping[str, jax.Array] | None = None,
+                 constrain=None,
+                 taps=None, prefix: str = "", use_pallas: bool = False):
+    """x: (B, S, D) -> (out, new_cache).
+    cache = {"conv_x","conv_b","conv_c","ssm"} for decode."""
+    b, s, d = x.shape
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z, xs_, bmat, cmat, dt, conv_state = _projections(
+        p, x, cfg, cache, taps, prefix, use_pallas, constrain=constrain)
+    xin = xs_.reshape(b, s, h, pdim)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))     # (H,) negative
+    la = dt * a                                      # (B, S, H) log-decay ≤ 0
+    dt_x = (dt[..., None] * xin.astype(jnp.float32))  # (B, S, H, P)
+
+    h0 = (jnp.zeros((b, h, pdim, n), jnp.float32) if cache is None
+          else cache["ssm"].astype(jnp.float32))
+
+    lc = max(1, min(cfg.ssm_chunk, s))
+    if s % lc:
+        lc = 1
+    nc = s // lc
+
+    def chunk(carry, xs):
+        h_in = carry
+        la_c, dtx_c, b_c, c_c = xs        # (Lc,B,H) (Lc,B,H,P) (Lc,B,N) (Lc,B,N)
+        cum = jnp.cumsum(la_c, axis=0)    # (Lc, B, H) inclusive
+        # intra-chunk: att[t, s'] = (C_t·B_s') exp(cum_t − cum_s'), s' ≤ t
+        cb = jnp.einsum("tbn,ubn->tub", c_c, b_c)           # (Lc, Lc, B)
+        mask = jnp.tril(jnp.ones((cum.shape[0], cum.shape[0]), bool))
+        delta = cum[:, None] - cum[None, :]                 # (Lc, Lc, B, H)
+        # mask BEFORE exp: above-diagonal deltas are positive and would
+        # overflow; exp(-inf) = 0 kills them exactly.
+        delta = jnp.where(mask[:, :, None, None], delta, -jnp.inf)
+        w_att = cb[..., None] * jnp.exp(delta)
+        y_intra = jnp.einsum("tubh,ubhp->tbhp", w_att, dtx_c)
+        # inter-chunk: y_state[t] = exp(cum_t) · C_t · h_in
+        y_state = jnp.einsum("tbn,bhpn->tbhp", c_c, h_in) * \
+            jnp.exp(cum)[..., None]
+        # state update: h_out = exp(cum_L) h_in + Σ exp(cum_L − cum_s) dtx⊗B
+        wlast = jnp.exp(cum[-1] - cum)                      # (Lc, B, H)
+        dstate = jnp.einsum("tbh,tbhp,tbn->bhpn", wlast, dtx_c, b_c)
+        h_out = h_in * jnp.exp(cum[-1])[..., None, None] + dstate
+        return h_out, y_intra + y_state
+
+    bm32 = bmat.astype(jnp.float32)
+    cm32 = cmat.astype(jnp.float32)
+    if cfg.chunk_python_loop:
+        # unrolled in HLO so the dry-run cost model sees every chunk; chunks
+        # are sliced from the NATURAL (B,S,...) layout (chunk-sized slices +
+        # small transposes — avoids per-chunk copies of the stacked array)
+        def chunk_at(a, i):
+            sl = a[:, i * lc:(i + 1) * lc]
+            return jnp.moveaxis(sl, 1, 0)
+        h_cur, ys_list = h0, []
+        for i in range(nc):
+            xs_i = (chunk_at(la, i), chunk_at(dt_x, i),
+                    chunk_at(bm32, i), chunk_at(cm32, i))
+            h_cur, y_i = chunk(h_cur, xs_i)
+            ys_list.append(y_i)
+        h_last, ys = h_cur, jnp.stack(ys_list)
+    else:
+        la_s = la.reshape(b, nc, lc, h)
+        dtx_s = dt_x.reshape(b, nc, lc, h, pdim)
+        b_s = bm32.reshape(b, nc, lc, n)
+        c_s = cm32.reshape(b, nc, lc, n)
+        xs = (jnp.moveaxis(la_s, 1, 0).transpose(0, 2, 1, 3),
+              jnp.moveaxis(dtx_s, 1, 0).transpose(0, 2, 1, 3, 4),
+              jnp.moveaxis(b_s, 1, 0).transpose(0, 2, 1, 3),
+              jnp.moveaxis(c_s, 1, 0).transpose(0, 2, 1, 3))
+        h_last, ys = jax.lax.scan(chunk, h0, xs)     # ys: (nc, Lc, B, H, P)
+    y = jnp.moveaxis(ys.reshape(nc * lc, b, h, pdim), 0, 1)  # (B, S, H, P)
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * \
+        xin.astype(jnp.float32)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = linear(p["out_proj"], y, taps=taps, name=f"{prefix}out_proj",
+                 use_pallas=use_pallas)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            **{k: v.astype(cache[k].dtype) for k, v in conv_state.items()},
+            "ssm": h_last.astype(cache["ssm"].dtype),
+        }
+    return out, new_cache
+
+
+def mamba2_block_ref(p: Mapping[str, Any], x: jax.Array, cfg: ModelConfig):
+    """Per-timestep scan oracle (tests only)."""
+    b, s, d = x.shape
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs_, bmat, cmat, dt, _ = _projections(
+        p, x, cfg, None, None, "", False)
+    xin = xs_.reshape(b, s, h, pdim).astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    def step(hprev, xs):
+        xt, bt, ct, dtt = xs              # (B,H,P) (B,N) (B,N) (B,H)
+        decay = jnp.exp(dtt * a)          # (B, H)
+        upd = jnp.einsum("bhp,bn->bhpn", dtt[..., None] * xt, bt)
+        hnew = hprev * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", hnew, ct)
+        return hnew, yt
+
+    h0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(xin, 1, 0),
+                                    jnp.moveaxis(bmat, 1, 0),
+                                    jnp.moveaxis(cmat, 1, 0),
+                                    jnp.moveaxis(dt, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xin
+    y = y.reshape(b, s, di)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return linear(p["out_proj"], y)

@@ -1,0 +1,93 @@
+"""Top-k routed Mixture-of-Experts with sort-based capacity dispatch.
+
+TPU-native design (DESIGN.md §5): instead of the dense one-hot dispatch
+einsum (O(T·E·C) memory — prohibitive at 128 experts), tokens are *sorted*
+by expert id and scattered into an (E, C, D) buffer:
+
+  1. router logits -> top-k (gate, expert) per token
+  2. stable-sort the T·k assignments by expert id
+  3. position-in-expert = rank within the sorted segment; drop > capacity
+  4. gather/scatter into (E, C, D); expert GEMMs as one batched einsum
+  5. combine: gather back + weighted scatter-add
+
+Under GSPMD the expert axis shards over 'model' (EP); the sort/gather lower
+to all-to-all-style collectives.  Capacity C = ceil(T·k/E · capacity_factor).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear
+
+
+def _capacity(tokens: int, k: int, num_experts: int, factor: float) -> int:
+    c = int(tokens * k * factor / num_experts) + 1
+    return max(8, ((c + 7) // 8) * 8)   # pad to sublane multiple
+
+
+def moe_block(p: Mapping[str, Any], x: jax.Array, *, num_experts: int,
+              top_k: int, capacity_factor: float = 1.25,
+              taps=None, prefix: str = "", use_pallas: bool = False):
+    """x: (B, S, D) -> (B, S, D); router in fp32 (precision-critical).
+
+    Returns (out, aux) with aux = load-balancing loss (Switch-style).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)      # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # Switch load-balance aux loss: E * mean(frac_tokens * frac_probs)
+    counts = jnp.sum(jax.nn.one_hot(expert_ids[:, 0], num_experts), axis=0)
+    aux = num_experts * jnp.mean(
+        (counts / t) * jnp.mean(probs, axis=0))
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_e = expert_ids.reshape(-1)                          # (T*k,)
+    flat_g = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    g_sorted = flat_g[order]
+
+    seg_counts = jnp.bincount(e_sorted, length=num_experts)
+    seg_starts = jnp.cumsum(seg_counts) - seg_counts         # exclusive
+    pos_in_e = jnp.arange(t * top_k) - seg_starts[e_sorted]
+
+    cap = _capacity(t, top_k, num_experts, capacity_factor)
+    keep = pos_in_e < cap
+    pos_c = jnp.where(keep, pos_in_e, 0)
+
+    if taps is not None:
+        taps.record(f"{prefix}experts", xt)
+
+    buf = jnp.zeros((num_experts, cap, d), x.dtype)
+    gathered = jnp.where(keep[:, None], xt[tok_sorted], 0.0)
+    buf = buf.at[e_sorted, pos_c].set(gathered.astype(x.dtype), mode="drop")
+
+    # ---- expert compute (batched SwiGLU) --------------------------------
+    def eapply(w, h):  # w: (E, din, dout) possibly quantized dict
+        if isinstance(w, Mapping):
+            y = jnp.einsum("ecd,edf->ecf", h, w["w_tilde"].astype(h.dtype))
+            tl = jnp.einsum("ecd,edr->ecr", h, w["lora_a"].astype(h.dtype))
+            return y + jnp.einsum("ecr,erf->ecf", tl, w["lora_b"].astype(h.dtype))
+        return jnp.einsum("ecd,edf->ecf", h, w.astype(h.dtype))
+
+    hgate = eapply(p["wg"], buf)
+    hup = eapply(p["wu"], buf)
+    hout = eapply(p["wd"], jax.nn.silu(hgate) * hup)          # (E, C, D)
+
+    # ---- combine ---------------------------------------------------------
+    back = hout[e_sorted, pos_c]                              # (T*k, D)
+    back = back * (g_sorted * keep).astype(back.dtype)[:, None]
+    out = jnp.zeros((t, d), back.dtype).at[tok_sorted].add(back)
+    return out.reshape(b, s, d).astype(x.dtype), aux

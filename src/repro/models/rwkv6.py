@@ -1,0 +1,214 @@
+"""RWKV-6 ("Finch") block — data-dependent-decay linear attention.
+
+Time-mix recurrence per head (dk = dv = head_dim), decay on the key dim:
+
+  S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+  y_t = r_t @ S_{t-1} + (r_t · (u ∘ k_t)) v_t          (u = per-head bonus)
+
+The Finch hallmark is w_t = exp(-exp(w0 + lora(x̄_t))) — *data-dependent*
+per-channel decay.  Chunked-parallel evaluation works in log space: all
+weights are exp of differences of a monotone cumulative sum (≤ 0 within a
+chunk), so no overflow for any chunk length.
+
+Channel-mix is the standard squared-ReLU MLP with token shift.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import linear, rms_norm
+
+
+def rwkv6_param_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, f, hd, lo = cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim, cfg.rwkv_decay_lora
+    h = cfg.rwkv_heads
+    return {
+        # time-mix
+        "mu_r": (d,), "mu_k": (d,), "mu_v": (d,), "mu_g": (d,), "mu_w": (d,),
+        "w_r": (d, d), "w_k": (d, d), "w_v": (d, d), "w_g": (d, d),
+        "w_o": (d, d),
+        "decay_w0": (d,), "decay_a": (d, lo), "decay_b": (lo, d),
+        "bonus_u": (h, hd),
+        "ln_x": (d,),
+        # channel-mix
+        "mu_kc": (d,), "mu_rc": (d,),
+        "w_kc": (d, f), "w_vc": (f, d), "w_rc": (d, d),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """x_{t-1} per position; position 0 uses ``last`` (decode cache) or 0."""
+    if last is None:
+        last = jnp.zeros((x.shape[0], 1, x.shape[-1]), x.dtype)
+    else:
+        last = last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([last, x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xprev, mu):
+    return x + (xprev - x) * mu.astype(x.dtype)
+
+
+def rwkv6_time_mix(p, x, cfg: ModelConfig, *, state=None, last=None,
+                   constrain=None, taps=None, prefix="", use_pallas=False):
+    """x: (B,S,D) -> (out, (S_out, x_last)).  state: (B,H,dk,dv)."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    xprev = _shift(x, last)
+    if constrain is not None:
+        # keep batch on 'data' through the elementwise/lerp ops; TP ('model')
+        # lands on the projection outputs (-> head dim in the recurrence)
+        x = constrain(x, ("dp", None, None))
+        xprev = constrain(xprev, ("dp", None, None))
+
+    r = linear(p["w_r"], _lerp(x, xprev, p["mu_r"]), taps=taps,
+               name=f"{prefix}w_r", use_pallas=use_pallas)
+    k = linear(p["w_k"], _lerp(x, xprev, p["mu_k"]), taps=taps,
+               name=f"{prefix}w_k", use_pallas=use_pallas)
+    v = linear(p["w_v"], _lerp(x, xprev, p["mu_v"]), taps=taps,
+               name=f"{prefix}w_v", use_pallas=use_pallas)
+    g = linear(p["w_g"], _lerp(x, xprev, p["mu_g"]), taps=taps,
+               name=f"{prefix}w_g", use_pallas=use_pallas)
+    if constrain is not None:
+        r, k, v, g = (constrain(t, ("dp", None, "model")) for t in (r, k, v, g))
+
+    # data-dependent decay (the Finch mechanism); kept fp32 + fp params
+    xw = _lerp(x, xprev, p["mu_w"]).astype(jnp.float32)
+    dyn = jnp.tanh(xw @ p["decay_a"].astype(jnp.float32)) @ \
+        p["decay_b"].astype(jnp.float32)
+    logw = -jnp.exp(p["decay_w0"].astype(jnp.float32) + dyn)   # (B,S,D) ≤ 0
+    # clamp per-step log-decay: exp(-8) ≈ 3e-4 retention — anything below is
+    # numerically dead, and the clamp bounds intra-chunk exp() ranges so the
+    # factored chunk evaluation can never overflow f32 (see chunk()).
+    logw = jnp.maximum(logw, -8.0)
+
+    rh = r.reshape(b, s, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hd).astype(jnp.float32)
+    lw = logw.reshape(b, s, h, hd)
+    u = p["bonus_u"].astype(jnp.float32)                        # (H, hd)
+
+    s0 = (jnp.zeros((b, h, hd, hd), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+
+    lc = max(1, min(cfg.rwkv_chunk, s))
+    if s % lc:
+        lc = 1
+    nc = s // lc
+
+    def chunk(carry, xs):
+        s_in = carry
+        r_c, k_c, v_c, lw_c = xs           # each (Lc, B, H, hd)
+        cum = jnp.cumsum(lw_c, axis=0)     # inclusive (Lc, B, H, hd)
+        # y_t = r_t @ S_{t-1}-decayed-in + intra + bonus-diag
+        # S_{t-1} holds k_s v_s decayed by prod_{u=s+1..t-1} w = exp(cum_{t-1}-cum_s)
+        cum_prev = jnp.concatenate([jnp.zeros_like(cum[:1]), cum[:-1]], 0)
+        # intra (s' < t):  (r_t ∘ exp(cum_{t-1} − cum_s)) · k_s.
+        # Factored with a mid-chunk reference offset so each factor's exponent
+        # is bounded by (Lc/2)·8 < 88 (f32 exp overflow) given the logw clamp.
+        cref = cum[cum.shape[0] // 2]      # (B, H, hd)
+        att = jnp.einsum("tbhd,ubhd->tubh",
+                         r_c * jnp.exp(cum_prev - cref),
+                         k_c * jnp.exp(cref - cum))
+        tri = jnp.tril(jnp.ones((cum.shape[0], cum.shape[0]), bool), k=-1)
+        # masked (above-diagonal) entries may have overflowed to inf — they
+        # are exp() of *positive* log-decay sums; where() (not multiply, which
+        # would produce inf*0=NaN) zeroes them exactly.
+        att = jnp.where(tri[:, :, None, None], att, 0.0)
+        y = jnp.einsum("tubh,ubhd->tbhd", att, v_c)
+        # bonus diagonal: (r_t · (u ∘ k_t)) v_t
+        diag = jnp.einsum("tbhd,hd,tbhd->tbh", r_c, u, k_c)
+        y = y + diag[..., None] * v_c
+        # state term: r_t ∘ exp(cum_{t-1}) @ S_in
+        y = y + jnp.einsum("tbhk,bhkv->tbhv", r_c * jnp.exp(cum_prev), s_in)
+        # state update: S_out = diag(exp(cum_L)) S_in + Σ exp(cum_L − cum_s) k⊗v
+        s_out = s_in * jnp.exp(cum[-1])[..., None] + jnp.einsum(
+            "tbhk,tbhv->bhkv", k_c * jnp.exp(cum[-1][None] - cum), v_c)
+        return s_out, y
+
+    def to_chunks(a):  # (B,S,H,hd) -> (nc, Lc, B, H, hd)
+        return jnp.moveaxis(a.reshape(b, nc, lc, h, hd), 1, 0).transpose(0, 2, 1, 3, 4)
+
+    if cfg.chunk_python_loop:
+        # unrolled in HLO so the dry-run cost model sees every chunk; chunks
+        # are sliced from the NATURAL (B,S,H,hd) layout (chunk-sized slices +
+        # small transposes — avoids per-chunk copies of the stacked array)
+        def chunk_at(a, i):
+            return a[:, i * lc:(i + 1) * lc].transpose(1, 0, 2, 3)
+        s_cur, ys_list = s0, []
+        for i in range(nc):
+            xs_i = tuple(chunk_at(a, i) for a in (rh, kh, vh, lw))
+            s_cur, y_i = chunk(s_cur, xs_i)
+            ys_list.append(y_i)
+        s_last, ys = s_cur, jnp.stack(ys_list)
+    else:
+        xs = (to_chunks(rh), to_chunks(kh), to_chunks(vh), to_chunks(lw))
+        s_last, ys = jax.lax.scan(chunk, s0, xs)
+    y = jnp.moveaxis(ys.reshape(nc * lc, b, h, hd), 0, 1)       # (B,S,H,hd)
+
+    # per-head group norm, then output gate
+    y = y.reshape(b, s, d)
+    y = rms_norm(y.astype(x.dtype), p["ln_x"], cfg.norm_eps)
+    y = y * jax.nn.silu(g)
+    out = linear(p["w_o"], y, taps=taps, name=f"{prefix}w_o",
+                 use_pallas=use_pallas)
+    return out, (s_last, x[:, -1, :])
+
+
+def rwkv6_channel_mix(p, x, cfg: ModelConfig, *, last=None, constrain=None,
+                      taps=None, prefix="", use_pallas=False):
+    xprev = _shift(x, last)
+    if constrain is not None:
+        x = constrain(x, ("dp", None, None))
+        xprev = constrain(xprev, ("dp", None, None))
+    k = linear(p["w_kc"], _lerp(x, xprev, p["mu_kc"]), taps=taps,
+               name=f"{prefix}w_kc", use_pallas=use_pallas)
+    k = jnp.square(jax.nn.relu(k))
+    v = linear(p["w_vc"], k, taps=taps, name=f"{prefix}w_vc",
+               use_pallas=use_pallas)
+    r = linear(p["w_rc"], _lerp(x, xprev, p["mu_rc"]), taps=taps,
+               name=f"{prefix}w_rc", use_pallas=use_pallas)
+    return jax.nn.sigmoid(r) * v, x[:, -1, :]
+
+
+def rwkv6_time_mix_ref(p, x, cfg: ModelConfig):
+    """Per-timestep scan oracle (tests only)."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    xprev = _shift(x)
+    r = linear(p["w_r"], _lerp(x, xprev, p["mu_r"]))
+    k = linear(p["w_k"], _lerp(x, xprev, p["mu_k"]))
+    v = linear(p["w_v"], _lerp(x, xprev, p["mu_v"]))
+    g = linear(p["w_g"], _lerp(x, xprev, p["mu_g"]))
+    xw = _lerp(x, xprev, p["mu_w"]).astype(jnp.float32)
+    dyn = jnp.tanh(xw @ p["decay_a"].astype(jnp.float32)) @ \
+        p["decay_b"].astype(jnp.float32)
+    logw = jnp.maximum(-jnp.exp(p["decay_w0"].astype(jnp.float32) + dyn), -8.0)
+    w = jnp.exp(logw)
+    rh = r.reshape(b, s, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hd).astype(jnp.float32)
+    wh = w.reshape(b, s, h, hd)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    def step(s_prev, xs):
+        rt, kt, vt, wt = xs
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, s_prev)
+        yt = yt + jnp.einsum("bhk,hk,bhk->bh", rt, u, kt)[..., None] * vt
+        s_new = s_prev * wt[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return s_new, yt
+
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, (jnp.moveaxis(rh, 1, 0),
+                                    jnp.moveaxis(kh, 1, 0),
+                                    jnp.moveaxis(vh, 1, 0),
+                                    jnp.moveaxis(wh, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)
+    y = rms_norm(y.astype(x.dtype), p["ln_x"], cfg.norm_eps)
+    y = y * jax.nn.silu(g)
+    return linear(p["w_o"], y)

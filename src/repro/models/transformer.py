@@ -1,0 +1,583 @@
+"""Model builder: init_params + forward for every architecture family.
+
+Design rules (DESIGN.md §2):
+* params are plain nested dicts of arrays — no module framework;
+* per-layer params are STACKED on a leading L axis and applied with
+  ``lax.scan`` (compile time O(1) in depth — essential for the 512-device
+  dry-run) unless ``cfg.scan_layers=False`` (python loop, used for
+  calibration Taps and debugging);
+* every linear goes through ``layers.linear`` so PTQ'd dicts and Pallas
+  packed weights drop in transparently;
+* ``forward`` returns (logits, aux, new_cache); aux carries the MoE
+  load-balance loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention_block, cross_attention_block
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    embed,
+    init_dense,
+    key_iter,
+    layer_norm,
+    linear,
+    rms_norm,
+    rope_freqs,
+    swiglu,
+)
+from repro.models.mamba2 import mamba2_block, mamba2_param_shapes
+from repro.models.moe import moe_block
+from repro.models.rwkv6 import (
+    rwkv6_channel_mix,
+    rwkv6_param_shapes,
+    rwkv6_time_mix,
+)
+
+Params = dict[str, Any]
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_attn(ks, cfg: ModelConfig, layers: int | None = None) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    lead = () if layers is None else (layers,)
+    return {
+        "wq": init_dense(next(ks), (*lead, d, h * hd)),
+        "wk": init_dense(next(ks), (*lead, d, kv * hd)),
+        "wv": init_dense(next(ks), (*lead, d, kv * hd)),
+        "wo": init_dense(next(ks), (*lead, h * hd, d)),
+    }
+
+
+def _init_mlp(ks, cfg: ModelConfig, layers: int | None = None) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    lead = () if layers is None else (layers,)
+    return {
+        "wg": init_dense(next(ks), (*lead, d, f)),
+        "wu": init_dense(next(ks), (*lead, d, f)),
+        "wd": init_dense(next(ks), (*lead, f, d)),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    cfg.validate()
+    ks = key_iter(key)
+    d, v, l = cfg.d_model, cfg.padded_vocab, cfg.num_layers
+    params: Params = {}
+
+    if cfg.family == "audio":
+        params["embed"] = {"tok": 0.02 * jax.random.normal(
+            next(ks), (cfg.num_codebooks, v, d))}
+        params["lm_head"] = init_dense(next(ks), (cfg.num_codebooks, d, v))
+    else:
+        params["embed"] = {"tok": 0.02 * jax.random.normal(next(ks), (v, d))}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_dense(next(ks), (d, v))
+    params["final_norm"] = jnp.ones((d,))
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        blocks: Params = {
+            "norm_attn": jnp.ones((l, d)),
+            "norm_mlp": jnp.ones((l, d)),
+            **_init_attn(ks, cfg, l),
+        }
+        if cfg.family == "moe":
+            e, f = cfg.num_experts, cfg.d_ff
+            blocks["router"] = 0.02 * jax.random.normal(next(ks), (l, d, e))
+            blocks["wg"] = init_dense(next(ks), (l, e, d, f))
+            blocks["wu"] = init_dense(next(ks), (l, e, d, f))
+            blocks["wd"] = init_dense(next(ks), (l, e, f, d))
+        else:
+            blocks.update(_init_mlp(ks, cfg, l))
+        params["blocks"] = blocks
+        if cfg.family == "vlm" and cfg.cross_attn_every:
+            nx = l // cfg.cross_attn_every
+            params["cross_blocks"] = {
+                "norm_x": jnp.ones((nx, d)),
+                "gate": jnp.zeros((nx,)),          # zero-init gated residual
+                **_init_attn(ks, cfg, nx),
+            }
+
+    elif cfg.family == "hybrid_mamba":
+        shapes = mamba2_param_shapes(cfg)
+        blocks = {"norm": jnp.ones((l, d))}
+        for name, shp in shapes.items():
+            if name == "a_log":
+                a0 = jnp.log(jnp.linspace(1.0, 16.0, cfg.ssm_heads))
+                blocks[name] = jnp.broadcast_to(a0, (l, *shp)).copy()
+            elif name == "dt_bias":
+                blocks[name] = jnp.full((l, *shp), -4.6)   # softplus^-1(0.01)
+            elif name in ("d_skip", "gate_norm"):
+                blocks[name] = jnp.ones((l, *shp))
+            elif name == "conv_w":
+                blocks[name] = init_dense(next(ks), (l, *shp), scale=0.2)
+            else:
+                blocks[name] = init_dense(next(ks), (l, *shp))
+        params["blocks"] = blocks
+        if cfg.attn_every:
+            params["shared_attn"] = {
+                "norm_attn": jnp.ones((d,)),
+                "norm_mlp": jnp.ones((d,)),
+                **_init_attn(ks, cfg),
+                **_init_mlp(ks, cfg),
+            }
+
+    elif cfg.family == "rwkv":
+        shapes = rwkv6_param_shapes(cfg)
+        blocks = {"norm_tm": jnp.ones((l, d)), "norm_cm": jnp.ones((l, d))}
+        for name, shp in shapes.items():
+            if name.startswith("mu_"):
+                blocks[name] = jax.random.uniform(next(ks), (l, *shp))
+            elif name == "decay_w0":
+                blocks[name] = jax.random.uniform(next(ks), (l, *shp),
+                                                  minval=-2.0, maxval=1.0)
+            elif name == "bonus_u":
+                blocks[name] = 0.1 * jax.random.normal(next(ks), (l, *shp))
+            elif name == "ln_x":
+                blocks[name] = jnp.ones((l, *shp))
+            else:
+                blocks[name] = init_dense(next(ks), (l, *shp))
+        params["blocks"] = blocks
+
+    elif cfg.family == "encoder":
+        params["embed"]["pos"] = 0.02 * jax.random.normal(
+            next(ks), (cfg.max_seq_len, d))
+        params["blocks"] = {
+            "norm1_scale": jnp.ones((l, d)), "norm1_bias": jnp.zeros((l, d)),
+            "norm2_scale": jnp.ones((l, d)), "norm2_bias": jnp.zeros((l, d)),
+            **_init_attn(ks, cfg, l),
+            "wi": init_dense(next(ks), (l, d, cfg.d_ff)),
+            "wo_mlp": init_dense(next(ks), (l, cfg.d_ff, d)),
+        }
+        if cfg.num_classes:
+            params["classifier"] = {
+                "dense": init_dense(next(ks), (d, d)),
+                "out": init_dense(next(ks), (d, cfg.num_classes)),
+            }
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return params
+
+
+# ===========================================================================
+# per-layer block applications
+# ===========================================================================
+
+def _dense_block(cfg: ModelConfig, p, x, angles, cache=None, cache_len=None,
+                 taps=None, prefix="", constrain=None):
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    attn_out, new_cache = attention_block(
+        p, h, angles, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.hd, causal=True, chunk=cfg.attn_chunk,
+        python_loop=cfg.chunk_python_loop, cache=cache,
+        cache_len=cache_len, constrain=constrain, taps=taps,
+        prefix=f"{prefix}attn/", use_pallas=cfg.use_pallas)
+    x = x + cfg.residual_scale * attn_out
+    aux = jnp.zeros((), jnp.float32)
+
+    h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    if cfg.family == "moe":
+        mlp_out, aux = moe_block(
+            p, h, num_experts=cfg.num_experts, top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor, taps=taps,
+            prefix=f"{prefix}moe/", use_pallas=cfg.use_pallas)
+    else:
+        mlp_out = swiglu(p, h, taps=taps, prefix=f"{prefix}mlp/",
+                         use_pallas=cfg.use_pallas, constrain=constrain)
+    x = x + cfg.residual_scale * mlp_out
+    return x, new_cache, aux
+
+
+def _cross_block(cfg: ModelConfig, cp, x, image_embeds, taps=None, prefix=""):
+    hx = rms_norm(x, cp["norm_x"], cfg.norm_eps)
+    xo = cross_attention_block(
+        cp, hx, image_embeds, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+        taps=taps, prefix=f"{prefix}xattn/", use_pallas=cfg.use_pallas)
+    return x + jnp.tanh(cp["gate"]).astype(x.dtype) * xo
+
+
+def _shared_attn_block(cfg: ModelConfig, p, x, angles, cache=None,
+                       cache_len=None, taps=None, prefix="", constrain=None):
+    """zamba2's shared full transformer block (attention + MLP)."""
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    attn_out, new_cache = attention_block(
+        p, h, angles, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.hd, causal=True, chunk=cfg.attn_chunk,
+        python_loop=cfg.chunk_python_loop, cache=cache,
+        cache_len=cache_len, constrain=constrain, taps=taps,
+        prefix=f"{prefix}shared_attn/", use_pallas=cfg.use_pallas)
+    x = x + attn_out
+    h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    x = x + swiglu(p, h, taps=taps, prefix=f"{prefix}shared_mlp/",
+                   use_pallas=cfg.use_pallas, constrain=constrain)
+    return x, new_cache
+
+
+def _rwkv_block(cfg: ModelConfig, p, x, cache=None, taps=None, prefix="",
+                constrain=None):
+    h = rms_norm(x, p["norm_tm"], cfg.norm_eps)
+    state = last_tm = last_cm = None
+    if cache is not None:
+        state, last_tm, last_cm = cache["state"], cache["last_tm"], cache["last_cm"]
+    tm_out, (state_new, xlast) = rwkv6_time_mix(
+        p, h, cfg, state=state, last=last_tm, constrain=constrain, taps=taps,
+        prefix=f"{prefix}tm/", use_pallas=cfg.use_pallas)
+    x = x + tm_out
+    h = rms_norm(x, p["norm_cm"], cfg.norm_eps)
+    cm_out, clast = rwkv6_channel_mix(p, h, cfg, last=last_cm,
+                                      constrain=constrain, taps=taps,
+                                      prefix=f"{prefix}cm/",
+                                      use_pallas=cfg.use_pallas)
+    x = x + cm_out
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": state_new.astype(cache["state"].dtype),
+                     "last_tm": xlast.astype(cache["last_tm"].dtype),
+                     "last_cm": clast.astype(cache["last_cm"].dtype)}
+    return x, new_cache
+
+
+def _encoder_block(cfg: ModelConfig, p, x, taps=None, prefix=""):
+    h = layer_norm(x, p["norm1_scale"], p["norm1_bias"], cfg.norm_eps)
+    attn_out, _ = attention_block(
+        p, h, jnp.zeros((x.shape[1], cfg.hd // 2)),   # zero angles == no RoPE
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.hd, causal=False, chunk=cfg.attn_chunk,
+        taps=taps, prefix=f"{prefix}attn/", use_pallas=cfg.use_pallas)
+    x = x + attn_out
+    h = layer_norm(x, p["norm2_scale"], p["norm2_bias"], cfg.norm_eps)
+    h = jax.nn.gelu(linear(p["wi"], h, taps=taps, name=f"{prefix}mlp/wi",
+                           use_pallas=cfg.use_pallas))
+    x = x + linear(p["wo_mlp"], h, taps=taps, name=f"{prefix}mlp/wo_mlp",
+                   use_pallas=cfg.use_pallas)
+    return x
+
+
+# ===========================================================================
+# forward
+# ===========================================================================
+
+def _split_scan_static(blocks):
+    """Separate 0-dim leaves (packed-format bits/block_size metadata) from a
+    stacked-blocks tree: lax.scan xs need a leading scan axis."""
+    from repro.utils.trees import flatten_dict, unflatten_dict
+    flat = flatten_dict(dict(blocks))
+    static = {k: v for k, v in flat.items() if getattr(v, "ndim", 1) == 0}
+    dyn = unflatten_dict({k: v for k, v in flat.items() if k not in static})
+    return dyn, static
+
+
+def _merge_static(p_i, static):
+    if not static:
+        return p_i
+    from repro.utils.trees import flatten_dict, unflatten_dict
+    flat = flatten_dict(dict(p_i))
+    flat.update(static)
+    return unflatten_dict(flat)
+
+
+def _layer_slice(tree, i):
+    # 0-dim leaves are per-linear metadata (packed-format bits/block_size) —
+    # shared across layers, not stacked
+    return jax.tree.map(lambda a: a[i] if getattr(a, "ndim", 1) else a, tree)
+
+
+def _dyn_slice(tree, i):
+    return jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
+        a, i, axis=0, keepdims=False), tree)
+
+
+def forward(params: Params, batch: Mapping[str, jax.Array], cfg: ModelConfig,
+            *, cache: Params | None = None, cache_len: jax.Array | None = None,
+            taps=None):
+    """batch["tokens"]: (B, S) ids — audio: (B, K, S).
+    Returns (logits, aux, new_cache); logits (B, S, V) ((B, K, S, V) audio).
+    """
+    tokens = batch["tokens"]
+    dtype = cfg.compute_dtype
+    has_cache = cache is not None
+
+    if cfg.family == "audio":
+        embs = jax.vmap(lambda t, i: embed(t, i))(
+            params["embed"]["tok"], tokens.swapaxes(0, 1))
+        x = jnp.sum(embs, axis=0).astype(dtype)
+        b, s = tokens.shape[0], tokens.shape[-1]
+    else:
+        x = embed(params["embed"]["tok"], tokens, cfg.embed_scale).astype(dtype)
+        b, s = tokens.shape
+
+    pos0 = jnp.zeros((), jnp.int32) if cache_len is None else cache_len
+    all_angles = rope_freqs(cfg.hd, cfg.max_seq_len, cfg.rope_theta)
+    if getattr(pos0, "ndim", 0) == 1:
+        # per-row positions (continuous-batching decode, s == 1)
+        angles = jnp.take(all_angles, pos0, axis=0)[:, None, None, :]
+    else:
+        angles = jax.lax.dynamic_slice_in_dim(all_angles, pos0, s, axis=0)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Params | None = {} if has_cache else None
+    blocks = params["blocks"]
+    image_embeds = None
+    if cfg.family == "vlm":
+        image_embeds = batch["image_embeds"].astype(dtype)
+
+    use_scan = cfg.scan_layers and taps is None
+    dummy_xs = jnp.zeros((cfg.num_layers,))
+    constrain = None
+    if cfg.act_sp and cfg.mesh_axes:
+        from repro.sharding.rules import make_act_constrainer
+        constrain = make_act_constrainer(tuple(cfg.mesh_axes))
+
+    # ---------------- layer stack ------------------------------------------
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        every = cfg.cross_attn_every if cfg.family == "vlm" else 0
+        cross_blocks = params.get("cross_blocks")
+
+        if use_scan:
+            blocks_dyn, blocks_static = _split_scan_static(blocks)
+
+            def body(carry, xs):
+                xcur, auxc = carry
+                p_i, idx, cache_i = xs
+                p_i = _merge_static(p_i, blocks_static)
+                xcur, cache_o, aux = _dense_block(
+                    cfg, p_i, xcur, angles,
+                    cache=cache_i if has_cache else None, cache_len=cache_len,
+                    constrain=constrain)
+                if constrain is not None and not has_cache:
+                    # sequence-parallel residual stream: remat residuals and
+                    # norm/elementwise work shard S over 'model'
+                    xcur = constrain(xcur, ("dp", "model", None))
+                if every:
+                    cp = _dyn_slice(cross_blocks, idx // every)
+                    xcur = jax.lax.cond(
+                        (idx + 1) % every == 0,
+                        lambda xc: _cross_block(cfg, cp, xc, image_embeds),
+                        lambda xc: xc, xcur)
+                return (xcur, auxc + aux), cache_o
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            idxs = jnp.arange(cfg.num_layers)
+            (x, aux_total), caches_o = jax.lax.scan(
+                body_fn, (x, aux_total),
+                (blocks_dyn, idxs, cache["blocks"] if has_cache else dummy_xs))
+            if has_cache:
+                new_cache["blocks"] = caches_o
+        else:
+            # remat in the unrolled path too, so dry-run cost compiles
+            # (scan_layers=False) count the recompute FLOPs remat adds
+            plain = lambda xc, pp: _dense_block(cfg, pp, xc, angles,
+                                                constrain=constrain)  # noqa: E731
+            rematted = jax.checkpoint(plain) if cfg.remat else plain
+            caches_o = []
+            for i in range(cfg.num_layers):
+                p_i = _layer_slice(blocks, i)
+                cache_i = _layer_slice(cache["blocks"], i) if has_cache else None
+                if has_cache or taps is not None:
+                    x, cache_o, aux = _dense_block(
+                        cfg, p_i, x, angles, cache=cache_i,
+                        cache_len=cache_len, taps=taps, prefix=f"blocks/{i}/")
+                else:
+                    x, cache_o, aux = rematted(x, p_i)
+                aux_total += aux
+                if every and (i + 1) % every == 0:
+                    cp = _layer_slice(cross_blocks, i // every)
+                    x = _cross_block(cfg, cp, x, image_embeds, taps=taps,
+                                     prefix=f"blocks/{i}/")
+                caches_o.append(cache_o)
+            if has_cache:
+                new_cache["blocks"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *caches_o)
+
+    elif cfg.family == "hybrid_mamba":
+        shared = params.get("shared_attn")
+        every = cfg.attn_every
+
+        if use_scan:
+            blocks_dyn, blocks_static = _split_scan_static(blocks)
+
+            def body(carry, xs):
+                xcur, attn_cache = carry
+                p_i, idx, cache_i = xs
+                p_i = _merge_static(p_i, blocks_static)
+                h = rms_norm(xcur, p_i["norm"], cfg.norm_eps)
+                out, mcache_o = mamba2_block(
+                    p=p_i, x=h, cfg=cfg,
+                    cache=cache_i if has_cache else None, constrain=constrain)
+                xcur = xcur + out
+                if shared is not None and every:
+                    pred = (idx + 1) % every == 0
+                    if has_cache:
+                        # the shared block is applied at L//every depths; each
+                        # application has its OWN cache slice (inputs differ)
+                        def w_attn(op):
+                            xc, stack = op
+                            app = idx // every
+                            ci = _dyn_slice(stack, app)
+                            y, cnew = _shared_attn_block(
+                                cfg, shared, xc, angles, cache=ci,
+                                cache_len=cache_len, constrain=constrain)
+                            stack = jax.tree.map(
+                                lambda full, new: jax.lax.
+                                dynamic_update_index_in_dim(full, new, app, 0),
+                                stack, cnew)
+                            return y, stack
+                        xcur, attn_cache = jax.lax.cond(
+                            pred, w_attn, lambda op: op, (xcur, attn_cache))
+                    else:
+                        def w_attn_nc(xc):
+                            y, _ = _shared_attn_block(cfg, shared, xc, angles,
+                                                      constrain=constrain)
+                            return y
+                        xcur = jax.lax.cond(pred, w_attn_nc, lambda xc: xc, xcur)
+                return (xcur, attn_cache), mcache_o
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            attn_cache0 = (cache["shared_attn"] if has_cache
+                           else jnp.zeros(()))
+            idxs = jnp.arange(cfg.num_layers)
+            (x, attn_cache), mcaches = jax.lax.scan(
+                body_fn, (x, attn_cache0),
+                (blocks_dyn, idxs, cache["blocks"] if has_cache else dummy_xs))
+            if has_cache:
+                new_cache["blocks"] = mcaches
+                new_cache["shared_attn"] = attn_cache
+        else:
+            attn_stack = cache["shared_attn"] if has_cache else None
+            attn_caches = []
+            mcaches = []
+            for i in range(cfg.num_layers):
+                p_i = _layer_slice(blocks, i)
+                cache_i = _layer_slice(cache["blocks"], i) if has_cache else None
+                h = rms_norm(x, p_i["norm"], cfg.norm_eps)
+                out, mcache_o = mamba2_block(
+                    p=p_i, x=h, cfg=cfg, cache=cache_i, constrain=constrain,
+                    taps=taps, prefix=f"blocks/{i}/")
+                x = x + out
+                if shared is not None and every and (i + 1) % every == 0:
+                    app = i // every
+                    ci = _layer_slice(attn_stack, app) if has_cache else None
+                    x, cnew = _shared_attn_block(
+                        cfg, shared, x, angles, cache=ci,
+                        cache_len=cache_len, taps=taps, prefix=f"blocks/{i}/")
+                    attn_caches.append(cnew)
+                mcaches.append(mcache_o)
+            if has_cache:
+                new_cache["blocks"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *mcaches)
+                if attn_caches:
+                    new_cache["shared_attn"] = jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *attn_caches)
+
+    elif cfg.family == "rwkv":
+        if use_scan:
+            blocks_dyn, blocks_static = _split_scan_static(blocks)
+
+            def body(xcur, xs):
+                p_i, cache_i = xs
+                p_i = _merge_static(p_i, blocks_static)
+                return _rwkv_block(cfg, p_i, xcur,
+                                   cache=cache_i if has_cache else None,
+                                   constrain=constrain)
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, caches_o = jax.lax.scan(
+                body_fn, x,
+                (blocks_dyn, cache["blocks"] if has_cache else dummy_xs))
+            if has_cache:
+                new_cache["blocks"] = caches_o
+        else:
+            caches_o = []
+            for i in range(cfg.num_layers):
+                p_i = _layer_slice(blocks, i)
+                cache_i = _layer_slice(cache["blocks"], i) if has_cache else None
+                x, cache_o = _rwkv_block(cfg, p_i, x, cache=cache_i,
+                                         constrain=constrain,
+                                         taps=taps, prefix=f"blocks/{i}/")
+                caches_o.append(cache_o)
+            if has_cache:
+                new_cache["blocks"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *caches_o)
+
+    elif cfg.family == "encoder":
+        pos = jnp.arange(s)
+        x = x + embed(params["embed"]["pos"], pos)[None].astype(dtype)
+        if use_scan:
+            def body(xcur, p_i):
+                return _encoder_block(cfg, p_i, xcur), None
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(body_fn, x, blocks)
+        else:
+            for i in range(cfg.num_layers):
+                x = _encoder_block(cfg, _layer_slice(blocks, i), x,
+                                   taps=taps, prefix=f"blocks/{i}/")
+    else:
+        raise ValueError(cfg.family)
+
+    # ---------------- head --------------------------------------------------
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "encoder" and cfg.num_classes:
+        cls = x[:, 0, :]
+        h = jnp.tanh(linear(params["classifier"]["dense"], cls, taps=taps,
+                            name="classifier/dense", use_pallas=cfg.use_pallas))
+        logits = linear(params["classifier"]["out"], h, taps=taps,
+                        name="classifier/out", use_pallas=cfg.use_pallas)
+    elif cfg.family == "audio":
+        logits = jnp.einsum("bsd,kdv->bksv", x.astype(jnp.float32),
+                            params["lm_head"].astype(jnp.float32))
+    else:
+        head = (params["embed"]["tok"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        if isinstance(head, Mapping):
+            logits = linear(head, x.astype(jnp.float32))
+        else:
+            logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    if constrain is not None:
+        logits = constrain(logits, ("dp", None, "model"))
+    if cfg.logit_cap > 0:
+        logits = cfg.logit_cap * jnp.tanh(logits / cfg.logit_cap)
+    if cfg.padded_vocab != cfg.vocab_size and cfg.family != "encoder":
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e9)
+    return logits, aux_total, new_cache
+
+
+# ===========================================================================
+# losses
+# ===========================================================================
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Token-mean CE in f32; the vocab axis stays sharded under GSPMD (the
+    logsumexp/gather reduce with psum instead of all-gathering logits)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(params: Params, batch: Mapping[str, jax.Array], cfg: ModelConfig,
+            aux_weight: float = 0.01):
+    logits, aux, _ = forward(params, batch, cfg)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss + aux_weight * aux, (loss, aux)
+
+
+def classification_loss(params: Params, batch, cfg: ModelConfig):
+    logits, aux, _ = forward(params, batch, cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll), (jnp.mean(nll), aux)

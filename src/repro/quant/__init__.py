@@ -1,0 +1,14 @@
+from repro.quant.formats import (
+    QuantConfig,
+    get_quantizer,
+    average_bits,
+)
+from repro.quant.mxint import (
+    mxint_quantize,
+    mxint_dequantize,
+    mxint_fake_quant,
+    pack_mxint,
+    MXINT_CONFIGS,
+)
+from repro.quant.intq import int_fake_quant
+from repro.quant.nf4 import nf4_fake_quant, NF4_LEVELS

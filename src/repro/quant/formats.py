@@ -1,0 +1,60 @@
+"""Quantizer registry: name -> fake-quant callable + bits accounting.
+
+A ``QuantConfig`` fully describes q()/dq() for the framework; QERA itself is
+format-agnostic (the paper: "QERA adds no constraints to the quantization
+function").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+
+from repro.quant.mxint import MXINT_CONFIGS, mxint_fake_quant
+from repro.quant.intq import int_fake_quant
+from repro.quant.nf4 import nf4_fake_quant
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    name: str                 # registry key, e.g. "mxint4"
+    fake_quant: Callable[[jax.Array], jax.Array]
+    average_bits: float
+
+    def __call__(self, w: jax.Array) -> jax.Array:
+        return self.fake_quant(w)
+
+
+def get_quantizer(name: str) -> QuantConfig:
+    if name in MXINT_CONFIGS:
+        spec = MXINT_CONFIGS[name]
+        return QuantConfig(
+            name=name,
+            fake_quant=partial(mxint_fake_quant, bits=spec.bits, block_size=spec.block_size),
+            average_bits=spec.average_bits,
+        )
+    if name.startswith("int") and "_g" in name:  # e.g. "int4_g64"
+        bits_s, group_s = name[3:].split("_g")
+        bits, group = int(bits_s), int(group_s)
+        return QuantConfig(
+            name=name,
+            fake_quant=partial(int_fake_quant, bits=bits, group_size=group),
+            # bits + fp16 scale + uint8 zero per group
+            average_bits=bits + (16 + 8) / group,
+        )
+    if name == "nf4":
+        return QuantConfig(
+            name=name,
+            fake_quant=partial(nf4_fake_quant, block_size=64),
+            average_bits=4 + 16 / 64,
+        )
+    if name in ("none", "bf16"):
+        return QuantConfig(name="none", fake_quant=lambda w: w, average_bits=16.0)
+    raise KeyError(f"unknown quantizer {name!r}")
+
+
+def average_bits(name: str) -> float:
+    return get_quantizer(name).average_bits

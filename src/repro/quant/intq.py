@@ -1,0 +1,36 @@
+"""Group-wise affine INT quantization (HQQ-style storage format, minmax solver).
+
+Used as the non-MX baseline format: ``bits``-bit asymmetric integers with a
+float16 scale/zero-point per group of ``group_size`` weights along the input
+dimension (HQQ in the paper uses INT4 g=64 -> 4.25 avg bits).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int_quantize(w: jax.Array, bits: int, group_size: int):
+    *lead, m, n = w.shape
+    if m % group_size != 0:
+        raise ValueError(f"input dim {m} not divisible by group_size {group_size}")
+    wg = w.astype(jnp.float32).reshape(*lead, m // group_size, group_size, n)
+    wmin = jnp.min(wg, axis=-2, keepdims=True)
+    wmax = jnp.max(wg, axis=-2, keepdims=True)
+    qmax = 2**bits - 1
+    scale = (wmax - wmin) / qmax
+    scale = jnp.where(scale > 0, scale, 1.0)
+    zero = jnp.round(-wmin / scale)
+    q = jnp.clip(jnp.round(wg / scale + zero), 0, qmax).astype(jnp.uint8)
+    return q, scale.squeeze(-2), zero.squeeze(-2)
+
+
+def int_dequantize(q, scale, zero, out_shape, dtype=jnp.float32):
+    w = (q.astype(jnp.float32) - zero[..., :, None, :]) * scale[..., :, None, :]
+    return w.reshape(out_shape).astype(dtype)
+
+
+def int_fake_quant(w: jax.Array, bits: int, group_size: int) -> jax.Array:
+    q, scale, zero = int_quantize(w, bits, group_size)
+    return int_dequantize(q, scale, zero, w.shape, dtype=w.dtype)

@@ -1,0 +1,129 @@
+"""MXINT block-floating-point emulation (OCP-MX style).
+
+The paper's quantization format: ``emulated MXINT with block size 32``
+(4-/3-bit) and ``block size 16`` (2-bit).  A block of ``block_size``
+consecutive weights along the *input* dimension shares one 8-bit exponent;
+each element stores a signed ``bits``-bit integer mantissa.
+
+Average bits/weight = bits + 8 / block_size:
+    MXINT4 bs=32 -> 4.25    MXINT3 bs=32 -> 3.25    MXINT2 bs=16 -> 2.50
+
+All q/dq functions are pure-jnp and jittable.  ``mxint_fake_quant`` is the
+quantize->dequantize roundtrip used everywhere the framework needs W-tilde.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MXINTSpec(NamedTuple):
+    bits: int          # mantissa bits incl. sign
+    block_size: int    # elements sharing one exponent
+
+    @property
+    def average_bits(self) -> float:
+        return self.bits + 8.0 / self.block_size
+
+
+MXINT_CONFIGS = {
+    "mxint8": MXINTSpec(8, 32),
+    "mxint4": MXINTSpec(4, 32),
+    "mxint3": MXINTSpec(3, 32),
+    "mxint2": MXINTSpec(2, 16),
+    "mxint2_bs32": MXINTSpec(2, 32),
+}
+
+
+def _blocked(w: jax.Array, block_size: int) -> tuple[jax.Array, tuple[int, ...]]:
+    """Reshape (..., m, n) -> (..., m//bs, bs, n) along the input (row) dim.
+
+    Blocking runs along the *input-feature* (contraction) axis, matching how
+    a dequant-matmul kernel walks memory.  Rows must divide block_size; all
+    real layer dims here are multiples of 16.
+    """
+    *lead, m, n = w.shape
+    if m % block_size != 0:
+        raise ValueError(f"input dim {m} not divisible by block_size {block_size}")
+    return w.reshape(*lead, m // block_size, block_size, n), (*lead, m, n)
+
+
+def mxint_quantize(w: jax.Array, bits: int, block_size: int):
+    """Quantize to (mantissa int8, shared exponent int8).
+
+    mantissa in [-(2^(bits-1)-1), 2^(bits-1)-1]  (symmetric, no -2^(b-1) to
+    keep dequant scale symmetric), exponent e such that
+    scale = 2^(e - (bits - 2)) covers max|block|.
+    """
+    wb, _ = _blocked(w.astype(jnp.float32), block_size)
+    maxabs = jnp.max(jnp.abs(wb), axis=-2, keepdims=True)  # (..., nb, 1, n)
+    # exponent of max |x|: floor(log2(maxabs)); guard zeros.
+    safe = jnp.where(maxabs > 0, maxabs, 1.0)
+    e = jnp.floor(jnp.log2(safe)).astype(jnp.int32)
+    e = jnp.clip(e, -126, 127)
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.exp2(e.astype(jnp.float32) - (bits - 2))
+    # After the floor, maxabs/scale can be up to 2^(bits-1) (=qmax+1); bump the
+    # exponent where the rounded mantissa would overflow.
+    over = jnp.round(maxabs / scale) > qmax
+    e = jnp.where(over, e + 1, e)
+    scale = jnp.exp2(e.astype(jnp.float32) - (bits - 2))
+    mant = jnp.clip(jnp.round(wb / scale), -qmax, qmax).astype(jnp.int8)
+    return mant, e.squeeze(-2).astype(jnp.int8)  # (..., nb, bs, n), (..., nb, n)
+
+
+def mxint_dequantize(mant: jax.Array, exp: jax.Array, bits: int,
+                     out_shape: tuple[int, ...] | None = None,
+                     dtype=jnp.float32) -> jax.Array:
+    scale = jnp.exp2(exp.astype(jnp.float32) - (bits - 2))[..., :, None, :]
+    w = mant.astype(jnp.float32) * scale
+    *lead, nb, bs, n = w.shape
+    w = w.reshape(*lead, nb * bs, n)
+    if out_shape is not None:
+        w = w.reshape(out_shape)
+    return w.astype(dtype)
+
+
+def mxint_fake_quant(w: jax.Array, bits: int, block_size: int) -> jax.Array:
+    """dq(q(w)) with the original shape/dtype (the emulation the paper uses).
+
+    Input dims that do not divide ``block_size`` are zero-padded for the
+    block reduction and cropped back (padding never changes a block's maxabs
+    direction since pad values are 0).
+    """
+    m = w.shape[-2]
+    pad = (-m) % block_size
+    if pad:
+        widths = [(0, 0)] * (w.ndim - 2) + [(0, pad), (0, 0)]
+        wp = jnp.pad(w, widths)
+        mant, exp = mxint_quantize(wp, bits, block_size)
+        out = mxint_dequantize(mant, exp, bits, out_shape=wp.shape, dtype=w.dtype)
+        return out[..., :m, :]
+    mant, exp = mxint_quantize(w, bits, block_size)
+    return mxint_dequantize(mant, exp, bits, out_shape=w.shape, dtype=w.dtype)
+
+
+class PackedMXINT(NamedTuple):
+    """Storage layout the Pallas kernel consumes: int8 mantissa laid out as the
+    original (m, n) matrix plus per-(block,col) int8 exponents."""
+    mant: jax.Array      # (m, n) int8
+    exp: jax.Array       # (m // block_size, n) int8
+    bits: int
+    block_size: int
+    shape: tuple[int, int]
+
+
+def pack_mxint(w: jax.Array, bits: int, block_size: int) -> PackedMXINT:
+    mant, exp = mxint_quantize(w, bits, block_size)
+    m, n = w.shape[-2], w.shape[-1]
+    mant2d = mant.reshape(*w.shape[:-2], m, n)
+    return PackedMXINT(mant2d, exp, bits, block_size, (m, n))
+
+
+def unpack_mxint(p: PackedMXINT, dtype=jnp.float32) -> jax.Array:
+    m, n = p.shape
+    mant = p.mant.reshape(*p.mant.shape[:-2], m // p.block_size, p.block_size, n)
+    return mxint_dequantize(mant, p.exp, p.bits, dtype=dtype)

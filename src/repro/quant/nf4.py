@@ -1,0 +1,36 @@
+"""NF4 (NormalFloat-4) emulation — the QLoRA format.
+
+16 levels placed at the quantiles of N(0,1), absmax-scaled per block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The 16 NF4 levels from the QLoRA paper (bitsandbytes reference values).
+NF4_LEVELS = np.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.7229568362236023, 1.0,
+    ],
+    dtype=np.float32,
+)
+
+
+def nf4_fake_quant(w: jax.Array, block_size: int = 64) -> jax.Array:
+    *lead, m, n = w.shape
+    if m % block_size != 0:
+        raise ValueError(f"input dim {m} not divisible by block_size {block_size}")
+    wb = w.astype(jnp.float32).reshape(*lead, m // block_size, block_size, n)
+    absmax = jnp.max(jnp.abs(wb), axis=-2, keepdims=True)
+    absmax = jnp.where(absmax > 0, absmax, 1.0)
+    x = wb / absmax  # in [-1, 1]
+    levels = jnp.asarray(NF4_LEVELS)
+    idx = jnp.argmin(jnp.abs(x[..., None] - levels), axis=-1)
+    deq = levels[idx] * absmax
+    return deq.reshape(*lead, m, n).astype(w.dtype)

@@ -1,0 +1,7 @@
+from repro.serve.engine import (
+    cache_shapes,
+    greedy_generate,
+    init_cache,
+    make_decode_step,
+    make_prefill_step,
+)

@@ -1,0 +1,121 @@
+"""Continuous batching: slot-based request scheduler over prefill/decode.
+
+The production pattern (vLLM-style, simplified to the parts that matter for
+QER serving): a fixed pool of B slots shares one decode step; new requests
+are prefilled into a free slot's cache region while other slots keep
+decoding; finished slots are freed immediately.
+
+Implementation notes for the JAX runtime:
+* one (B, max_len) KV cache, slot = batch row; per-slot lengths vector;
+* prefill computes the prompt with batch=1 and writes its cache rows into
+  the slot (dynamic_update_slice on the batch axis);
+* decode advances ALL active slots each step with a single decode_step call
+  (inactive slots are masked out of sampling).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.serve.engine import init_cache, make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    # filled by the engine
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, params: Any, cfg: ModelConfig, *, num_slots: int = 4,
+                 max_len: int = 256):
+        self.params, self.cfg = params, cfg
+        self.b, self.max_len = num_slots, max_len
+        self.cache = init_cache(cfg, num_slots, max_len)
+        self.lengths = np.zeros(num_slots, np.int32)
+        self.slot_req: list[Request | None] = [None] * num_slots
+        self.last_tok = np.zeros(num_slots, np.int32)
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self.queue: list[Request] = []
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                return
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt[None, :])            # (1, len)
+            logits, cache1 = self._prefill(self.params, {"tokens": prompt})
+            # copy the single-row cache into this slot's row
+            def place(big, small):
+                # batch axis differs per leaf family; it is the axis whose
+                # size == num_slots in big and 1 in small
+                for ax in range(big.ndim):
+                    if big.shape[ax] == self.b and small.shape[ax] == 1:
+                        idx = [0] * big.ndim
+                        idx[ax] = slot
+                        pad = [(0, 0)] * small.ndim
+                        la = small.shape[:ax] + (1,) + small.shape[ax + 1:]
+                        return jax.lax.dynamic_update_slice(
+                            big, small.astype(big.dtype), tuple(
+                                jnp.asarray(i) for i in idx))
+                raise ValueError("no batch axis found")
+            # pad the prompt cache rows to max_len happens inside prefill
+            self.cache = jax.tree.map(place, self.cache, cache1)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.output.append(tok)
+            self.slot_req[slot] = req
+            self.lengths[slot] = len(req.prompt)
+            self.last_tok[slot] = tok
+
+    # -- decode tick ----------------------------------------------------------
+    def _active(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def step(self) -> None:
+        self._admit()
+        active = self._active()
+        if not active:
+            return
+        # single fused decode for all slots (inactive rows are don't-care);
+        # per-slot cache lengths keep each request's positions independent
+        toks = jnp.asarray(self.last_tok[:, None])
+        clen = jnp.asarray(self.lengths, jnp.int32)          # (B,)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          {"tokens": toks}, clen)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.lengths[i] += 1
+            self.last_tok[i] = tok
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if (len(req.output) >= req.max_new_tokens or hit_eos
+                    or self.lengths[i] + 1 >= self.max_len):
+                req.done = True
+                self.slot_req[i] = None      # slot freed; admitted next tick
+
+    def run(self, max_ticks: int = 1000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and not self._active():
+                return
+            self.step()

@@ -1,0 +1,107 @@
+"""Serving engine: per-family cache structs + prefill/decode step factories.
+
+``decode_step`` is what the ``decode_32k`` / ``long_500k`` dry-run cells
+lower: one new token against a seq_len cache.  ``prefill_step`` fills the
+cache from a prompt (``prefill_32k``).  Caches:
+
+  dense/moe/audio/vlm : {"blocks": {"k","v": (L, B, KVH, S_max, hd)}}
+  hybrid_mamba        : {"blocks": {"conv_*", "ssm"}, "shared_attn": {"k","v"}}
+  rwkv                : {"blocks": {"state", "last_tm", "last_cm"}}
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> dict[str, Any]:
+    dtype = dtype or cfg.compute_dtype
+    l, kv, hd, d = cfg.num_layers, cfg.num_kv_heads, cfg.hd, cfg.d_model
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return {"blocks": {
+            "k": jnp.zeros((l, batch, kv, max_len, hd), dtype),
+            "v": jnp.zeros((l, batch, kv, max_len, hd), dtype),
+        }}
+    if cfg.family == "hybrid_mamba":
+        w, di, n = cfg.ssm_conv_width, cfg.d_inner, cfg.ssm_state
+        h, p = cfg.ssm_heads, cfg.ssm_head_dim
+        cache = {"blocks": {
+            "conv_x": jnp.zeros((l, batch, w - 1, di), dtype),
+            "conv_b": jnp.zeros((l, batch, w - 1, n), dtype),
+            "conv_c": jnp.zeros((l, batch, w - 1, n), dtype),
+            "ssm": jnp.zeros((l, batch, h, p, n), jnp.float32),
+        }}
+        if cfg.attn_every:
+            napp = cfg.num_layers // cfg.attn_every
+            cache["shared_attn"] = {
+                "k": jnp.zeros((napp, batch, kv, max_len, hd), dtype),
+                "v": jnp.zeros((napp, batch, kv, max_len, hd), dtype),
+            }
+        return cache
+    if cfg.family == "rwkv":
+        h, hd_r = cfg.rwkv_heads, cfg.rwkv_head_dim
+        return {"blocks": {
+            "state": jnp.zeros((l, batch, h, hd_r, hd_r), jnp.float32),
+            "last_tm": jnp.zeros((l, batch, d), dtype),
+            "last_cm": jnp.zeros((l, batch, d), dtype),
+        }}
+    raise ValueError(f"no cache for family {cfg.family!r}")
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """ShapeDtypeStruct tree of the cache (dry-run: no allocation)."""
+    return jax.eval_shape(partial(init_cache, cfg, batch, max_len, dtype))
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int | None = None) -> Callable:
+    """(params, batch) -> (logits, cache).  Cache is allocated inside (sized
+    max_len or the prompt length)."""
+
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        s = tokens.shape[-1]
+        cache = init_cache(cfg, b, max_len or s)
+        logits, _, cache = forward(params, batch, cfg, cache=cache,
+                                   cache_len=jnp.zeros((), jnp.int32))
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """(params, cache, batch, cache_len) -> (logits_1tok, new_cache)."""
+
+    def decode_step(params, cache, batch, cache_len):
+        logits, _, cache = forward(params, batch, cfg, cache=cache,
+                                   cache_len=cache_len)
+        return logits, cache
+
+    return decode_step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
+                    steps: int, max_len: int | None = None):
+    """Reference greedy decoding loop (prefill + token-by-token)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + steps)
+    cache = init_cache(cfg, b, max_len)
+    logits, _, cache = forward(params, {"tokens": prompt}, cfg, cache=cache,
+                               cache_len=jnp.zeros((), jnp.int32))
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(prompt.dtype)
+    out = [tok]
+    decode = jax.jit(make_decode_step(cfg))
+    for t in range(steps - 1):
+        logits, cache = decode(params, cache, {"tokens": tok[:, None]},
+                               jnp.asarray(s + t, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(prompt.dtype)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,11 @@
+from repro.sharding.rules import (
+    batch_axes,
+    batch_spec,
+    dp_axes,
+    kv_cache_spec,
+    param_spec,
+    param_specs,
+    rwkv_cache_specs,
+    ssm_cache_specs,
+    with_mesh,
+)

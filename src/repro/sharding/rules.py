@@ -1,0 +1,217 @@
+"""Logical-axis sharding rules: param path -> PartitionSpec.
+
+Scheme (DESIGN.md §5): TP on 'model' for every projection's wide axis, FSDP
+(ZeRO-3) on 'data' for the other weight axis, batch on ('pod','data').
+Stacked-layer leaves carry a leading L axis (never sharded).  Optimizer
+moments inherit the param spec -> fully-sharded optimizer states for free.
+
+Naming contract with models/*: in-projections end in one of IN_PROJS (wide
+axis LAST), out-projections in OUT_PROJS (wide axis FIRST); everything small
+(norms, biases, routers, decay vectors) replicates.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.trees import flatten_dict, unflatten_dict
+
+# suffix name -> role
+IN_PROJS = {"wq", "wk", "wv", "wi", "wg", "wu", "w_z", "w_x", "w_r", "w_k",
+            "w_v", "w_g", "w_kc", "w_rc", "dense"}
+OUT_PROJS = {"wo", "wd", "wo_mlp", "w_o", "w_vc", "out_proj"}
+NARROW_IN = {"w_b", "w_c", "w_dt"}            # small output dim: FSDP only
+REPLICATED = {"norm", "bias", "scale", "gate", "a_log", "dt_bias", "d_skip",
+              "bonus_u", "decay_w0", "ln_x", "router", "conv_b", "conv_c",
+              r"^pos$", r"^out$"}
+
+
+def _base_spec(name: str, ndim: int, path: str) -> tuple:
+    """Spec for the trailing (non-stacked) dims of a leaf."""
+    if name == "tok":                         # embedding (V, D)
+        if ndim == 3:                         # audio codebooks (K, V, D)
+            return (None, "model", "data")
+        return ("model", "data")
+    if name == "lm_head" or path.endswith("lm_head"):
+        if ndim == 3:                         # audio heads (K, D, V)
+            return (None, "data", "model")
+        return ("data", "model")              # (D, V)
+    if name.startswith("mu_") or any(re.search(p, name) for p in REPLICATED):
+        return (None,) * ndim
+    if name == "conv_x":                      # (W, d_inner)
+        return (None, "model")
+    if name == "decay_a":                     # (D, lora)
+        return ("data", None)
+    if name == "decay_b":                     # (lora, D)
+        return (None, "model")
+    if name in NARROW_IN:
+        return ("data", None)
+    if name in IN_PROJS:
+        if ndim == 3:                         # MoE experts (E, D, F)
+            if EXPERT_AXIS == "data":         # DeepSpeed-style EP=DP + TP FFN
+                return ("data", None, "model")
+            return ("model", "data", None)
+        return ("data", "model")
+    if name in OUT_PROJS:
+        if ndim == 3:                         # MoE experts (E, F, D)
+            if EXPERT_AXIS == "data":
+                return ("data", "model", None)
+            return ("model", None, "data")
+        return ("model", "data")
+    return (None,) * ndim                     # unknown -> replicate
+
+
+# Expert-parallel axis variant (perf experiments): "model" shards experts on
+# the TP axis (all-to-all over ICI-heavy axis); "data" aligns expert shards
+# with the batch shards (dispatch all-to-all stays within the data axis).
+EXPERT_AXIS = "model"
+
+
+def set_expert_axis(axis: str) -> None:
+    global EXPERT_AXIS
+    assert axis in ("model", "data")
+    EXPERT_AXIS = axis
+
+
+def param_spec(path: str, leaf: Any, *, stacked_depth: int | None = None) -> P:
+    """PartitionSpec for one param leaf.
+
+    ``stacked_depth``: how many leading stacked axes to skip (inferred from
+    path when None: anything under blocks/ or cross_blocks/ has one).
+    """
+    parts = path.split("/")
+    name = parts[-1]
+    quant_suffix = None
+    if name in ("w_tilde", "lora_a", "lora_b", "mant", "exp"):
+        quant_suffix, name = name, parts[-2]
+
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    if ndim == 0:                              # packed-format metadata scalars
+        return P()
+    if stacked_depth is None:
+        stacked_depth = 1 if parts[0] in ("blocks", "cross_blocks") else 0
+    base_nd = ndim - stacked_depth
+    if quant_suffix in ("lora_a", "lora_b"):
+        base_nd = 2  # always (m, k) / (k, n) under the stack
+
+    spec = _base_spec(name, base_nd, path)
+    if quant_suffix == "lora_a":               # (in_dim, k)
+        spec = (spec[0], None)
+    elif quant_suffix == "lora_b":             # (k, out_dim)
+        spec = (None, spec[-1])
+    elif quant_suffix == "exp":                # (in/bs, out) same as weight
+        spec = spec
+    if len(spec) < base_nd:                    # e.g. replicate fallbacks
+        spec = spec + (None,) * (base_nd - len(spec))
+    return P(*((None,) * stacked_depth + tuple(spec[:base_nd])))
+
+
+def param_specs(params_or_shapes: Mapping[str, Any]) -> dict[str, Any]:
+    """Whole-tree PartitionSpecs (pure specs; wrap with mesh via shardings)."""
+    flat = flatten_dict(dict(params_or_shapes))
+    out = {p: param_spec(p, leaf) for p, leaf in flat.items()}
+    return unflatten_dict(out)
+
+
+def with_mesh(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# batch / activation / cache specs
+# ---------------------------------------------------------------------------
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh, global_batch: int) -> tuple[str, ...]:
+    """Largest prefix of (pod, data) whose product divides global_batch."""
+    axes, prod = [], 1
+    for a in dp_axes(mesh):
+        size = mesh.shape[a]
+        if global_batch % (prod * size) == 0:
+            axes.append(a)
+            prod *= size
+    return tuple(axes)
+
+
+def batch_spec(mesh: Mesh, global_batch: int, extra_dims: int = 1) -> P:
+    """(B, ...) arrays: batch over usable dp axes, rest replicated."""
+    ax = batch_axes(mesh, global_batch)
+    lead = ax if len(ax) > 1 else (ax[0] if ax else None)
+    return P(lead, *((None,) * extra_dims))
+
+
+def kv_cache_spec(mesh: Mesh, global_batch: int, *, stacked: bool = True,
+                  kv_heads: int | None = None) -> P:
+    """(L, B, KVH, S, hd): batch over dp, cache SEQ over 'model'
+    (sequence-parallel decode attention — softmax reduces with psum).
+    When the batch cannot shard (e.g. long-context B=1), the 'data' axis
+    moves to KV heads instead so the cache still spreads across the pod."""
+    ax = batch_axes(mesh, global_batch)
+    lead = ax if len(ax) > 1 else (ax[0] if ax else None)
+    head_ax = None
+    if not ax and kv_heads is not None and kv_heads % mesh.shape["data"] == 0:
+        head_ax = "data"
+    spec = (lead, head_ax, "model", None)
+    return P(*(((None,) if stacked else ()) + spec))
+
+
+def ssm_cache_specs(mesh: Mesh, global_batch: int) -> dict[str, P]:
+    ax = batch_axes(mesh, global_batch)
+    lead = ax if len(ax) > 1 else (ax[0] if ax else None)
+    return {
+        "ssm": P(None, lead, "model", None, None),     # (L,B,H,P,N): H over TP
+        "conv_x": P(None, lead, None, "model"),
+        "conv_b": P(None, lead, None, None),
+        "conv_c": P(None, lead, None, None),
+    }
+
+
+def make_act_constrainer(mesh_axes: tuple[tuple[str, int], ...]):
+    """Divisibility-aware with_sharding_constraint helper for activations.
+
+    ``mesh_axes`` carries (name, size) pairs (ModelConfig.mesh_axes — set by
+    the dry-run / launcher, empty in plain CPU tests -> returns None).
+    Dim names: 'dp' expands to ('pod','data'); any other mesh axis name maps
+    directly; None leaves a dim unconstrained.  Axes that do not divide the
+    dim are silently dropped (e.g. batch=1 decode, 56 heads on a 16-way TP).
+    """
+    if not mesh_axes:
+        return None
+    sizes = dict(mesh_axes)
+
+    def constrain(x: jax.Array, names: tuple) -> jax.Array:
+        spec = []
+        for dim, name in zip(x.shape, names):
+            if name is None:
+                spec.append(None)
+                continue
+            cand = ("pod", "data") if name == "dp" else (name,)
+            chosen, prod = [], 1
+            for a in cand:
+                if a in sizes and dim % (prod * sizes[a]) == 0:
+                    chosen.append(a)
+                    prod *= sizes[a]
+            spec.append(tuple(chosen) if len(chosen) > 1
+                        else (chosen[0] if chosen else None))
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+    return constrain
+
+
+def rwkv_cache_specs(mesh: Mesh, global_batch: int) -> dict[str, P]:
+    ax = batch_axes(mesh, global_batch)
+    lead = ax if len(ax) > 1 else (ax[0] if ax else None)
+    return {
+        "state": P(None, lead, "model", None, None),   # (L,B,H,dk,dv)
+        "last_tm": P(None, lead, None),
+        "last_cm": P(None, lead, None),
+    }

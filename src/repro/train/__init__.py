@@ -1,0 +1,13 @@
+from repro.train.optimizer import (
+    OptimizerConfig,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    make_schedule,
+)
+from repro.train.train_step import (
+    make_compressed_dp_train_step,
+    make_microbatched_train_step,
+    make_train_step,
+)

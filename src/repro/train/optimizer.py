@@ -1,0 +1,127 @@
+"""AdamW from scratch (no optax) with ZeRO-sharded states.
+
+Moments are created ``zeros_like(param)`` so under pjit they inherit the
+param's (TP + FSDP) sharding — the optimizer update is therefore fully
+sharded with zero extra machinery (ZeRO-1/3 semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"          # "cosine" | "wsd" | "linear" | "constant"
+    moment_dtype: str = "float32"     # "bfloat16" halves optimizer HBM (the
+                                      # production knob for >300B on small pods)
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1           # WSD: final fraction spent decaying
+    min_lr_frac: float = 0.1
+    # decoupled WD mask: skip 1-D params (norms/biases) — standard practice
+    wd_skip_ndim_below: int = 2
+
+
+def make_schedule(cfg: OptimizerConfig) -> Callable[[jax.Array], jax.Array]:
+    """Step -> lr. WSD (warmup-stable-decay) is the MiniCPM schedule."""
+    peak, total, warm = cfg.peak_lr, cfg.total_steps, cfg.warmup_steps
+    floor = peak * cfg.min_lr_frac
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warmup = peak * jnp.minimum(step / jnp.maximum(warm, 1), 1.0)
+        if cfg.schedule == "constant":
+            after = peak
+        elif cfg.schedule == "linear":
+            frac = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0, 1)
+            after = peak + (floor - peak) * frac
+        elif cfg.schedule == "cosine":
+            frac = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0, 1)
+            after = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        elif cfg.schedule == "wsd":
+            decay_start = total * (1 - cfg.decay_frac)
+            frac = jnp.clip((step - decay_start) /
+                            jnp.maximum(total - decay_start, 1), 0, 1)
+            after = peak * (1 - frac) + floor * frac
+        else:
+            raise ValueError(cfg.schedule)
+        return jnp.where(step < warm, warmup, after)
+
+    return sched
+
+
+def init_opt_state(params: Any, moment_dtype=None) -> dict[str, Any]:
+    def zeros(p):
+        return jnp.zeros(p.shape, moment_dtype or p.dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params: Any, grads: Any, opt_state: dict, cfg: OptimizerConfig,
+                 schedule: Callable | None = None):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    if schedule is None:
+        schedule = make_schedule(cfg)
+    step = opt_state["step"] + 1
+    lr = schedule(step)
+
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else None
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= cfg.wd_skip_ndim_below:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        out_dt = mdt or m.dtype
+        return ((p - lr * delta.astype(p.dtype)).astype(p.dtype),
+                m_new.astype(out_dt), v_new.astype(out_dt))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([n[0] for n in new])
+    new_m = tdef.unflatten([n[1] for n in new])
+    new_v = tdef.unflatten([n[2] for n in new])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,7 @@
+from repro.utils.trees import (
+    tree_map_with_path_str,
+    tree_size_bytes,
+    tree_param_count,
+    flatten_dict,
+    unflatten_dict,
+)

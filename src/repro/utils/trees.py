@@ -1,0 +1,57 @@
+"""Small pytree helpers shared across the framework."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Like jax.tree.map but fn receives the '/'-joined path string."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_path_str(p), x), tree)
+
+
+def tree_size_bytes(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(x.size * x.dtype.itemsize for x in leaves if hasattr(x, "size"))
+
+
+def tree_param_count(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(x.shape) for x in leaves if hasattr(x, "shape")))
+
+
+def flatten_dict(d: Mapping[str, Any], prefix: str = "") -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    for k, v in d.items():
+        key = f"{prefix}/{k}" if prefix else str(k)
+        if isinstance(v, Mapping):
+            out.update(flatten_dict(v, key))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten_dict(flat: Mapping[str, Any]) -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests: REDUCED same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs.  The FULL configs
+are exercised only via the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_arch, shapes_for
+from repro.models import forward, init_params, lm_loss
+from repro.models.config import reduced
+
+
+def _smoke_batch(cfg, key, batch=2, seq=16):
+    if cfg.family == "audio":
+        toks = jax.random.randint(key, (batch, cfg.num_codebooks, seq + 1),
+                                  0, cfg.vocab_size)
+        b = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    else:
+        toks = jax.random.randint(key, (batch, seq + 1), 0, cfg.vocab_size)
+        b = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.family == "vlm":
+        b["image_embeds"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(9), (batch, cfg.vision_seq, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_arch_full_config_fields(arch):
+    cfg = get_arch(arch).validate()
+    assert cfg.name == arch
+    assert cfg.param_count() > 1e8          # all assigned archs are >= ~1B
+    shapes = shapes_for(arch)
+    names = {s.name for s in shapes}
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= names
+    assert ("long_500k" in names) == cfg.is_subquadratic
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_arch_reduced_smoke_forward_and_train(arch):
+    cfg = reduced(get_arch(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+
+    logits, aux, _ = forward(params, batch, cfg)
+    if cfg.family == "audio":
+        assert logits.shape == (2, cfg.num_codebooks, 16, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, 16, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits))), arch
+
+    (loss, _), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+        params, batch, cfg)
+    assert np.isfinite(float(loss)), arch
+    for leaf in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf))), arch
+
+
+def test_registry_counts():
+    from repro.configs import dryrun_cells
+    assert len(ASSIGNED_ARCHS) == 10
+    cells = dryrun_cells()
+    # 8 full-attention archs x 3 shapes + 2 subquadratic x 4 shapes = 32
+    assert len(cells) == 32
+    all_cells = dryrun_cells(include_skipped=True)
+    assert len(all_cells) == 40
+    assert sum(1 for *_, run in all_cells if not run) == 8
+
+
+def test_paper_model_configs_load():
+    for name in ["roberta-base", "tinyllama-1.1b", "llama-2-7b"]:
+        cfg = get_arch(name)
+        assert cfg.validate() is cfg
+
+
+@pytest.mark.parametrize("arch,expected_b", [
+    ("yi-34b", 34e9), ("command-r-plus-104b", 104e9),
+    ("phi3-mini-3.8b", 3.8e9), ("minicpm-2b", 2.4e9),
+])
+def test_param_counts_match_names(arch, expected_b):
+    got = get_arch(arch).param_count()
+    assert 0.55 * expected_b < got < 1.6 * expected_b, (arch, got, expected_b)
+
+
+def test_moe_active_param_counts():
+    # a17b / a6.6b names refer to ACTIVE params (top-k experts per token).
+    mav = get_arch("llama4-maverick-400b-a17b")
+    assert 10e9 < mav.active_param_count() < 25e9
+    phi = get_arch("phi3.5-moe-42b-a6.6b")
+    assert 4e9 < phi.active_param_count() < 10e9
+    assert 30e9 < phi.param_count() < 55e9

@@ -1,0 +1,153 @@
+"""Per-kernel allclose tests vs the ref.py pure-jnp oracles.
+
+Shapes/dtypes are swept; kernels run in interpret mode on CPU (the kernel
+body is executed in Python, which is exactly what we want to validate)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import flash_attention, quantize_weights, quantized_matmul
+from repro.kernels.ref import (
+    flash_attention_ref,
+    mxint_matmul_lowrank_ref,
+    mxint_quantize_ref,
+)
+from repro.quant.mxint import mxint_quantize
+
+
+def _pack(w, bits, bs):
+    mant, exp = mxint_quantize(w, bits, bs)
+    k, n = w.shape
+    return mant.reshape(k, n), exp
+
+
+# ---------------------------------------------------------------------------
+# mxint_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,r", [
+    (8, 64, 32, 4),        # tiny
+    (16, 128, 128, 8),     # aligned
+    (33, 128, 96, 16),     # M needs padding, odd N blocks
+])
+@pytest.mark.parametrize("bits,bs", [(4, 32), (3, 32), (2, 16), (8, 32)])
+def test_mxint_matmul_vs_ref(m, k, n, r, bits, bs):
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(keys[0], (m, k), jnp.float32)
+    w = jax.random.normal(keys[1], (k, n), jnp.float32) * 0.1
+    a = jax.random.normal(keys[2], (k, r), jnp.float32) * 0.05
+    b = jax.random.normal(keys[3], (r, n), jnp.float32) * 0.05
+    mant, exp = _pack(w, bits, bs)
+    ref = mxint_matmul_lowrank_ref(x, mant, exp, a, b, bits, bs)
+    out = quantized_matmul(x, mant, exp, a, b, bits=bits, block_size=bs,
+                           block_m=16, block_n=32, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mxint_matmul_dtypes(dtype):
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = jax.random.normal(keys[0], (16, 64), jnp.float32).astype(dtype)
+    w = jax.random.normal(keys[1], (64, 64), jnp.float32) * 0.1
+    a = jax.random.normal(keys[2], (64, 8), jnp.float32) * 0.05
+    b = jax.random.normal(keys[3], (8, 64), jnp.float32) * 0.05
+    mant, exp = _pack(w, 4, 32)
+    ref = mxint_matmul_lowrank_ref(x.astype(jnp.float32), mant, exp, a, b, 4, 32)
+    out = quantized_matmul(x, mant, exp, a, b, bits=4, block_size=32,
+                           block_m=16, block_n=64, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_mxint_matmul_batched_input():
+    keys = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(keys[0], (2, 5, 64), jnp.float32)
+    w = jax.random.normal(keys[1], (64, 32), jnp.float32)
+    a = jax.random.normal(keys[2], (64, 4), jnp.float32)
+    b = jax.random.normal(keys[3], (4, 32), jnp.float32)
+    mant, exp = _pack(w, 4, 32)
+    out = quantized_matmul(x, mant, exp, a, b, bits=4, block_size=32,
+                           block_m=8, block_n=32, block_k=32, interpret=True)
+    ref = mxint_matmul_lowrank_ref(x.reshape(-1, 64), mant, exp, a, b, 4, 32)
+    assert out.shape == (2, 5, 32)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, 32), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mxint_quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits,bs", [(4, 32), (3, 32), (2, 16), (8, 32)])
+@pytest.mark.parametrize("shape", [(64, 128), (96, 32)])
+def test_mxint_quant_kernel_vs_ref(bits, bs, shape):
+    if shape[0] % bs:
+        pytest.skip("kernel path requires divisible K")
+    w = jax.random.normal(jax.random.PRNGKey(3), shape, jnp.float32) * 2.0
+    mant_k, exp_k = quantize_weights(w, bits=bits, block_size=bs, interpret=True)
+    mant_r, exp_r = mxint_quantize_ref(w, bits, bs)
+    np.testing.assert_array_equal(np.asarray(mant_k), np.asarray(mant_r))
+    np.testing.assert_array_equal(np.asarray(exp_k), np.asarray(exp_r))
+
+
+def test_mxint_quant_kernel_extreme_values():
+    w = jnp.concatenate([
+        jnp.zeros((32, 32)),
+        jnp.full((32, 32), 1e-20),
+        jnp.full((32, 32), 1e20),
+    ])
+    mant_k, exp_k = quantize_weights(w, bits=4, block_size=32, interpret=True)
+    mant_r, exp_r = mxint_quantize_ref(w, 4, 32)
+    np.testing.assert_array_equal(np.asarray(mant_k), np.asarray(mant_r))
+    np.testing.assert_array_equal(np.asarray(exp_k), np.asarray(exp_r))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,h,hkv,s,d", [
+    (1, 4, 4, 64, 32),     # MHA
+    (2, 8, 2, 128, 16),    # GQA group=4
+    (1, 2, 1, 96, 64),     # padding (96 % 64 != 0 with block 64)
+])
+def test_flash_attention_vs_ref(causal, b, h, hkv, s, d):
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(keys[0], (b, h, s, d), jnp.float32)
+    k = jax.random.normal(keys[1], (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(keys[2], (b, hkv, s, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_kv_len_mask():
+    """Padded KV positions beyond kv_len must not contribute."""
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    b, h, s, d = 1, 2, 64, 16
+    q = jax.random.normal(keys[0], (b, h, s, d), jnp.float32)
+    k = jax.random.normal(keys[1], (b, h, s, d), jnp.float32)
+    v = jax.random.normal(keys[2], (b, h, s, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, kv_len=40, block_q=32,
+                          block_kv=32, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=False, kv_len=40)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_decode_shape():
+    """Sq=1 decode against a long cache (the serve_step attention pattern)."""
+    keys = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(keys[0], (2, 4, 1, 32), jnp.float32)
+    k = jax.random.normal(keys[1], (2, 2, 256, 32), jnp.float32)
+    v = jax.random.normal(keys[2], (2, 2, 256, 32), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, kv_len=200, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=False, kv_len=200)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,272 @@
+"""Model substrate tests: chunked==naive oracles, scan==loop, per-family
+forward/train smoke, calibration taps, PTQ'd forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PTQConfig, quantize_params
+from repro.models import ModelConfig, Taps, forward, init_params, lm_loss
+from repro.models.config import reduced
+from repro.models.mamba2 import mamba2_block, mamba2_block_ref, mamba2_param_shapes
+from repro.models.rwkv6 import rwkv6_param_shapes, rwkv6_time_mix, rwkv6_time_mix_ref
+from repro.models.layers import init_dense, key_iter
+
+
+def _batch(cfg, key, batch=2, seq=16):
+    if cfg.family == "audio":
+        toks = jax.random.randint(key, (batch, cfg.num_codebooks, seq + 1),
+                                  0, cfg.vocab_size)
+        b = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    else:
+        toks = jax.random.randint(key, (batch, seq + 1), 0, cfg.vocab_size)
+        b = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.family == "vlm":
+        b["image_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(7), (batch, cfg.vision_seq, cfg.d_model)) * 0.1
+    return b
+
+
+FAMILY_CFGS = {
+    "dense": ModelConfig(family="dense", num_layers=2, d_model=32, num_heads=4,
+                         num_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8),
+    "moe": ModelConfig(family="moe", num_layers=2, d_model=32, num_heads=4,
+                       num_kv_heads=4, d_ff=48, vocab_size=64, head_dim=8,
+                       num_experts=4, moe_top_k=2),
+    "hybrid_mamba": ModelConfig(family="hybrid_mamba", num_layers=4, d_model=32,
+                                num_heads=4, num_kv_heads=4, head_dim=8,
+                                d_ff=64, vocab_size=64, ssm_state=8,
+                                ssm_head_dim=8, ssm_chunk=4, attn_every=2),
+    "rwkv": ModelConfig(family="rwkv", num_layers=2, d_model=32, num_heads=4,
+                        num_kv_heads=4, d_ff=64, vocab_size=64,
+                        rwkv_head_dim=8, rwkv_decay_lora=4, rwkv_chunk=4),
+    "vlm": ModelConfig(family="vlm", num_layers=4, d_model=32, num_heads=4,
+                       num_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8,
+                       cross_attn_every=2, vision_seq=6),
+    "audio": ModelConfig(family="audio", num_layers=2, d_model=32, num_heads=4,
+                         num_kv_heads=4, d_ff=64, vocab_size=32, head_dim=8,
+                         num_codebooks=4),
+    "encoder": ModelConfig(family="encoder", num_layers=2, d_model=32,
+                           num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=64,
+                           head_dim=8, num_classes=3, max_seq_len=64),
+}
+
+
+# ---------------------------------------------------------------------------
+# chunked == per-step oracles
+# ---------------------------------------------------------------------------
+
+def _mamba_params(cfg, key):
+    ks = key_iter(key)
+    shapes = mamba2_param_shapes(cfg)
+    p = {}
+    for name, shp in shapes.items():
+        if name == "a_log":
+            p[name] = jnp.log(jnp.linspace(1.0, 8.0, cfg.ssm_heads))
+        elif name == "dt_bias":
+            p[name] = jnp.full(shp, -2.0)
+        elif name in ("d_skip", "gate_norm"):
+            p[name] = jnp.ones(shp)
+        else:
+            p[name] = init_dense(next(ks), shp, scale=0.3)
+    return p
+
+
+@pytest.mark.parametrize("seq,chunk", [(16, 4), (16, 16), (12, 5), (8, 1)])
+def test_mamba2_chunked_matches_stepwise(seq, chunk):
+    cfg = ModelConfig(family="hybrid_mamba", d_model=16, ssm_state=8,
+                      ssm_head_dim=8, ssm_chunk=chunk, num_heads=2,
+                      num_kv_heads=2, vocab_size=8)
+    p = _mamba_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, seq, 16)) * 0.5
+    out, _ = mamba2_block(p, x, cfg)
+    ref = mamba2_block_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _rwkv_params(cfg, key):
+    ks = key_iter(key)
+    shapes = rwkv6_param_shapes(cfg)
+    p = {}
+    for name, shp in shapes.items():
+        if name.startswith("mu_"):
+            p[name] = jax.random.uniform(next(ks), shp)
+        elif name == "decay_w0":
+            p[name] = jax.random.uniform(next(ks), shp, minval=-2.0, maxval=1.0)
+        elif name == "bonus_u":
+            p[name] = 0.2 * jax.random.normal(next(ks), shp)
+        elif name == "ln_x":
+            p[name] = jnp.ones(shp)
+        else:
+            p[name] = init_dense(next(ks), shp, scale=0.4)
+    return p
+
+
+@pytest.mark.parametrize("seq,chunk", [(16, 4), (16, 16), (10, 3), (8, 1)])
+def test_rwkv6_chunked_matches_stepwise(seq, chunk):
+    cfg = ModelConfig(family="rwkv", d_model=16, rwkv_head_dim=8,
+                      rwkv_decay_lora=4, rwkv_chunk=chunk, vocab_size=8)
+    p = _rwkv_params(cfg, jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, seq, 16)) * 0.5
+    out, _ = rwkv6_time_mix(p, x, cfg)
+    ref = rwkv6_time_mix_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_rwkv6_strong_decay_no_overflow():
+    """Extreme decay values must not overflow the chunked path."""
+    cfg = ModelConfig(family="rwkv", d_model=16, rwkv_head_dim=8,
+                      rwkv_decay_lora=4, rwkv_chunk=16, vocab_size=8)
+    p = _rwkv_params(cfg, jax.random.PRNGKey(4))
+    p["decay_w0"] = jnp.full((16,), 3.0)   # exp(3)≈20 per-step log decay (clamped)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 32, 16))
+    out, _ = rwkv6_time_mix(p, x, cfg)
+    assert np.all(np.isfinite(np.asarray(out)))
+    ref = rwkv6_time_mix_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# per-family forward/train smoke
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", list(FAMILY_CFGS))
+def test_family_forward_shapes_and_finite(family):
+    cfg = FAMILY_CFGS[family]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, aux, _ = forward(params, batch, cfg)
+    if family == "encoder":
+        assert logits.shape == (2, cfg.num_classes)
+    elif family == "audio":
+        assert logits.shape == (2, cfg.num_codebooks, 16, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, 16, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "hybrid_mamba", "rwkv",
+                                    "vlm", "audio"])
+def test_family_scan_matches_loop(family):
+    import dataclasses
+    cfg = FAMILY_CFGS[family]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits_scan, aux_s, _ = forward(params, batch, cfg)
+    cfg_loop = dataclasses.replace(cfg, scan_layers=False)
+    logits_loop, aux_l, _ = forward(params, batch, cfg_loop)
+    np.testing.assert_allclose(np.asarray(logits_scan), np.asarray(logits_loop),
+                               rtol=2e-4, atol=2e-4)
+    assert float(aux_s) == pytest.approx(float(aux_l), abs=1e-5)
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "hybrid_mamba", "rwkv"])
+def test_family_train_grad_step(family):
+    cfg = FAMILY_CFGS[family]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    (loss, _), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+        params, batch, cfg)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+
+def test_remat_matches_no_remat():
+    import dataclasses
+    cfg = FAMILY_CFGS["dense"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    (l0, _), g0 = jax.value_and_grad(lm_loss, has_aux=True)(params, batch, cfg)
+    cfgr = dataclasses.replace(cfg, remat=True)
+    (l1, _), g1 = jax.value_and_grad(lm_loss, has_aux=True)(params, batch, cfgr)
+    assert float(l0) == pytest.approx(float(l1), rel=1e-6)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# calibration taps + PTQ integration
+# ---------------------------------------------------------------------------
+
+def test_taps_capture_linear_inputs():
+    import dataclasses
+    cfg = dataclasses.replace(FAMILY_CFGS["dense"], scan_layers=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    taps = Taps()
+    forward(params, batch, cfg, taps=taps)
+    stats = taps.layer_stats()
+    assert "blocks/0/attn/wq" in stats and "blocks/1/mlp/wd" in stats
+    s = stats["blocks/0/attn/wq"]
+    assert s.rxx.shape == (cfg.d_model, cfg.d_model)
+    assert s.count == 2 * 16
+
+
+def test_ptq_roundtrip_forward_close_at_8bit():
+    """mxint8 + rank-8 QERA reconstruction ≈ full-precision forward."""
+    import dataclasses
+    cfg = dataclasses.replace(FAMILY_CFGS["dense"], scan_layers=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    taps = Taps()
+    logits_fp, _, _ = forward(params, batch, cfg, taps=taps)
+    stats = taps.layer_stats()
+
+    qcfg = PTQConfig(method="qera_exact", rank=8, quantizer="mxint8")
+    def skey(path):  # params path -> taps key
+        return path.replace("/wq", "/attn/wq").replace("/wk", "/attn/wk") \
+                   .replace("/wv", "/attn/wv").replace("/wo", "/attn/wo") \
+                   .replace("/wg", "/mlp/wg").replace("/wu", "/mlp/wu") \
+                   .replace("/wd", "/mlp/wd")
+    flat_stats = {}
+    for k, v in stats.items():
+        parts = k.split("/")          # blocks/i/sub/name -> blocks/name:i
+        if parts[0] == "blocks":
+            flat_stats[f"blocks/{parts[-1]}:{parts[1]}"] = v
+    qparams = quantize_params(params, qcfg, stats_by_path=flat_stats,
+                              stats_key_fn=lambda p: p)
+    logits_q, _, _ = forward(qparams, batch, cfg)
+    err = np.abs(np.asarray(logits_q - logits_fp)).max()
+    scale = np.abs(np.asarray(logits_fp)).max()
+    assert err < 0.05 * scale + 0.05, (err, scale)
+
+
+def test_decode_cache_matches_full_forward_dense():
+    """Prefill+decode against full-sequence forward (greedy logits match)."""
+    cfg = FAMILY_CFGS["dense"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+    logits_full, _, _ = forward(params, {"tokens": toks}, cfg)
+
+    # prefill 8, then decode 4 one at a time
+    cache = {"blocks": {
+        "k": jnp.zeros((cfg.num_layers, 2, cfg.num_kv_heads, 16, cfg.hd)),
+        "v": jnp.zeros((cfg.num_layers, 2, cfg.num_kv_heads, 16, cfg.hd)),
+    }}
+    lp, _, cache = forward(params, {"tokens": toks[:, :8]}, cfg, cache=cache,
+                           cache_len=jnp.asarray(0, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(logits_full[:, :8]),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(8, 12):
+        lt, _, cache = forward(params, {"tokens": toks[:, t:t + 1]}, cfg,
+                               cache=cache, cache_len=jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lt[:, 0]),
+                                   np.asarray(logits_full[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_param_count_analytic_close():
+    from repro.utils.trees import tree_param_count
+    for fam in ["dense", "rwkv"]:
+        cfg = FAMILY_CFGS[fam]
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        actual = tree_param_count(params)
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.2, (fam, actual, analytic)

@@ -1,0 +1,118 @@
+"""Unit + property tests for the quantization formats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    get_quantizer,
+    mxint_fake_quant,
+    mxint_quantize,
+    mxint_dequantize,
+    pack_mxint,
+    int_fake_quant,
+    nf4_fake_quant,
+)
+from repro.quant.mxint import unpack_mxint, MXINT_CONFIGS
+
+
+def test_average_bits_match_paper():
+    # Paper Table 1/3 W-bits column.
+    assert get_quantizer("mxint4").average_bits == pytest.approx(4.25)
+    assert get_quantizer("mxint3").average_bits == pytest.approx(3.25)
+    assert get_quantizer("mxint2").average_bits == pytest.approx(2.50)
+    assert get_quantizer("mxint2_bs32").average_bits == pytest.approx(2.25)
+
+
+@pytest.mark.parametrize("name", ["mxint8", "mxint4", "mxint3", "mxint2"])
+def test_mxint_roundtrip_error_bound(name):
+    spec = MXINT_CONFIGS[name]
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 48), dtype=jnp.float32)
+    wq = mxint_fake_quant(w, spec.bits, spec.block_size)
+    # per-block max error <= scale/2, scale <= 2 * maxabs / (2^(b-1)-1)
+    wb = w.reshape(-1, spec.block_size, 48)
+    eb = (w - wq).reshape(-1, spec.block_size, 48)
+    maxabs = np.max(np.abs(np.asarray(wb)), axis=1)
+    qmax = 2 ** (spec.bits - 1) - 1
+    bound = (2.0 * maxabs / qmax) / 2 + 1e-7
+    assert np.all(np.max(np.abs(np.asarray(eb)), axis=1) <= bound)
+
+
+@pytest.mark.parametrize("name", ["mxint8", "mxint4", "mxint3", "mxint2"])
+def test_mxint_idempotent(name):
+    spec = MXINT_CONFIGS[name]
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    wq = mxint_fake_quant(w, spec.bits, spec.block_size)
+    wqq = mxint_fake_quant(wq, spec.bits, spec.block_size)
+    np.testing.assert_allclose(np.asarray(wq), np.asarray(wqq), rtol=0, atol=0)
+
+
+def test_mxint_zero_block():
+    w = jnp.zeros((32, 8))
+    wq = mxint_fake_quant(w, 4, 32)
+    assert np.all(np.asarray(wq) == 0)
+
+
+def test_mxint_pack_unpack_consistent():
+    w = jax.random.normal(jax.random.PRNGKey(2), (128, 64))
+    packed = pack_mxint(w, 4, 32)
+    assert packed.mant.shape == (128, 64) and packed.mant.dtype == jnp.int8
+    assert packed.exp.shape == (4, 64) and packed.exp.dtype == jnp.int8
+    deq = unpack_mxint(packed)
+    ref = mxint_fake_quant(w, 4, 32)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(ref), atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 7]),  # bits+1 must still fit int8 mantissa
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mxint_error_decreases_with_bits_property(bits, scale, seed):
+    """More mantissa bits never increase block quantization error (same bs)."""
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (32, 4))) * scale
+    w = jnp.asarray(w)
+    e_lo = float(jnp.linalg.norm(w - mxint_fake_quant(w, bits, 32)))
+    e_hi = float(jnp.linalg.norm(w - mxint_fake_quant(w, bits + 1, 32)))
+    assert e_hi <= e_lo + 1e-5 * max(1.0, e_lo)
+
+
+def test_int_fake_quant_bound():
+    w = jax.random.normal(jax.random.PRNGKey(3), (128, 32))
+    wq = int_fake_quant(w, 4, 64)
+    wb = np.asarray(w).reshape(2, 64, 32)
+    err = np.abs(np.asarray(w - wq)).reshape(2, 64, 32)
+    rng = wb.max(axis=1) - wb.min(axis=1)
+    bound = rng / (2**4 - 1) / 2 + 1e-6
+    assert np.all(err.max(axis=1) <= bound)
+
+
+def test_nf4_levels_and_extremes():
+    w = jax.random.normal(jax.random.PRNGKey(4), (64, 16))
+    wq = nf4_fake_quant(w, block_size=64)
+    # max-|.| element per block is reproduced exactly (level +-1 * absmax)
+    col_absmax_in = np.abs(np.asarray(w)).max(axis=0)
+    col_absmax_out = np.abs(np.asarray(wq)).max(axis=0)
+    np.testing.assert_allclose(col_absmax_in, col_absmax_out, rtol=1e-6)
+
+
+def test_quantizer_registry():
+    for name in ["mxint4", "mxint3", "mxint2", "int4_g64", "nf4", "none"]:
+        q = get_quantizer(name)
+        w = jax.random.normal(jax.random.PRNGKey(5), (64, 64))
+        wq = q(w)
+        assert wq.shape == w.shape and wq.dtype == w.dtype
+    with pytest.raises(KeyError):
+        get_quantizer("fp5")
+
+
+def test_quantizers_jittable():
+    w = jax.random.normal(jax.random.PRNGKey(6), (64, 64))
+    for name in ["mxint4", "int4_g64", "nf4"]:
+        q = get_quantizer(name)
+        out = jax.jit(q.fake_quant)(w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(q(w)), atol=1e-6)

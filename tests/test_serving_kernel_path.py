@@ -1,0 +1,77 @@
+"""The packed Pallas serving path: pack_for_serving + use_pallas forward
+must match the fake-quant (w_tilde) forward; plus randomized-SVD and
+Newton-Schulz solver variants produce near-identical reconstructions."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PTQConfig, quantize_params, stats_from_samples
+from repro.core.api import pack_for_serving
+from repro.core.solvers import solve_qera_exact
+from repro.models import ModelConfig, Taps, forward, init_params
+from repro.quant import get_quantizer
+
+CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=64, head_dim=16,
+                  scan_layers=False)
+
+
+def _quantized():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    taps = Taps()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+    forward(params, {"tokens": toks}, CFG, taps=taps)
+    from benchmarks.common import remap_stats
+    stats = remap_stats(taps.layer_stats())
+    qcfg = PTQConfig(method="qera_approx", rank=8, quantizer="mxint4",
+                     skip_patterns=PTQConfig().skip_patterns)
+    return quantize_params(params, qcfg, stats_by_path=stats), qcfg, toks
+
+
+def test_pack_for_serving_matches_fake_quant_forward():
+    qparams, qcfg, toks = _quantized()
+    logits_ref, _, _ = forward(qparams, {"tokens": toks}, CFG)
+
+    packed = pack_for_serving(qparams, qcfg)
+    from repro.utils.trees import flatten_dict
+    flat = flatten_dict(packed)
+    assert any(k.endswith("/mant") for k in flat), "nothing packed"
+    cfg_pallas = dataclasses.replace(CFG, use_pallas=True)
+    logits_pk, _, _ = forward(packed, {"tokens": toks}, cfg_pallas)
+    np.testing.assert_allclose(np.asarray(logits_pk), np.asarray(logits_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_randomized_svd_solver_close_to_exact():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (96, 64)) / 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (2048, 96)) * \
+        jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (96,)))
+    stats = stats_from_samples(x)
+    w_t = get_quantizer("mxint3")(w)
+    a_e, b_e = solve_qera_exact(w, w_t, 8, stats.rxx, svd_method="exact")
+    a_r, b_r = solve_qera_exact(w, w_t, 8, stats.rxx, svd_method="randomized",
+                                key=jax.random.PRNGKey(3))
+    from repro.core import empirical_output_error
+    err_e = float(empirical_output_error(x, w_t + a_e @ b_e - w))
+    err_r = float(empirical_output_error(x, w_t + a_r @ b_r - w))
+    assert err_r <= err_e * 1.05     # rSVD sketch within 5% of optimal
+
+
+def test_newton_schulz_solver_close_to_eigh():
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (64, 48)) / 8
+    x = jax.random.normal(jax.random.PRNGKey(5), (4096, 64)) * \
+        jnp.exp(0.5 * jax.random.normal(jax.random.PRNGKey(6), (64,)))
+    stats = stats_from_samples(x)
+    w_t = get_quantizer("mxint3")(w)
+    a_e, b_e = solve_qera_exact(w, w_t, 8, stats.rxx, sqrt_method="eigh")
+    a_n, b_n = solve_qera_exact(w, w_t, 8, stats.rxx,
+                                sqrt_method="newton_schulz")
+    from repro.core import empirical_output_error
+    err_e = float(empirical_output_error(x, w_t + a_e @ b_e - w))
+    err_n = float(empirical_output_error(x, w_t + a_n @ b_n - w))
+    assert err_n <= err_e * 1.05     # MXU-native sqrt within 5% of exact

@@ -1,0 +1,114 @@
+"""Tests for the numerical substrate: PSD sqrt, randomized SVD, calibration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    StreamingStats,
+    batch_stats,
+    psd_sqrt_eigh,
+    psd_sqrt_newton_schulz,
+    randomized_svd,
+    stats_from_samples,
+    truncated_svd,
+)
+
+
+def _random_psd(seed, n=16, cond=1e3):
+    key = jax.random.PRNGKey(seed)
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (n, n)))
+    eigs = jnp.logspace(0, np.log10(cond), n)
+    return (q * eigs) @ q.T
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_psd_sqrt_eigh_property(seed):
+    r = _random_psd(seed)
+    s, si = psd_sqrt_eigh(r)
+    np.testing.assert_allclose(np.asarray(s @ s), np.asarray(r), rtol=2e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s @ si), np.eye(r.shape[0]),
+                               rtol=1e-2, atol=2e-3)
+
+
+def test_newton_schulz_matches_eigh():
+    r = _random_psd(0, n=24, cond=100.0)
+    s_e, si_e = psd_sqrt_eigh(r)
+    s_n, si_n = psd_sqrt_newton_schulz(r, num_iters=40)
+    np.testing.assert_allclose(np.asarray(s_n), np.asarray(s_e), rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(si_n), np.asarray(si_e), rtol=5e-2, atol=5e-3)
+
+
+def test_newton_schulz_high_condition_converges():
+    r = _random_psd(1, n=16, cond=1e4)
+    s_n, _ = psd_sqrt_newton_schulz(r, num_iters=60)
+    np.testing.assert_allclose(np.asarray(s_n @ s_n), np.asarray(r),
+                               rtol=5e-2, atol=5e-1)
+
+
+def test_truncated_svd_matches_numpy():
+    a = jax.random.normal(jax.random.PRNGKey(2), (32, 20))
+    u, s, vt = truncated_svd(a, 5)
+    un, sn, vtn = np.linalg.svd(np.asarray(a), full_matrices=False)
+    np.testing.assert_allclose(np.asarray(s), sn[:5], rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(u * s) @ np.asarray(vt),
+                               (un[:, :5] * sn[:5]) @ vtn[:5], rtol=1e-3, atol=1e-4)
+
+
+def test_randomized_svd_close_to_exact():
+    # low effective rank matrix => rSVD nearly exact
+    key = jax.random.PRNGKey(3)
+    u = jax.random.normal(key, (64, 8))
+    v = jax.random.normal(jax.random.PRNGKey(4), (8, 48))
+    a = u @ v + 0.01 * jax.random.normal(jax.random.PRNGKey(5), (64, 48))
+    ue, se, vte = truncated_svd(a, 8)
+    ur, sr, vtr = randomized_svd(a, 8, key=jax.random.PRNGKey(6))
+    np.testing.assert_allclose(np.asarray(sr), np.asarray(se), rtol=1e-2)
+    err_e = np.linalg.norm(np.asarray(a) - np.asarray((ue * se) @ vte))
+    err_r = np.linalg.norm(np.asarray(a) - np.asarray((ur * sr) @ vtr))
+    assert err_r <= err_e * 1.1 + 1e-5
+
+
+def test_streaming_equals_batch_stats():
+    x = jax.random.normal(jax.random.PRNGKey(7), (1000, 12)) * 3.0
+    full = stats_from_samples(x)
+    acc = StreamingStats(dim=12)
+    for chunk in jnp.split(x, 10):
+        acc.update(chunk)
+    np.testing.assert_allclose(np.asarray(acc.rxx), np.asarray(full.rxx),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(acc.mean_x2, np.asarray(full.mean_x2), rtol=1e-5)
+    np.testing.assert_allclose(acc.mean_abs, np.asarray(full.mean_abs), rtol=1e-5)
+    assert acc.count == 1000
+
+
+def test_streaming_merge():
+    x = jax.random.normal(jax.random.PRNGKey(8), (256, 8))
+    a, b = StreamingStats(dim=8), StreamingStats(dim=8)
+    a.update(x[:100])
+    b.update(x[100:])
+    a.merge(b)
+    ref = stats_from_samples(x)
+    np.testing.assert_allclose(np.asarray(a.rxx), np.asarray(ref.rxx),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_batch_stats_flattens_leading_dims():
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 16, 8))
+    s3 = batch_stats(x)
+    s2 = batch_stats(x.reshape(-1, 8))
+    np.testing.assert_allclose(np.asarray(s3["sum_xx"]), np.asarray(s2["sum_xx"]),
+                               rtol=1e-6)
+    assert float(s3["count"]) == 64
+
+
+def test_rxx_psd_and_symmetric():
+    x = jax.random.normal(jax.random.PRNGKey(10), (512, 10))
+    st_ = stats_from_samples(x)
+    r = np.asarray(st_.rxx)
+    np.testing.assert_allclose(r, r.T, atol=1e-7)
+    eigs = np.linalg.eigvalsh(r)
+    assert eigs.min() >= -1e-5
