@@ -28,6 +28,16 @@ def _weight_bytes(k, n, bits, bs, rank, lowrank_bytes=2):
     return packed + lowrank
 
 
+def timed_us(fn, reps: int = 3) -> float:
+    """Mean wall-clock µs/call: one explicit blocked warmup (compile/trace),
+    then ``reps`` blocked calls under ``time.perf_counter``."""
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
 def run(csv_rows: list | None = None) -> dict:
     results = {}
     m, k, n, r, bits, bs = 32, 256, 256, 16, 4, 32
@@ -47,10 +57,7 @@ def run(csv_rows: list | None = None) -> dict:
     out, ref = fused(), mxint_matmul_lowrank_ref(x, mant, exp, a, b, bits, bs)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
                                atol=1e-4)
-    t0 = time.time()
-    for _ in range(3):
-        jax.block_until_ready(fused())
-    us = (time.time() - t0) / 3 * 1e6
+    us = timed_us(fused)
     flops = 2 * m * k * n + 2 * m * r * (k + n)
     bf16_bytes = k * n * 2
     q_bytes = _weight_bytes(k, n, bits, bs, r)
@@ -79,10 +86,7 @@ def run(csv_rows: list | None = None) -> dict:
     np.testing.assert_allclose(np.asarray(fa()),
                                np.asarray(flash_attention_ref(q_, k_, v_)),
                                rtol=1e-4, atol=1e-4)
-    t0 = time.time()
-    for _ in range(3):
-        jax.block_until_ready(fa())
-    us = (time.time() - t0) / 3 * 1e6
+    us = timed_us(fa)
     naive_bytes = bq * h * s * s * 4            # materialized scores
     flash_bytes = bq * h * s * d * 4 * 4        # q,k,v,o only
     results["flash_attention"] = {

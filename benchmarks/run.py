@@ -7,6 +7,7 @@
   table3_ptq          Tab. 3/4: PTQ quality across methods/bits
   table8_runtime      Tab. 7/8: init runtime exact vs approx (+sqrtm kernels)
   kernel_bench        Pallas kernels vs refs + HBM accounting
+  decode_throughput   decode fast path: tokens/sec + bytes/token (BENCH json)
   roofline            §Roofline from the dry-run artifacts
 
 Run all:      PYTHONPATH=src python -m benchmarks.run
@@ -21,7 +22,8 @@ import time
 import traceback
 
 BENCHES = ["fig1_output_error", "fig3_calib_size", "table1_qpeft",
-           "table3_ptq", "table8_runtime", "kernel_bench", "roofline"]
+           "table3_ptq", "table8_runtime", "kernel_bench",
+           "decode_throughput", "roofline"]
 
 
 def main() -> None:

@@ -3,8 +3,10 @@ mixed batch of requests, stream greedy tokens, verify against fp32 rollouts.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
+import pathlib
 import sys
-sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
+_root = str(pathlib.Path(__file__).resolve().parent.parent)
+sys.path.insert(0, _root) if _root not in sys.path else None
 
 import numpy as np
 

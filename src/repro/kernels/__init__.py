@@ -11,6 +11,7 @@ EXAMPLE.md documents the layout conventions.
 
 from repro.kernels.ops import (
     flash_attention,
+    pick_blocks,
     quantize_weights,
     quantized_matmul,
     quantized_matmul_packed,

@@ -1,18 +1,32 @@
-"""Pallas TPU kernel: fused MXINT dequant-matmul with low-rank epilogue.
+"""Pallas TPU kernel: fused MXINT dequant-matmul with in-kernel low-rank path.
 
-Computes  y = x @ dq(Wq) + t @ B   where t = x @ A is the small (M, r)
-low-rank activation (r ≤ 64), Wq is stored packed in HBM as int8 mantissas
-(K, N) plus int8 shared exponents (K/bs, N).
+Computes  y = x @ dq(Wq) + (x @ A) @ B  in ONE kernel launch: Wq is stored
+packed in HBM as int8 mantissas (K, N) plus int8 shared exponents (K/bs, N);
+A is the (K, r) low-rank factor (r ≤ 64), B the (r, N) one.
 
 This is the serving hot loop of QERA-style PTQ: weight bytes moved from HBM
 drop ~4x at 4-bit vs bf16 (memory-roofline win), dequantization happens in
-VMEM right before the MXU dot, and the low-rank correction is fused into the
-final K-step epilogue so y is written exactly once.
+VMEM right before the MXU dot, and — unlike the two-launch design where
+t = x @ A was a standalone f32 GEMM with its own HBM round-trip — the
+low-rank *prologue* is folded into the K-loop: during the FIRST N-block's
+K-sweep each K-step accumulates t_acc += x_tile @ A_tile into a tiny (bm, r)
+VMEM scratch; the scratch persists across grid steps, so every later N-block
+of the same M-block reuses the finished t (no recompute — the prologue costs
+one M*K*r pass per launch, exactly the old standalone GEMM's FLOPs), and the
+final K-step applies t_acc @ B in the epilogue so y is written exactly once.
 
-Tiling: grid = (M/bm, N/bn, K/bk), K innermost for accumulation in an
-f32 VMEM scratch tile (bm, bn).  bk must be a multiple of the MXINT block
-size so each exponent tile covers whole blocks.  MXU-aligned defaults:
-bm = bn = bk = 128 (>= 8x128 VREG lanes, f32 accumulate).
+Two grid layouts share one kernel body:
+
+* prefill (``mxint_matmul_lowrank_pallas``): grid = (M/bm, N/bn, K/bk),
+  K innermost; MXU-aligned defaults bm = bn = bk = 128.
+* decode  (``mxint_matmul_lowrank_decode_pallas``): M is tiny (the slot
+  count), so the whole (padded) M lives in a single block and the grid is
+  N-major 2D (N/bn, K/bk) — decode stops padding to prefill-sized M tiles
+  and weight tiles stream exactly once.
+
+bk must be a multiple of the MXINT block size so each exponent tile covers
+whole blocks.  Accumulation is in f32 VMEM scratch ((bm, bn) main + (bm, r)
+low-rank).
 """
 
 from __future__ import annotations
@@ -25,13 +39,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, mant_ref, exp_ref, t_ref, b_ref, o_ref, acc_ref, *,
-            bits: int, block_size: int, out_dtype):
-    k_step = pl.program_id(2)
+def _kernel(x_ref, mant_ref, exp_ref, a_ref, b_ref, o_ref, acc_ref, t_ref, *,
+            bits: int, block_size: int, out_dtype, n_axis: int, k_axis: int):
+    k_step = pl.program_id(k_axis)
+    n_step = pl.program_id(n_axis)
 
     @pl.when(k_step == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((k_step == 0) & (n_step == 0))
+    def _init_t():
+        t_ref[...] = jnp.zeros_like(t_ref)
 
     # In-VMEM dequant: scale[u, n] applies to mantissa rows u*bs:(u+1)*bs.
     mant = mant_ref[...]                          # (bk, bn) int8
@@ -42,22 +61,47 @@ def _kernel(x_ref, mant_ref, exp_ref, t_ref, b_ref, o_ref, acc_ref, *,
     scale_full = jnp.broadcast_to(
         scale[:, None, :], (nblk, block_size, bn)).reshape(bk, bn)
     w = mant.astype(jnp.float32) * scale_full
-    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
-                            preferred_element_type=jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
-    @pl.when(k_step == pl.num_programs(2) - 1)
+    # fused low-rank prologue: t = x @ A depends only on the M block, and the
+    # grid sweeps K innermost with N before M, so accumulate t ONLY during
+    # the first N-block's K-sweep; the scratch persists across grid steps and
+    # every later N-block reuses the finished t from VMEM.  Total extra MXU
+    # work is one M*K*r pass per launch — the cost of the old standalone
+    # GEMM, minus its kernel launch and HBM round-trip for t.
+    @pl.when(n_step == 0)
+    def _acc_t():
+        t_ref[...] += jnp.dot(x, a_ref[...].astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == pl.num_programs(k_axis) - 1)
     def _epilogue():
-        lowrank = jnp.dot(t_ref[...].astype(jnp.float32),
-                          b_ref[...].astype(jnp.float32),
+        lowrank = jnp.dot(t_ref[...], b_ref[...].astype(jnp.float32),
                           preferred_element_type=jnp.float32)
         o_ref[...] = (acc_ref[...] + lowrank).astype(out_dtype)
+
+
+def _check_shapes(x, mant, exp, a, b, block_size, block_n, block_k):
+    m, k = x.shape
+    kn, n = mant.shape
+    r = a.shape[1]
+    assert kn == k and exp.shape == (k // block_size, n), (
+        f"packed shapes {mant.shape}/{exp.shape} mismatch x {x.shape}")
+    assert a.shape == (k, r) and b.shape == (r, n), (
+        f"low-rank factors {a.shape}/{b.shape} mismatch ({k=}, {n=})")
+    assert n % block_n == 0 and k % block_k == 0, (
+        f"shapes ({m},{k},{n}) must divide blocks ({block_k},{block_n}) "
+        "— use kernels.ops wrapper for padding/heuristics")
+    assert block_k % block_size == 0, "block_k must cover whole MXINT blocks"
+    return m, k, n, r
 
 
 def mxint_matmul_lowrank_pallas(
     x: jax.Array,        # (M, K)
     mant: jax.Array,     # (K, N) int8
     exp: jax.Array,      # (K // block_size, N) int8
-    t: jax.Array,        # (M, r)  = x @ A, precomputed (r is tiny)
+    a: jax.Array,        # (K, r) low-rank down-projection (fused in-kernel)
     b: jax.Array,        # (r, N)
     *,
     bits: int,
@@ -68,18 +112,14 @@ def mxint_matmul_lowrank_pallas(
     out_dtype=jnp.float32,
     interpret: bool = False,
 ) -> jax.Array:
-    m, k = x.shape
-    kn, n = mant.shape
-    r = t.shape[1]
-    assert kn == k and exp.shape == (k // block_size, n) and b.shape == (r, n)
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
-        f"shapes ({m},{k},{n}) must divide blocks ({block_m},{block_k},{block_n}) "
-        "— use kernels.ops wrapper for padding")
-    assert block_k % block_size == 0, "block_k must cover whole MXINT blocks"
+    """Prefill-shaped launch: 3D grid, K innermost for accumulation."""
+    m, k, n, r = _check_shapes(x, mant, exp, a, b, block_size, block_n, block_k)
+    assert m % block_m == 0, (
+        f"M={m} must divide block_m={block_m} — use kernels.ops wrapper")
 
     grid = (m // block_m, n // block_n, k // block_k)
     kernel = functools.partial(_kernel, bits=bits, block_size=block_size,
-                               out_dtype=out_dtype)
+                               out_dtype=out_dtype, n_axis=1, k_axis=2)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -87,11 +127,52 @@ def mxint_matmul_lowrank_pallas(
             pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
             pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
             pl.BlockSpec((block_k // block_size, block_n), lambda i, j, s: (s, j)),
-            pl.BlockSpec((block_m, r), lambda i, j, s: (i, 0)),
+            pl.BlockSpec((block_k, r), lambda i, j, s: (s, 0)),
             pl.BlockSpec((r, block_n), lambda i, j, s: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32),
+                        pltpu.VMEM((block_m, r), jnp.float32)],
         interpret=interpret,
-    )(x, mant, exp, t, b)
+    )(x, mant, exp, a, b)
+
+
+def mxint_matmul_lowrank_decode_pallas(
+    x: jax.Array,        # (M, K) — M tiny (decode slot count), whole-M block
+    mant: jax.Array,     # (K, N) int8
+    exp: jax.Array,      # (K // block_size, N) int8
+    a: jax.Array,        # (K, r)
+    b: jax.Array,        # (r, N)
+    *,
+    bits: int,
+    block_size: int,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Skinny-M decode launch: the whole (padded) M is one block, grid is
+    N-major 2D (N/bn, K/bk) — no M tiling, weight tiles stream exactly once
+    per token step."""
+    m, k, n, r = _check_shapes(x, mant, exp, a, b, block_size, block_n, block_k)
+
+    grid = (n // block_n, k // block_k)
+    kernel = functools.partial(_kernel, bits=bits, block_size=block_size,
+                               out_dtype=out_dtype, n_axis=0, k_axis=1)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda j, s: (0, s)),
+            pl.BlockSpec((block_k, block_n), lambda j, s: (s, j)),
+            pl.BlockSpec((block_k // block_size, block_n), lambda j, s: (s, j)),
+            pl.BlockSpec((block_k, r), lambda j, s: (s, 0)),
+            pl.BlockSpec((r, block_n), lambda j, s: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j, s: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((m, block_n), jnp.float32),
+                        pltpu.VMEM((m, r), jnp.float32)],
+        interpret=interpret,
+    )(x, mant, exp, a, b)

@@ -1,12 +1,17 @@
 """Public jit'd wrappers for the Pallas kernels.
 
 Handle non-aligned shapes by padding to block multiples (cropped on the way
-out), pick interpret mode automatically off-TPU, and expose a uniform API the
-model layer can call:
+out), pick interpret mode automatically off-TPU, choose block sizes from a
+(M, K, N)-keyed heuristic, and expose a uniform API the model layer can call:
 
-    quantized_matmul(x, packed, a, b)    # the QER serving GEMM
+    quantized_matmul(x, packed, a, b)    # the QER serving GEMM (one launch)
     quantize_weights(w, bits, block_size)
     flash_attention(q, k, v, causal=..., kv_len=...)
+
+``quantized_matmul`` issues exactly one Pallas launch: the low-rank
+``t = x @ A`` prologue is fused into the kernel's K-loop (no standalone f32
+GEMM, no HBM round-trip for t).  Decode-shaped calls (M = slot count) take
+the skinny-M N-major-grid variant instead of padding M up to prefill tiles.
 """
 
 from __future__ import annotations
@@ -16,10 +21,17 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.mxint_matmul import mxint_matmul_lowrank_pallas
+from repro.kernels.mxint_matmul import (
+    mxint_matmul_lowrank_decode_pallas,
+    mxint_matmul_lowrank_pallas,
+)
 from repro.kernels.mxint_quant import mxint_quantize_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.quant.mxint import PackedMXINT
+
+# Decode = the whole (8-padded) M fits one skinny block.  Above this M the
+# 3D prefill grid amortizes weight streaming across M tiles instead.
+_DECODE_M_MAX = 32
 
 
 def _on_tpu() -> bool:
@@ -35,13 +47,58 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def _largest_divisor(dim: int, cap: int, mult: int = 1) -> int:
+    """Largest d ≤ cap with dim % d == 0 and d % mult == 0 (0 if none)."""
+    for d in range(min(cap, dim), mult - 1, -1):
+        if dim % d == 0 and d % mult == 0:
+            return d
+    return 0
+
+
+def pick_blocks(m: int, k: int, n: int, *, block_size: int,
+                block_m: int = 128, block_n: int = 128,
+                block_k: int = 128) -> tuple[int, int, int, bool]:
+    """Block-size heuristic keyed on (M, K, N) -> (bm, bn, bk, decode).
+
+    Regimes (caps are the caller-supplied block_* values):
+
+      M regime            bm                  grid
+      ------------------  ------------------  ---------------------------
+      decode (M ≤ 32*)    M padded up to 8    2D N-major, whole-M block
+      prefill (M large)   min(block_m, M8)    3D (M, N, K), K innermost
+                          (M8 = 8-padded M)
+
+      (* and the padded M still fits under block_m)
+
+    bk: largest divisor of K that is a multiple of the MXINT block size and
+    ≤ block_k — NOT a collapse to block_size, which tanked tile efficiency
+    whenever K wasn't a block_k multiple (e.g. K=192, bk=128 now picks 96,
+    not 32).  bn: block_n when it divides N, else the largest divisor of N
+    ≤ block_n that keeps 8-lane alignment (whole-N fallback).
+    """
+    bk = _largest_divisor(k, block_k, block_size) or block_size
+    if n % block_n == 0:
+        bn = block_n
+    else:
+        bn = _largest_divisor(n, block_n, 8) or n
+    m_pad = -(-m // 8) * 8
+    decode = m_pad <= min(block_m, _DECODE_M_MAX)
+    # prefill bm stays 8-sublane-aligned too (Mosaic rejects e.g. bm=33)
+    bm = m_pad if decode else min(block_m, m_pad)
+    return bm, bn, bk, decode
+
+
 @partial(jax.jit, static_argnames=("bits", "block_size", "block_m", "block_n",
                                    "block_k", "interpret"))
 def quantized_matmul(x: jax.Array, mant: jax.Array, exp: jax.Array,
                      a: jax.Array, b: jax.Array, *, bits: int, block_size: int,
                      block_m: int = 128, block_n: int = 128, block_k: int = 128,
                      interpret: bool | None = None) -> jax.Array:
-    """y = x @ dq(mant, exp) + (x @ a) @ b; x may have leading batch dims."""
+    """y = x @ dq(mant, exp) + (x @ a) @ b; x may have leading batch dims.
+
+    One fused Pallas launch: ``a`` goes into the kernel and t = x @ a is
+    accumulated in VMEM scratch across K-steps (no separate GEMM).
+    """
     if interpret is None:
         interpret = not _on_tpu()
     lead = x.shape[:-1]
@@ -50,18 +107,17 @@ def quantized_matmul(x: jax.Array, mant: jax.Array, exp: jax.Array,
     x2 = x.reshape(-1, k)
     m = x2.shape[0]
 
-    bm = min(block_m, max(8, m))
-    bk = block_k
-    if k % bk:                       # shrink to a divisor covering MX blocks
-        bk = block_size
-    bn = block_n if n % block_n == 0 else n
-
-    t = x2.astype(jnp.float32) @ a.astype(jnp.float32)
+    bm, bn, bk, decode = pick_blocks(m, k, n, block_size=block_size,
+                                     block_m=block_m, block_n=block_n,
+                                     block_k=block_k)
     x2p = _pad_to(x2, 0, bm)
-    tp = _pad_to(t, 0, bm)
-    y = mxint_matmul_lowrank_pallas(
-        x2p, mant, exp, tp, b, bits=bits, block_size=block_size,
-        block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    common = dict(bits=bits, block_size=block_size, block_n=bn, block_k=bk,
+                  interpret=interpret)
+    if decode:
+        y = mxint_matmul_lowrank_decode_pallas(x2p, mant, exp, a, b, **common)
+    else:
+        y = mxint_matmul_lowrank_pallas(x2p, mant, exp, a, b, block_m=bm,
+                                        **common)
     return y[:m].reshape(*lead, n)
 
 

@@ -18,6 +18,9 @@ def mxint_matmul_lowrank_ref(x: jax.Array, mant: jax.Array, exp: jax.Array,
     """y = x @ dq(Wq) + (x @ A) @ B  with f32 accumulation.
 
     x: (M, K); mant: (K, N) int8; exp: (K//bs, N) int8; a: (K, r); b: (r, N).
+    Oracle for BOTH kernel variants (prefill 3D grid and skinny-M decode
+    N-major grid) — the fused in-kernel prologue must match this unfused
+    two-GEMM form exactly up to f32 accumulation order.
     """
     k, n = mant.shape
     mant_b = mant.reshape(k // block_size, block_size, n)

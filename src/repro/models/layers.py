@@ -57,8 +57,11 @@ def linear(p: Any, x: jax.Array, *, taps: Taps | None = None,
     """x @ W for plain leaves; QER form for quantized dicts.
 
     Packed dicts ({"mant","exp",...}) dispatch to the fused Pallas kernel on
-    TPU or to an in-graph dequant (GSPMD-shardable; weights stream as int8 —
-    the serving memory-roofline win) elsewhere.
+    TPU — a SINGLE launch per layer per token: lora_a goes into the kernel
+    and the low-rank prologue t = x @ A accumulates in VMEM alongside the
+    dequant GEMM (kernels/ops.quantized_matmul) — or to an in-graph dequant
+    (GSPMD-shardable; weights stream as int8 — the serving memory-roofline
+    win) elsewhere.
     """
     if taps is not None and name:
         taps.record(name, x)

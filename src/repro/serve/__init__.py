@@ -1,7 +1,9 @@
 from repro.serve.engine import (
     cache_shapes,
     greedy_generate,
+    greedy_generate_loop,
     init_cache,
     make_decode_step,
     make_prefill_step,
+    scan_generate,
 )

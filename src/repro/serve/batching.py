@@ -8,7 +8,10 @@ decoding; finished slots are freed immediately.
 Implementation notes for the JAX runtime:
 * one (B, max_len) KV cache, slot = batch row; per-slot lengths vector;
 * prefill computes the prompt with batch=1 and writes its cache rows into
-  the slot (dynamic_update_slice on the batch axis);
+  the slot via ONE jitted ``place_slot`` call with the big cache donated
+  (zero-copy admission: XLA updates the cache in place instead of copying
+  every leaf, and the slot index is a traced scalar so one compile serves
+  every slot);
 * decode advances ALL active slots each step with a single decode_step call
   (inactive slots are masked out of sampling).
 """
@@ -24,6 +27,32 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.serve.engine import init_cache, make_decode_step, make_prefill_step
+
+
+def make_place_slot(num_slots: int) -> Callable:
+    """(cache, cache1, slot) -> cache with cache1's batch row written at slot.
+
+    The batch axis differs per leaf family; it is the (static) axis whose
+    size == num_slots in the big leaf and 1 in the small one.  ``slot`` is a
+    traced scalar, so the jitted function compiles once for all slots; jit
+    with ``donate_argnums=(0,)`` to update the cache buffers in place.
+    """
+
+    def place_slot(cache: Any, cache1: Any, slot: jax.Array) -> Any:
+        zero = jnp.zeros((), jnp.int32)
+
+        def place(big, small):
+            for ax in range(big.ndim):
+                if big.shape[ax] == num_slots and small.shape[ax] == 1:
+                    idx = [zero] * big.ndim
+                    idx[ax] = slot
+                    return jax.lax.dynamic_update_slice(
+                        big, small.astype(big.dtype), tuple(idx))
+            raise ValueError("no batch axis found")
+
+        return jax.tree.map(place, cache, cache1)
+
+    return place_slot
 
 
 @dataclasses.dataclass
@@ -48,6 +77,11 @@ class ContinuousBatcher:
         self.last_tok = np.zeros(num_slots, np.int32)
         self._prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
         self._decode = jax.jit(make_decode_step(cfg))
+        # donate the big cache so admission is a true in-place slot write
+        # (no full-cache copy); CPU ignores donation, so only request it on
+        # backends that implement it to avoid per-call warnings.
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        self._place = jax.jit(make_place_slot(num_slots), donate_argnums=donate)
         self.queue: list[Request] = []
 
     # -- admission -----------------------------------------------------------
@@ -64,22 +98,11 @@ class ContinuousBatcher:
             req = self.queue.pop(0)
             prompt = jnp.asarray(req.prompt[None, :])            # (1, len)
             logits, cache1 = self._prefill(self.params, {"tokens": prompt})
-            # copy the single-row cache into this slot's row
-            def place(big, small):
-                # batch axis differs per leaf family; it is the axis whose
-                # size == num_slots in big and 1 in small
-                for ax in range(big.ndim):
-                    if big.shape[ax] == self.b and small.shape[ax] == 1:
-                        idx = [0] * big.ndim
-                        idx[ax] = slot
-                        pad = [(0, 0)] * small.ndim
-                        la = small.shape[:ax] + (1,) + small.shape[ax + 1:]
-                        return jax.lax.dynamic_update_slice(
-                            big, small.astype(big.dtype), tuple(
-                                jnp.asarray(i) for i in idx))
-                raise ValueError("no batch axis found")
-            # pad the prompt cache rows to max_len happens inside prefill
-            self.cache = jax.tree.map(place, self.cache, cache1)
+            # write the single-row cache into this slot's row: one jitted
+            # call, slot as a traced scalar (prompt cache rows were already
+            # padded to max_len inside prefill)
+            self.cache = self._place(self.cache, cache1,
+                                     jnp.asarray(slot, jnp.int32))
             tok = int(jnp.argmax(logits[0, -1]))
             req.output.append(tok)
             self.slot_req[slot] = req

@@ -2,7 +2,10 @@
 
 ``decode_step`` is what the ``decode_32k`` / ``long_500k`` dry-run cells
 lower: one new token against a seq_len cache.  ``prefill_step`` fills the
-cache from a prompt (``prefill_32k``).  Caches:
+cache from a prompt (``prefill_32k``).  ``scan_generate`` is the decode fast
+path: prefill + an N-token ``lax.scan`` rollout compiled ONCE, with argmax
+and eos masking on device (``greedy_generate_loop`` keeps the python-loop
+reference).  Caches:
 
   dense/moe/audio/vlm : {"blocks": {"k","v": (L, B, KVH, S_max, hd)}}
   hybrid_mamba        : {"blocks": {"conv_*", "ssm"}, "shared_attn": {"k","v"}}
@@ -88,9 +91,80 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
     return decode_step
 
 
+@partial(jax.jit, static_argnames=("cfg", "steps", "max_len", "has_eos"))
+def _scan_generate(params, prompt: jax.Array, eos_tok: jax.Array, *,
+                   cfg: ModelConfig, steps: int, max_len: int, has_eos: bool):
+    """One-compile greedy rollout: prefill + a ``lax.scan`` over decode steps.
+
+    Everything stays on device — argmax, eos masking, cache updates — so an
+    N-token rollout is a single XLA executable with zero per-token host
+    round-trips (vs. N jit calls + N host syncs for the python loop).  The
+    eos *value* is a traced scalar (only its presence is static), so
+    per-request eos ids never retrace the rollout.
+    """
+    b, s = prompt.shape
+    cache = init_cache(cfg, b, max_len)
+    logits, _, cache = forward(params, {"tokens": prompt}, cfg, cache=cache,
+                               cache_len=jnp.zeros((), jnp.int32))
+    tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(prompt.dtype)
+    done0 = (tok0 == eos_tok.astype(tok0.dtype) if has_eos
+             else jnp.zeros((b,), bool))
+
+    def body(carry, t):
+        cache, tok, done = carry
+        logits, _, cache = forward(params, {"tokens": tok[:, None]}, cfg,
+                                   cache=cache, cache_len=t)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(tok.dtype)
+        if has_eos:
+            # rows that already emitted eos keep emitting eos (masked greedy)
+            eos = eos_tok.astype(nxt.dtype)
+            nxt = jnp.where(done, eos, nxt)
+            done = done | (nxt == eos)
+        return (cache, nxt, done), nxt
+
+    positions = jnp.arange(s, s + steps - 1, dtype=jnp.int32)
+    _, toks = jax.lax.scan(body, (cache, tok0, done0), positions)
+    return jnp.concatenate([tok0[:, None], toks.T], axis=1)
+
+
+def scan_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
+                  max_len: int | None = None, eos_id: int | None = None):
+    """Fused greedy decoding: compiles once per (shape, steps), returns the
+    (B, steps) token matrix with no per-token host sync."""
+    _, s = prompt.shape
+    eos_tok = jnp.asarray(0 if eos_id is None else eos_id, jnp.int32)
+    return _scan_generate(params, prompt, eos_tok, cfg=cfg, steps=steps,
+                          max_len=max_len or (s + steps),
+                          has_eos=eos_id is not None)
+
+
 def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
-                    steps: int, max_len: int | None = None):
-    """Reference greedy decoding loop (prefill + token-by-token)."""
+                    steps: int, max_len: int | None = None,
+                    eos_id: int | None = None):
+    """Greedy decoding (prefill + N-token rollout) — the scan fast path."""
+    return scan_generate(params, cfg, prompt, steps, max_len=max_len,
+                         eos_id=eos_id)
+
+
+_DECODE_STEP_CACHE: dict[ModelConfig, Callable] = {}
+
+
+def _decode_step_jit(cfg: ModelConfig) -> Callable:
+    """Per-config cached jit of the decode step (a fresh jax.jit wrapper per
+    call would re-trace and re-compile every time)."""
+    fn = _DECODE_STEP_CACHE.get(cfg)
+    if fn is None:
+        fn = _DECODE_STEP_CACHE[cfg] = jax.jit(make_decode_step(cfg))
+    return fn
+
+
+def greedy_generate_loop(params, cfg: ModelConfig, prompt: jax.Array,
+                         steps: int, max_len: int | None = None):
+    """Reference python token loop (one jit call + host sync per token).
+
+    Kept as the correctness oracle for ``scan_generate`` and as the slow
+    baseline in the decode-throughput benchmark.
+    """
     b, s = prompt.shape
     max_len = max_len or (s + steps)
     cache = init_cache(cfg, b, max_len)
@@ -98,7 +172,7 @@ def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
                                cache_len=jnp.zeros((), jnp.int32))
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(prompt.dtype)
     out = [tok]
-    decode = jax.jit(make_decode_step(cfg))
+    decode = _decode_step_jit(cfg)
     for t in range(steps - 1):
         logits, cache = decode(params, cache, {"tokens": tok[:, None]},
                                jnp.asarray(s + t, jnp.int32))

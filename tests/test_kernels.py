@@ -8,7 +8,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import flash_attention, quantize_weights, quantized_matmul
+from repro.kernels.ops import (
+    flash_attention,
+    pick_blocks,
+    quantize_weights,
+    quantized_matmul,
+)
 from repro.kernels.ref import (
     flash_attention_ref,
     mxint_matmul_lowrank_ref,
@@ -75,6 +80,47 @@ def test_mxint_matmul_batched_input():
     assert out.shape == (2, 5, 32)
     np.testing.assert_allclose(np.asarray(out).reshape(-1, 32), np.asarray(ref),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n,r", [
+    (4, 160, 96, 8),       # decode path; K forces the divisor fallback (bk=32)
+    (8, 192, 128, 8),      # decode path; bk = 96, not the old collapse to 32
+    (33, 192, 96, 16),     # prefill path (padded M) with non-128 K and N
+    (12, 64, 48, 4),       # decode path; N falls back to a divisor block
+])
+def test_fused_prologue_nonaligned_shapes(m, k, n, r):
+    """Default-block calls hit the (M, K, N) heuristic — decode variant for
+    skinny M, largest-divisor bk/bn — and must still match the unfused ref."""
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    x = jax.random.normal(keys[0], (m, k), jnp.float32)
+    w = jax.random.normal(keys[1], (k, n), jnp.float32) * 0.1
+    a = jax.random.normal(keys[2], (k, r), jnp.float32) * 0.05
+    b = jax.random.normal(keys[3], (r, n), jnp.float32) * 0.05
+    mant, exp = _pack(w, 4, 32)
+    ref = mxint_matmul_lowrank_ref(x, mant, exp, a, b, 4, 32)
+    out = quantized_matmul(x, mant, exp, a, b, bits=4, block_size=32,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pick_blocks_heuristic():
+    # decode regime: whole (8-padded) M in one block
+    bm, bn, bk, decode = pick_blocks(4, 256, 256, block_size=32)
+    assert (bm, bn, bk, decode) == (8, 128, 128, True)
+    # prefill regime: large M tiles at block_m
+    bm, bn, bk, decode = pick_blocks(256, 256, 256, block_size=32)
+    assert (bm, bn, bk, decode) == (128, 128, 128, False)
+    # prefill bm stays 8-sublane-aligned (never e.g. 33)
+    bm, _, _, decode = pick_blocks(33, 128, 128, block_size=32)
+    assert (bm, decode) == (40, False)
+    # block_k fallback picks the largest divisor that covers MX blocks,
+    # not a collapse straight to block_size
+    assert pick_blocks(4, 192, 128, block_size=32)[2] == 96
+    assert pick_blocks(4, 160, 128, block_size=32)[2] == 32   # only divisor
+    # N fallback: largest 8-aligned divisor ≤ block_n
+    assert pick_blocks(4, 128, 48, block_size=32)[1] == 48
+    assert pick_blocks(4, 128, 96, block_size=32, block_n=32)[1] == 32
 
 
 # ---------------------------------------------------------------------------

@@ -7,8 +7,13 @@ import numpy as np
 import pytest
 
 from repro.models import ModelConfig, forward, init_params
-from repro.serve.batching import ContinuousBatcher, Request
-from repro.serve.engine import greedy_generate, init_cache, make_decode_step
+from repro.serve.batching import ContinuousBatcher, Request, make_place_slot
+from repro.serve.engine import (
+    greedy_generate,
+    greedy_generate_loop,
+    init_cache,
+    scan_generate,
+)
 
 CFGS = {
     "dense": ModelConfig(family="dense", num_layers=2, d_model=32, num_heads=4,
@@ -62,6 +67,66 @@ def test_greedy_generate_matches_argmax_rollout():
         nxt = jnp.argmax(logits[:, -1], -1)[:, None]
         assert int(nxt[0, 0]) == int(gen[0, t]), t
         cur = jnp.concatenate([cur, nxt.astype(cur.dtype)], axis=1)
+
+
+@pytest.mark.parametrize("family", ["dense", "rwkv"])
+def test_scan_generate_matches_loop(family):
+    """The one-compile lax.scan rollout must be token-for-token identical to
+    the python-loop reference (same cached forward, different orchestration)."""
+    cfg = CFGS[family]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 5), 0,
+                                cfg.vocab_size)
+    fast = scan_generate(params, cfg, prompt, steps=6)
+    ref = greedy_generate_loop(params, cfg, prompt, steps=6)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(ref))
+
+
+def test_scan_generate_eos_masking():
+    """Once a row emits eos every later token is masked to eos on device."""
+    cfg = CFGS["dense"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(4), (1, 4), 0, 64)
+    free = np.asarray(scan_generate(params, cfg, prompt, steps=6))
+    eos = int(free[0, 2])                 # force an eos hit mid-rollout
+    gen = np.asarray(scan_generate(params, cfg, prompt, steps=6, eos_id=eos))
+    hit = int(np.argmax(gen[0] == eos))
+    assert gen[0, hit] == eos
+    np.testing.assert_array_equal(gen[0, hit:], np.full(6 - hit, eos))
+    np.testing.assert_array_equal(gen[0, :hit], free[0, :hit])
+
+
+@pytest.mark.parametrize("family", ["dense", "hybrid_mamba"])
+def test_place_slot_matches_reference(family):
+    """The jitted slot write must equal a host-side per-leaf placement for
+    every cache leaf family (batch axis position differs per leaf)."""
+    cfg = CFGS[family]
+    num_slots = 3
+    big = init_cache(cfg, num_slots, 16)
+    small = init_cache(cfg, 1, 16)
+    leaves, treedef = jax.tree.flatten(small)
+    keys = jax.random.split(jax.random.PRNGKey(5), len(leaves))
+    small = jax.tree.unflatten(treedef, [
+        jax.random.normal(k, l.shape).astype(l.dtype)
+        for k, l in zip(keys, leaves)])
+
+    slot = 1
+    got = jax.jit(make_place_slot(num_slots))(big, small,
+                                              jnp.asarray(slot, jnp.int32))
+
+    def ref_place(bg, sm):
+        for ax in range(bg.ndim):
+            if bg.shape[ax] == num_slots and sm.shape[ax] == 1:
+                out = np.array(bg)
+                idx = [slice(None)] * bg.ndim
+                idx[ax] = slice(slot, slot + 1)
+                out[tuple(idx)] = np.asarray(sm).astype(out.dtype)
+                return out
+        raise ValueError("no batch axis")
+
+    want = jax.tree.map(ref_place, big, small)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), w)
 
 
 def test_continuous_batching_matches_single_stream():
