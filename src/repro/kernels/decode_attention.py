@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: paged decode attention (Sq = 1, per-slot kv_len).
+
+The last unfused launch in the decode step: cached decode previously routed
+attention through the jnp SDPA path, which reads the full dense (B, max_len)
+cache every token.  This kernel reads K/V through a **page table** instead —
+the grid's page axis covers only the pages the scheduler passes in (the live
+prefix, bucketed), so attention bytes scale with the actual context length,
+not max_len.
+
+Layout (see serve/paging.py for the pool):
+
+  q           (B, H, D)            one query token per slot, GQA grouped
+  k/v pages   (P, Hkv, ps, D)      shared pool, page 0 reserved as garbage
+  page_table  (B, npages) int32    slot's logical page j -> physical page
+  kv_len      (B,) int32           live tokens per slot (masks page tails)
+
+grid = (B, Hkv, npages) with the page axis innermost; the page table and
+kv_len ride in as **scalar prefetch** (``PrefetchScalarGridSpec``) so the
+K/V BlockSpec index_map can gather ``pt[b, p]`` before the body runs — the
+kernel never touches pages the slot does not own.  All G = H/Hkv query heads
+of one kv head are processed in a single block (one MXU dot per page).
+
+Online-softmax state (m, l, acc) lives in VMEM scratch across the page
+sweep, exactly like the prefill flash kernel.  Tokens at ``ids >= kv_len``
+(page tails, unallocated logical pages mapped to garbage page 0) are masked
+to NEG_INF; page 0 of the sweep always holds live tokens (kv_len >= 1), so
+the running max is real before any fully-masked page contributes exp(s - m)
+~= 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, sm_scale: float, page_size: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)            # (ps, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+    ids = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(ids < len_ref[b], s, NEG_INF)    # causal == length mask
+
+    m_prev = m_ref[...]                            # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    pexp = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        pexp, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,           # (B, H, D) — one token per slot
+    k_pages: jax.Array,     # (P, Hkv, page_size, D)
+    v_pages: jax.Array,     # (P, Hkv, page_size, D)
+    page_table: jax.Array,  # (B, npages) int32
+    kv_len: jax.Array,      # (B,) int32
+    *,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, h, d = q.shape
+    _, hkv, page_size, _ = k_pages.shape
+    g = h // hkv
+    npages = page_table.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(bsz, hkv, g, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # page_table, kv_len
+        grid=(bsz, hkv, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b, h_, p, pt, ln: (b, h_, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b, h_, p, pt, ln: (pt[b, p], h_, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b, h_, p, pt, ln: (pt[b, p], h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b, h_, p, pt, ln: (b, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, sm_scale=sm_scale,
+                               page_size=page_size)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+        interpret=interpret,
+    )(page_table, kv_len.astype(jnp.int32), qg, k_pages, v_pages)
+    return out.reshape(bsz, h, d)

@@ -21,6 +21,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.mxint_matmul import (
     mxint_matmul_lowrank_decode_pallas,
     mxint_matmul_lowrank_pallas,
@@ -136,6 +137,25 @@ def quantize_weights(w: jax.Array, *, bits: int, block_size: int,
     bn = 128 if n % 128 == 0 else n
     return mxint_quantize_pallas(w, bits=bits, block_size=block_size,
                                  block_n=bn, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     page_table: jax.Array, kv_len: jax.Array, *,
+                     sm_scale: float | None = None,
+                     interpret: bool | None = None) -> jax.Array:
+    """Paged decode attention (Sq = 1 per slot) — ONE Pallas launch.
+
+    q: (B, H, D); k/v_pages: (P, Hkv, page_size, D); page_table: (B, npages)
+    int32; kv_len: (B,) int32.  The page-axis grid width is the (static)
+    page_table width, so the scheduler bounds attention reads by slicing the
+    table to the live-prefix bucket — reads scale with the context actually
+    in use, never with max_len.  Retraces once per bucket width.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return decode_attention_pallas(q, k_pages, v_pages, page_table, kv_len,
+                                   sm_scale=sm_scale, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("causal", "sm_scale", "kv_len", "block_q",

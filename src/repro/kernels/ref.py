@@ -62,3 +62,31 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
         s = jnp.where(cm, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def gather_paged_kv(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(P, Hkv, ps, D) pool + (B, npages) table -> contiguous (B, Hkv, S, D)
+    with S = npages * ps, tokens in logical order."""
+    b, npages = page_table.shape
+    _, hkv, ps, d = pages.shape
+    g = pages[page_table]                         # (B, npages, Hkv, ps, D)
+    return jnp.moveaxis(g, 2, 1).reshape(b, hkv, npages * ps, d)
+
+
+def decode_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                         page_table: jax.Array, kv_len: jax.Array, *,
+                         sm_scale: float | None = None) -> jax.Array:
+    """Paged decode attention oracle: gather the slot's pages to a contiguous
+    prefix, then masked softmax attention.
+
+    q: (B, H, D) one token per slot; k/v_pages: (P, Hkv, ps, D);
+    page_table: (B, npages) int32; kv_len: (B,) int32.  Returns (B, H, D).
+    Causality is subsumed by the length mask (the query is the newest token).
+    """
+    b, h, d = q.shape
+    kk = gather_paged_kv(k_pages, page_table)
+    vv = gather_paged_kv(v_pages, page_table)
+    out = flash_attention_ref(q[:, :, None, :], kk, vv, causal=False,
+                              sm_scale=sm_scale,
+                              kv_len=kv_len[:, None, None, None])
+    return out[:, :, 0, :]

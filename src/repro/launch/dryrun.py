@@ -90,6 +90,8 @@ def collective_bytes(hlo_text: str) -> dict:
 
 def analyze(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # older jax wraps the dict in a list
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     coll = collective_bytes(compiled.as_text())
     return {

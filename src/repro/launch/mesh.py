@@ -4,12 +4,16 @@ module never touches jax device state."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
+try:  # jax >= 0.5: explicit-sharding API takes per-axis types
+    from jax.sharding import AxisType
 
-def _mk(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    def _mk(shape, axes):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:  # older jax: every mesh axis is implicitly Auto
+    def _mk(shape, axes):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

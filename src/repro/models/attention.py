@@ -98,18 +98,51 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
     return out.reshape(b, h, sq, d)
 
 
+def paged_attention_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                           cache: Mapping[str, jax.Array],
+                           page_table: jax.Array, cache_len: jax.Array):
+    """Single-token paged decode: append K/V to the slot's current page,
+    then attend over the pages the slot owns via the Pallas decode kernel.
+
+    q/k/v: (B, *, 1, hd).  ``cache`` holds the shared pools
+    k_pages/v_pages (P, Hkv, page_size, hd); ``page_table`` (B, npages) is
+    already sliced to the scheduler's live-prefix bucket, so attention
+    reads scale with the context in use, not max_len.  Appends through an
+    unallocated (0) table entry land in the reserved garbage page.
+    """
+    from repro.kernels.ops import decode_attention
+
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    page_size = kp.shape[2]
+    b = q.shape[0]
+    pos = cache_len
+    if getattr(pos, "ndim", 0) == 0:               # scan rollout: uniform pos
+        pos = jnp.full((b,), pos, jnp.int32)
+    phys = jnp.take_along_axis(page_table, pos[:, None] // page_size,
+                               axis=1)[:, 0]       # (B,) physical page
+    off = pos % page_size
+    kp = kp.at[phys, :, off].set(k[:, :, 0, :].astype(kp.dtype))
+    vp = vp.at[phys, :, off].set(v[:, :, 0, :].astype(vp.dtype))
+    out = decode_attention(q[:, :, 0, :], kp, vp, page_table, pos + 1)
+    return out[:, :, None, :], {"k_pages": kp, "v_pages": vp}
+
+
 def attention_block(p: Mapping[str, Any], x: jax.Array, angles: jax.Array, *,
                     num_heads: int, num_kv_heads: int, head_dim: int,
                     causal: bool = True, chunk: int = 0,
                     python_loop: bool = False,
                     cache: Mapping[str, jax.Array] | None = None,
                     cache_len: jax.Array | None = None,
+                    page_table: jax.Array | None = None,
                     constrain=None,
                     taps=None, prefix: str = "", use_pallas: bool = False):
     """Self-attention with optional KV cache (decode / prefill-fill).
 
     x: (B, S, D).  Returns (out, new_cache) where new_cache is None when no
     cache was passed.  ``angles`` must already be sliced to x's positions.
+    A paged cache (k_pages/v_pages leaves + ``page_table``) takes the
+    single-token paged decode path; prefill stays dense (admission repages
+    it via serve.paging).
     """
     b, s, _ = x.shape
     q = linear(p["wq"], x, taps=taps, name=f"{prefix}wq", use_pallas=use_pallas)
@@ -129,7 +162,11 @@ def attention_block(p: Mapping[str, Any], x: jax.Array, angles: jax.Array, *,
         v = constrain(v, ("dp", None, None, None))
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and "k_pages" in cache:
+        assert s == 1, "paged attention is decode-only (prefill repages)"
+        out, new_cache = paged_attention_decode(q, k, v, cache, page_table,
+                                               cache_len)
+    elif cache is not None:
         # insert into cache at cache_len, attend over the whole cache
         ck, cv = cache["k"], cache["v"]
         idx = (jnp.zeros((), jnp.int32) if cache_len is None else cache_len)

@@ -172,14 +172,14 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
 # ===========================================================================
 
 def _dense_block(cfg: ModelConfig, p, x, angles, cache=None, cache_len=None,
-                 taps=None, prefix="", constrain=None):
+                 page_table=None, taps=None, prefix="", constrain=None):
     h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
     attn_out, new_cache = attention_block(
         p, h, angles, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.hd, causal=True, chunk=cfg.attn_chunk,
         python_loop=cfg.chunk_python_loop, cache=cache,
-        cache_len=cache_len, constrain=constrain, taps=taps,
-        prefix=f"{prefix}attn/", use_pallas=cfg.use_pallas)
+        cache_len=cache_len, page_table=page_table, constrain=constrain,
+        taps=taps, prefix=f"{prefix}attn/", use_pallas=cfg.use_pallas)
     x = x + cfg.residual_scale * attn_out
     aux = jnp.zeros((), jnp.float32)
 
@@ -206,15 +206,16 @@ def _cross_block(cfg: ModelConfig, cp, x, image_embeds, taps=None, prefix=""):
 
 
 def _shared_attn_block(cfg: ModelConfig, p, x, angles, cache=None,
-                       cache_len=None, taps=None, prefix="", constrain=None):
+                       cache_len=None, page_table=None, taps=None,
+                       prefix="", constrain=None):
     """zamba2's shared full transformer block (attention + MLP)."""
     h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
     attn_out, new_cache = attention_block(
         p, h, angles, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.hd, causal=True, chunk=cfg.attn_chunk,
         python_loop=cfg.chunk_python_loop, cache=cache,
-        cache_len=cache_len, constrain=constrain, taps=taps,
-        prefix=f"{prefix}shared_attn/", use_pallas=cfg.use_pallas)
+        cache_len=cache_len, page_table=page_table, constrain=constrain,
+        taps=taps, prefix=f"{prefix}shared_attn/", use_pallas=cfg.use_pallas)
     x = x + attn_out
     h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
     x = x + swiglu(p, h, taps=taps, prefix=f"{prefix}shared_mlp/",
@@ -325,6 +326,12 @@ def forward(params: Params, batch: Mapping[str, jax.Array], cfg: ModelConfig,
 
     aux_total = jnp.zeros((), jnp.float32)
     new_cache: Params | None = {} if has_cache else None
+    # paged decode: the page table is shared across layers (each layer's
+    # pool slice is indexed by the same slot -> page mapping), so it rides
+    # outside the scanned "blocks" leaves and passes through unchanged.
+    page_table = cache.get("page_table") if has_cache else None
+    if page_table is not None:
+        new_cache["page_table"] = page_table
     blocks = params["blocks"]
     image_embeds = None
     if cfg.family == "vlm":
@@ -352,7 +359,7 @@ def forward(params: Params, batch: Mapping[str, jax.Array], cfg: ModelConfig,
                 xcur, cache_o, aux = _dense_block(
                     cfg, p_i, xcur, angles,
                     cache=cache_i if has_cache else None, cache_len=cache_len,
-                    constrain=constrain)
+                    page_table=page_table, constrain=constrain)
                 if constrain is not None and not has_cache:
                     # sequence-parallel residual stream: remat residuals and
                     # norm/elementwise work shard S over 'model'
@@ -385,7 +392,8 @@ def forward(params: Params, batch: Mapping[str, jax.Array], cfg: ModelConfig,
                 if has_cache or taps is not None:
                     x, cache_o, aux = _dense_block(
                         cfg, p_i, x, angles, cache=cache_i,
-                        cache_len=cache_len, taps=taps, prefix=f"blocks/{i}/")
+                        cache_len=cache_len, page_table=page_table,
+                        taps=taps, prefix=f"blocks/{i}/")
                 else:
                     x, cache_o, aux = rematted(x, p_i)
                 aux_total += aux
@@ -425,7 +433,8 @@ def forward(params: Params, batch: Mapping[str, jax.Array], cfg: ModelConfig,
                             ci = _dyn_slice(stack, app)
                             y, cnew = _shared_attn_block(
                                 cfg, shared, xc, angles, cache=ci,
-                                cache_len=cache_len, constrain=constrain)
+                                cache_len=cache_len, page_table=page_table,
+                                constrain=constrain)
                             stack = jax.tree.map(
                                 lambda full, new: jax.lax.
                                 dynamic_update_index_in_dim(full, new, app, 0),
@@ -468,7 +477,8 @@ def forward(params: Params, batch: Mapping[str, jax.Array], cfg: ModelConfig,
                     ci = _layer_slice(attn_stack, app) if has_cache else None
                     x, cnew = _shared_attn_block(
                         cfg, shared, x, angles, cache=ci,
-                        cache_len=cache_len, taps=taps, prefix=f"blocks/{i}/")
+                        cache_len=cache_len, page_table=page_table,
+                        taps=taps, prefix=f"blocks/{i}/")
                     attn_caches.append(cnew)
                 mcaches.append(mcache_o)
             if has_cache:

@@ -7,3 +7,25 @@ from repro.serve.engine import (
     make_prefill_step,
     scan_generate,
 )
+from repro.serve.paging import (
+    PagePool,
+    dense_to_paged,
+    init_paged_cache,
+    make_place_pages,
+    page_bucket,
+)
+
+__all__ = [
+    "PagePool",
+    "cache_shapes",
+    "dense_to_paged",
+    "greedy_generate",
+    "greedy_generate_loop",
+    "init_cache",
+    "init_paged_cache",
+    "make_decode_step",
+    "make_place_pages",
+    "make_prefill_step",
+    "page_bucket",
+    "scan_generate",
+]

@@ -14,6 +14,21 @@ Implementation notes for the JAX runtime:
   every slot);
 * decode advances ALL active slots each step with a single decode_step call
   (inactive slots are masked out of sampling).
+
+Paged mode (``paged=True``, see serve/paging.py):
+* K/V rows are replaced by a shared **page pool** + host-owned page tables;
+  admission becomes page **allocation** (``PagePool.alloc``) + ONE jitted
+  ``place_pages`` scatter into exactly the pages the request owns, so
+  capacity is bounded by pool pages actually in use — not B x max_len;
+* each tick ships the page table sliced to the live-prefix **bucket**
+  (power-of-two page count covering the longest active context), so the
+  Pallas decode-attention kernel reads only live pages: attention bytes
+  scale with the context in use, never with max_len;
+* a slot whose next token crosses a page boundary allocates lazily before
+  the tick; if the pool is empty the slot **pauses** — its append lands in
+  the reserved garbage page, its sampled token is discarded, and the same
+  token is recomputed once a page frees (greedy decode is deterministic);
+* freeing a slot returns its pages to the pool and zeroes its table row.
 """
 
 from __future__ import annotations
@@ -27,6 +42,14 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.serve.engine import init_cache, make_decode_step, make_prefill_step
+from repro.serve.paging import (
+    PagePool,
+    _place_row,
+    init_paged_cache,
+    make_place_pages,
+    make_restore_slot,
+    page_bucket,
+)
 
 
 def make_place_slot(num_slots: int) -> Callable:
@@ -39,18 +62,9 @@ def make_place_slot(num_slots: int) -> Callable:
     """
 
     def place_slot(cache: Any, cache1: Any, slot: jax.Array) -> Any:
-        zero = jnp.zeros((), jnp.int32)
-
-        def place(big, small):
-            for ax in range(big.ndim):
-                if big.shape[ax] == num_slots and small.shape[ax] == 1:
-                    idx = [zero] * big.ndim
-                    idx[ax] = slot
-                    return jax.lax.dynamic_update_slice(
-                        big, small.astype(big.dtype), tuple(idx))
-            raise ValueError("no batch axis found")
-
-        return jax.tree.map(place, cache, cache1)
+        return jax.tree.map(
+            lambda big, small: _place_row(big, small, slot, num_slots),
+            cache, cache1)
 
     return place_slot
 
@@ -68,41 +82,99 @@ class Request:
 
 class ContinuousBatcher:
     def __init__(self, params: Any, cfg: ModelConfig, *, num_slots: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, paged: bool = False, page_size: int = 32,
+                 num_pages: int | None = None):
         self.params, self.cfg = params, cfg
+        self.paged = paged
+        # page geometry needs a page-multiple length; the request done-check
+        # keeps the CALLER's max_len so paged stays token-identical to dense
+        # even when max_len % page_size != 0.
+        alloc_len = -(-max_len // page_size) * page_size if paged else max_len
         self.b, self.max_len = num_slots, max_len
-        self.cache = init_cache(cfg, num_slots, max_len)
         self.lengths = np.zeros(num_slots, np.int32)
         self.slot_req: list[Request | None] = [None] * num_slots
         self.last_tok = np.zeros(num_slots, np.int32)
-        self._prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len=alloc_len))
         self._decode = jax.jit(make_decode_step(cfg))
         # donate the big cache so admission is a true in-place slot write
         # (no full-cache copy); CPU ignores donation, so only request it on
         # backends that implement it to avoid per-call warnings.
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
-        self._place = jax.jit(make_place_slot(num_slots), donate_argnums=donate)
+        if paged:
+            self.page_size = page_size
+            self.max_pages_per_slot = alloc_len // page_size
+            # default pool is lossless (every slot can grow to max_len);
+            # pass a smaller num_pages to actually oversubscribe.
+            num_pages = num_pages or 1 + num_slots * self.max_pages_per_slot
+            self.pool = PagePool(num_pages, page_size)
+            self.cache = init_paged_cache(
+                cfg, num_slots, alloc_len, page_size=page_size,
+                num_pages=num_pages)
+            # host-owned page table; shipped per tick sliced to the bucket
+            self.cache.pop("page_table")
+            self.page_table = np.zeros(
+                (num_slots, self.max_pages_per_slot), np.int32)
+            self.slot_pages: list[list[int]] = [[] for _ in range(num_slots)]
+            self._starved: list[int] = []    # slots paused on the last tick
+            self._place = jax.jit(make_place_pages(num_slots, page_size),
+                                  donate_argnums=donate)
+            self._restore = jax.jit(make_restore_slot(num_slots),
+                                    donate_argnums=donate)
+        else:
+            self.cache = init_cache(cfg, num_slots, max_len)
+            self._place = jax.jit(make_place_slot(num_slots),
+                                  donate_argnums=donate)
         self.queue: list[Request] = []
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if self.paged:
+            need = self.pool.pages_for(len(req.prompt))
+            if need > self.pool.num_pages - 1:
+                # reject up front: queued it would stall admission forever
+                raise ValueError(
+                    f"request {req.rid}: prompt needs {need} pages but the "
+                    f"pool has {self.pool.num_pages - 1} allocatable")
         self.queue.append(req)
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
     def _admit(self) -> None:
+        if self.paged and self._starved and self._active():
+            # running slots are stalled on page allocation: freed pages must
+            # grow them first, or admission (notably of a just-evicted
+            # request) steals the page back and the pool thrashes
+            return
         for slot in self._free_slots():
             if not self.queue:
                 return
-            req = self.queue.pop(0)
+            req = self.queue[0]
+            pages: list[int] | None = None
+            if self.paged:
+                need = self.pool.pages_for(len(req.prompt))
+                pages = self.pool.alloc(need)
+                if pages is None:          # pool exhausted: wait for frees
+                    return
+            self.queue.pop(0)
             prompt = jnp.asarray(req.prompt[None, :])            # (1, len)
             logits, cache1 = self._prefill(self.params, {"tokens": prompt})
-            # write the single-row cache into this slot's row: one jitted
-            # call, slot as a traced scalar (prompt cache rows were already
-            # padded to max_len inside prefill)
-            self.cache = self._place(self.cache, cache1,
-                                     jnp.asarray(slot, jnp.int32))
+            if self.paged:
+                # scatter the prefix into exactly the pages this request
+                # owns: one jitted call, page-table row + slot traced
+                self.page_table[slot, :] = 0
+                self.page_table[slot, :len(pages)] = pages
+                self.slot_pages[slot] = pages
+                self.cache = self._place(
+                    self.cache, cache1,
+                    jnp.asarray(self.page_table[slot]),
+                    jnp.asarray(slot, jnp.int32))
+            else:
+                # write the single-row cache into this slot's row: one jitted
+                # call, slot as a traced scalar (prompt cache rows were
+                # already padded to max_len inside prefill)
+                self.cache = self._place(self.cache, cache1,
+                                         jnp.asarray(slot, jnp.int32))
             tok = int(jnp.argmax(logits[0, -1]))
             req.output.append(tok)
             self.slot_req[slot] = req
@@ -113,6 +185,36 @@ class ContinuousBatcher:
     def _active(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
+    def _grow_pages(self, active: list[int]) -> list[int]:
+        """Lazily allocate the page each active slot's next token lands in.
+        Returns the slots that must pause this tick (pool empty): their
+        append hits the garbage page and their token is discarded — greedy
+        decode recomputes the identical token once a page frees."""
+        paused = []
+        for i in active:
+            lp = self.lengths[i] // self.page_size
+            if self.page_table[i, lp] == 0:
+                pg = self.pool.alloc(1)
+                if pg is None:
+                    paused.append(i)
+                    continue
+                self.page_table[i, lp] = pg[0]
+                self.slot_pages[i].append(pg[0])
+        return paused
+
+    def _evict(self, slot: int) -> None:
+        """Preempt-and-requeue: release the slot's pages and put its request
+        back at the head of the queue with output cleared — greedy decode is
+        deterministic, so re-admission recomputes the same tokens."""
+        req = self.slot_req[slot]
+        req.output.clear()
+        self.queue.insert(0, req)
+        self.slot_req[slot] = None
+        self.pool.free(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.page_table[slot, :] = 0
+        self.lengths[slot] = 0
+
     def step(self) -> None:
         self._admit()
         active = self._active()
@@ -120,12 +222,46 @@ class ContinuousBatcher:
             return
         # single fused decode for all slots (inactive rows are don't-care);
         # per-slot cache lengths keep each request's positions independent
+        paused: list[int] = []
         toks = jnp.asarray(self.last_tok[:, None])
         clen = jnp.asarray(self.lengths, jnp.int32)          # (B,)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          {"tokens": toks}, clen)
+        if self.paged:
+            paused = self._grow_pages(active)
+            self._starved = list(paused)
+            if paused and len(paused) == len(active):
+                # every active slot stalled on allocation: no tick can ever
+                # free a page, so preempt one request to restore progress
+                if len(active) == 1:
+                    raise RuntimeError(
+                        f"page pool ({self.pool.num_pages} pages, page_size="
+                        f"{self.page_size}) too small for request "
+                        f"{self.slot_req[active[0]].rid} alone")
+                self._evict(paused.pop())
+                return
+            # paused slots' appends land in the garbage page and their
+            # tokens are discarded, but per-slot recurrent state (mamba
+            # conv/ssm rows) would still advance on the discarded token —
+            # keep the pre-tick cache to roll those rows back below.
+            prev = self.cache if paused else None
+            live = max(-(-int(self.lengths[i] + 1) // self.page_size)
+                       for i in active)
+            bucket = page_bucket(live, self.max_pages_per_slot)
+            cache = {**self.cache,
+                     "page_table": jnp.asarray(self.page_table[:, :bucket])}
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": toks}, clen)
+            cache.pop("page_table")
+            self.cache = cache
+            for i in paused:
+                self.cache = self._restore(self.cache, prev,
+                                           jnp.asarray(i, jnp.int32))
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              {"tokens": toks}, clen)
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         for i in active:
+            if i in paused:
+                continue
             req = self.slot_req[i]
             tok = int(nxt[i])
             req.output.append(tok)
@@ -136,6 +272,11 @@ class ContinuousBatcher:
                     or self.lengths[i] + 1 >= self.max_len):
                 req.done = True
                 self.slot_req[i] = None      # slot freed; admitted next tick
+                if self.paged:
+                    self.pool.free(self.slot_pages[i])
+                    self.slot_pages[i] = []
+                    self.page_table[i, :] = 0
+                    self.lengths[i] = 0   # freed row attends 1 garbage token
 
     def run(self, max_ticks: int = 1000) -> None:
         for _ in range(max_ticks):

@@ -10,6 +10,13 @@ reference).  Caches:
   dense/moe/audio/vlm : {"blocks": {"k","v": (L, B, KVH, S_max, hd)}}
   hybrid_mamba        : {"blocks": {"conv_*", "ssm"}, "shared_attn": {"k","v"}}
   rwkv                : {"blocks": {"state", "last_tm", "last_cm"}}
+
+Paged caches (serve/paging.py) replace the dense K/V rows with a shared page
+pool ("k_pages"/"v_pages": (L, P, KVH, page_size, hd)) plus a "page_table"
+leaf; ``forward`` detects the layout from the leaf names and routes cached
+decode through the Pallas decode-attention kernel, reading only the pages
+each slot owns.  ``scan_generate(page_size=N)`` runs the fused rollout on
+that path; the dense layout stays as the reference oracle.
 """
 
 from __future__ import annotations
@@ -91,9 +98,11 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
     return decode_step
 
 
-@partial(jax.jit, static_argnames=("cfg", "steps", "max_len", "has_eos"))
+@partial(jax.jit, static_argnames=("cfg", "steps", "max_len", "has_eos",
+                                   "page_size"))
 def _scan_generate(params, prompt: jax.Array, eos_tok: jax.Array, *,
-                   cfg: ModelConfig, steps: int, max_len: int, has_eos: bool):
+                   cfg: ModelConfig, steps: int, max_len: int, has_eos: bool,
+                   page_size: int = 0):
     """One-compile greedy rollout: prefill + a ``lax.scan`` over decode steps.
 
     Everything stays on device — argmax, eos masking, cache updates — so an
@@ -101,11 +110,20 @@ def _scan_generate(params, prompt: jax.Array, eos_tok: jax.Array, *,
     round-trips (vs. N jit calls + N host syncs for the python loop).  The
     eos *value* is a traced scalar (only its presence is static), so
     per-request eos ids never retrace the rollout.
+
+    ``page_size`` > 0 repages the prefilled cache (identity page table,
+    serve.paging.dense_to_paged) so every decode step in the scan runs the
+    fused Pallas decode-attention kernel over the page pool instead of the
+    jnp SDPA path — the rollout-shaped proof that the paged decode step is
+    a drop-in for the dense one.
     """
     b, s = prompt.shape
     cache = init_cache(cfg, b, max_len)
     logits, _, cache = forward(params, {"tokens": prompt}, cfg, cache=cache,
                                cache_len=jnp.zeros((), jnp.int32))
+    if page_size:
+        from repro.serve.paging import dense_to_paged
+        cache = dense_to_paged(cache, page_size)
     tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(prompt.dtype)
     done0 = (tok0 == eos_tok.astype(tok0.dtype) if has_eos
              else jnp.zeros((b,), bool))
@@ -128,14 +146,20 @@ def _scan_generate(params, prompt: jax.Array, eos_tok: jax.Array, *,
 
 
 def scan_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
-                  max_len: int | None = None, eos_id: int | None = None):
+                  max_len: int | None = None, eos_id: int | None = None,
+                  page_size: int = 0):
     """Fused greedy decoding: compiles once per (shape, steps), returns the
-    (B, steps) token matrix with no per-token host sync."""
+    (B, steps) token matrix with no per-token host sync.  ``page_size`` > 0
+    routes every decode step through the paged KV pool + Pallas
+    decode-attention kernel (see serve/paging.py)."""
     _, s = prompt.shape
     eos_tok = jnp.asarray(0 if eos_id is None else eos_id, jnp.int32)
+    max_len = max_len or (s + steps)
+    if page_size:
+        max_len = -(-max_len // page_size) * page_size
     return _scan_generate(params, prompt, eos_tok, cfg=cfg, steps=steps,
-                          max_len=max_len or (s + steps),
-                          has_eos=eos_id is not None)
+                          max_len=max_len, has_eos=eos_id is not None,
+                          page_size=page_size)
 
 
 def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,

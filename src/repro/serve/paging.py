@@ -1,0 +1,235 @@
+"""Paged KV cache: fixed-size pages in a shared pool + per-slot page tables.
+
+The dense continuous-batching cache allocates (B, max_len) KV rows, so slot
+admission is coupled to max_len and every decode step reads max_len worth of
+K/V per slot.  This module decouples both:
+
+* **pool** — K/V live in ``k_pages``/``v_pages`` leaves shaped
+  (L, P, Hkv, page_size, hd): P fixed-size pages shared by all slots, with
+  the leading layer axis matching the stacked-blocks ``lax.scan`` layout.
+  **Physical page 0 is reserved as the garbage page**: page-table entries
+  default to 0, so appends routed through an unallocated entry land in
+  garbage (harmless — never attended to) instead of corrupting a live slot.
+* **page table** — (B, max_pages_per_slot) int32, slot's logical page j ->
+  physical page.  Host-owned by the batcher (``PagePool`` below hands out
+  pages), shipped to device per decode tick sliced to the live-prefix
+  bucket, so the decode-attention grid covers only pages in actual use.
+* **append** — in-kernel: the attention layer scatters the new token's K/V
+  into ``pool[pt[b, pos // ps], :, pos % ps]`` (see models/attention.py).
+* **admit** — ``make_place_pages`` returns ONE jitted call that scatters a
+  freshly prefilled batch=1 dense cache into exactly the pages the request
+  owns (unallocated logical pages alias the garbage page) and row-writes
+  the non-paged per-slot leaves (mamba conv/ssm states).  The slot index
+  and page-table row are traced, so one compile serves every slot.
+
+``dense_to_paged`` converts a dense cache to the paged layout with an
+identity page table (slot i owns pages 1 + i*npg .. 1 + (i+1)*npg - 1) —
+pure reshapes, used by ``engine.scan_generate(page_size=N)`` to run the
+fused rollout on the paged decode-attention kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.serve.engine import init_cache
+from repro.utils.trees import flatten_dict, unflatten_dict
+
+PAGED_LEAF_SUFFIXES = ("k_pages", "v_pages")
+
+
+def _num_pages_axis(key: str) -> bool:
+    return key.rsplit("/", 1)[-1] in PAGED_LEAF_SUFFIXES
+
+
+class PagePool:
+    """Host-side free-list allocator over the shared page pool.
+
+    Page 0 is the reserved garbage page and is never handed out.  ``alloc``
+    is all-or-nothing (returns None if n pages are not available) so the
+    scheduler can keep a request queued instead of half-admitting it.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2, "pool needs the garbage page + >= 1 real page"
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free = list(range(num_pages - 1, 0, -1))   # pop() -> low first
+        self._live: set[int] = set()
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._live.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            assert p in self._live, f"double free / foreign page {p}"
+            self._live.discard(p)
+            self._free.append(p)
+
+
+def page_bucket(live_pages: int, max_pages: int) -> int:
+    """Power-of-two page-table width covering ``live_pages`` (bounds jit
+    retraces to log2(max_pages) decode-step variants)."""
+    b = 1
+    while b < live_pages:
+        b *= 2
+    return min(b, max_pages)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     page_size: int, num_pages: int,
+                     dtype=None) -> dict[str, Any]:
+    """Paged decode cache: shared page pool + zeroed (all-garbage) page
+    table.  Only attention K/V leaves are paged; per-slot O(1) state
+    (mamba conv/ssm) keeps its dense slot rows.  ``max_len`` only bounds the
+    page-table WIDTH (max pages one slot may own) — it does not size the
+    pool, which is the point: capacity is ``num_pages`` regardless of
+    max_len."""
+    dtype = dtype or cfg.compute_dtype
+    assert max_len % page_size == 0, (max_len, page_size)
+    max_pages = max_len // page_size
+    l, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+    table = jnp.zeros((batch, max_pages), jnp.int32)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return {"blocks": {
+            "k_pages": jnp.zeros((l, num_pages, kv, page_size, hd), dtype),
+            "v_pages": jnp.zeros((l, num_pages, kv, page_size, hd), dtype),
+        }, "page_table": table}
+    if cfg.family == "hybrid_mamba" and cfg.attn_every:
+        cache = init_cache(cfg, batch, max_len, dtype)
+        napp = cfg.num_layers // cfg.attn_every
+        cache["shared_attn"] = {
+            "k_pages": jnp.zeros((napp, num_pages, kv, page_size, hd), dtype),
+            "v_pages": jnp.zeros((napp, num_pages, kv, page_size, hd), dtype),
+        }
+        cache["page_table"] = table
+        return cache
+    raise ValueError(f"family {cfg.family!r} has no pageable attention KV")
+
+
+def _place_row(big: jax.Array, small: jax.Array, slot: jax.Array,
+               num_slots: int) -> jax.Array:
+    """Write small's batch row into big at ``slot`` (traced); the batch axis
+    is the static axis sized num_slots in big and 1 in small."""
+    zero = jnp.zeros((), jnp.int32)
+    for ax in range(big.ndim):
+        if big.shape[ax] == num_slots and small.shape[ax] == 1:
+            idx = [zero] * big.ndim
+            idx[ax] = slot
+            return jax.lax.dynamic_update_slice(
+                big, small.astype(big.dtype), tuple(idx))
+    raise ValueError(f"no batch axis in {big.shape} vs {small.shape}")
+
+
+def make_restore_slot(num_slots: int):
+    """(cache, prev, slot) -> cache with ``slot``'s per-slot rows restored
+    from ``prev``.
+
+    Used when a paused decode tick must be undone for one slot: pool leaves
+    (k_pages/v_pages) keep the NEW value — the paused slot's append landed
+    in the garbage page, and other slots' appends are live — but per-slot
+    recurrent state (mamba conv/ssm rows) advanced on a token that was
+    discarded, and must roll back or the recompute double-feeds it.
+    """
+
+    def restore_slot(cache: Any, prev: Any, slot: jax.Array) -> Any:
+        flat, flatp = flatten_dict(cache), flatten_dict(prev)
+        out: dict[str, jax.Array] = {}
+        for key, leaf in flat.items():
+            if _num_pages_axis(key):
+                out[key] = leaf                      # appends are idempotent
+            else:
+                row = _slot_row(flatp[key], slot, num_slots)
+                out[key] = _place_row(leaf, row, slot, num_slots)
+        return unflatten_dict(out)
+
+    return restore_slot
+
+
+def _slot_row(big: jax.Array, slot: jax.Array, num_slots: int) -> jax.Array:
+    """Slice ``slot``'s batch row (kept as size-1 axis) out of a per-slot
+    leaf.  Per-slot cache leaves are layer-stacked (L, B, ...): when
+    L == num_slots the leading layer axis ties with the batch axis, so a
+    size match at axis 0 defers to one at axis 1."""
+    axes = [ax for ax in range(big.ndim) if big.shape[ax] == num_slots]
+    if not axes:
+        raise ValueError(f"no batch axis in {big.shape}")
+    ax = 1 if (axes[0] == 0 and 1 in axes) else axes[0]
+    return jax.lax.dynamic_slice_in_dim(big, slot, 1, axis=ax)
+
+
+def make_place_pages(num_slots: int, page_size: int):
+    """(cache, cache1, pt_row, slot) -> cache with the prefilled request
+    admitted.
+
+    ``cache`` is the paged pool cache (WITHOUT the page_table leaf — the
+    batcher owns that on host); ``cache1`` the dense batch=1 prefill cache;
+    ``pt_row`` the slot's (max_pages_per_slot,) page-table row with
+    unallocated entries = 0.  Paged leaves scatter page-granular (entries 0
+    dump into the garbage page); everything else is a slot row write.  Both
+    ``pt_row`` and ``slot`` are traced -> one compile admits any request
+    into any slot; jit with the cache donated for an in-place pool write.
+    """
+
+    def place_pages(cache: Any, cache1: Any, pt_row: jax.Array,
+                    slot: jax.Array) -> Any:
+        flat, flat1 = flatten_dict(cache), flatten_dict(cache1)
+        out: dict[str, jax.Array] = {}
+        for key, leaf in flat.items():
+            if _num_pages_axis(key):
+                src = flat1[key.rsplit("/", 1)[0] + "/"
+                            + key.rsplit("/", 1)[-1][0]]   # k_pages -> k
+                lx, _, kvh, s, hd = src.shape              # (Lx,1,Hkv,S,hd)
+                npg = s // page_size
+                pages = src[:, 0].reshape(lx, kvh, npg, page_size, hd)
+                pages = jnp.moveaxis(pages, 2, 1)          # (Lx,npg,Hkv,ps,hd)
+                out[key] = leaf.at[:, pt_row].set(pages.astype(leaf.dtype))
+            else:
+                out[key] = _place_row(leaf, flat1[key], slot, num_slots)
+        return unflatten_dict(out)
+
+    return place_pages
+
+
+def dense_to_paged(cache: dict[str, Any], page_size: int) -> dict[str, Any]:
+    """Repage a dense cache with an identity page table (pure reshapes, runs
+    under jit).  Slot i's logical page j maps to physical 1 + i*npg + j;
+    page 0 is the prepended garbage page."""
+    flat = flatten_dict(cache)
+    out: dict[str, jax.Array] = {}
+    table = None
+    for key, leaf in flat.items():
+        group, name = key.rsplit("/", 1) if "/" in key else ("", key)
+        if name in ("k", "v") and leaf.ndim == 5:
+            lx, b, kvh, s, hd = leaf.shape
+            assert s % page_size == 0, (s, page_size)
+            npg = s // page_size
+            pages = leaf.reshape(lx, b, kvh, npg, page_size, hd)
+            pages = jnp.moveaxis(pages, 3, 2)              # (Lx,B,npg,Hkv,..)
+            pool = pages.reshape(lx, b * npg, kvh, page_size, hd)
+            pool = jnp.concatenate(
+                [jnp.zeros_like(pool[:, :1]), pool], axis=1)
+            out[f"{group}/{name}_pages" if group else f"{name}_pages"] = pool
+            table = (1 + jnp.arange(b * npg, dtype=jnp.int32)
+                     ).reshape(b, npg)
+        else:
+            out[key] = leaf
+    assert table is not None, "no pageable k/v leaves in cache"
+    paged = unflatten_dict(out)
+    paged["page_table"] = table
+    return paged

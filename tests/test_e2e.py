@@ -76,11 +76,17 @@ def test_compressed_dp_matches_plain_subprocess():
         with mesh:
             step = make_compressed_dp_train_step(cfg, opt, mesh)
             p2, _, m2 = jax.jit(step)(params, init_opt_state(params), batch)
-        # bf16-compressed grads => small relative deviation tolerated
-        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
-            np.testing.assert_allclose(np.asarray(a, np.float32),
-                                       np.asarray(b, np.float32),
-                                       rtol=0.08, atol=2e-4)
+        # Compare per-leaf UPDATE norms, not elements: the first Adam step
+        # from init is lr * sign(g) elementwise (v = g^2), so any element
+        # whose gradient rounds away in bf16 flips its whole +-lr update —
+        # elementwise rtol is noise.  The compression claim is about the
+        # aggregate direction: deviation small relative to the step taken.
+        for p0, a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p1),
+                            jax.tree.leaves(p2)):
+            p0, a, b = (np.asarray(x, np.float32) for x in (p0, a, b))
+            upd = np.linalg.norm(a - p0)
+            dev = np.linalg.norm(a - b)
+            assert dev <= 0.1 * upd + 1e-7, (dev, upd)
         assert abs(float(m1["ce"]) - float(m2["ce"])) < 0.05
         print("COMPRESSED_DP_OK")
     """)

@@ -4,18 +4,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.quant import (
     get_quantizer,
     mxint_fake_quant,
-    mxint_quantize,
-    mxint_dequantize,
     pack_mxint,
     int_fake_quant,
     nf4_fake_quant,
 )
 from repro.quant.mxint import unpack_mxint, MXINT_CONFIGS
+
+pytest.importorskip("hypothesis")  # property tests skip without hypothesis
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 
 def test_average_bits_match_paper():

@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     empirical_output_error,
@@ -18,6 +17,9 @@ from repro.core import (
     stats_from_samples,
 )
 from repro.quant import get_quantizer
+
+pytest.importorskip("hypothesis")  # property tests skip without hypothesis
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 
 def _problem(seed, m=24, n=20, tokens=512, correlated=True):

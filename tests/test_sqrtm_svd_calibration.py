@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     StreamingStats,
@@ -15,6 +14,9 @@ from repro.core import (
     stats_from_samples,
     truncated_svd,
 )
+
+pytest.importorskip("hypothesis")  # property tests skip without hypothesis
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 
 def _random_psd(seed, n=16, cond=1e3):
