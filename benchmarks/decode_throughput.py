@@ -7,9 +7,13 @@ Three measurements, all CPU-runnable:
   call + host round-trip per token).  On CPU the dispatch overhead is the
   signal; on TPU the same ratio grows with per-launch latency.
 * kernel level — the decode-shaped quantized GEMM (M = slot count) through
-  the single fused Pallas launch in interpret mode, with HBM bytes/token
-  accounting: packed 4-bit weights + rank-r factors vs bf16 (the QERA
-  serving memory-roofline win).
+  the single fused Pallas launch in interpret mode, on the SUB-BYTE PACKED
+  mantissa buffer (two 4-bit mantissas per byte, unpacked in VMEM), with
+  HBM bytes/token accounting: ``*_measured`` is ``.nbytes`` of the device
+  buffers the launch streams, ``*_analytic`` the nominal average-bits
+  figure — labeled separately so the json can no longer claim a reduction
+  the HBM layout doesn't deliver (they agree at 4-/2-bit; 3-bit stores a
+  4-bit container).
 * paged attention — K/V bytes read per decode token under the paged cache
   (page-table bucket covering the live prefix) vs the dense (B, max_len)
   cache, cross-checked by actually running the Pallas decode-attention
@@ -29,11 +33,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.kernel_bench import _weight_bytes, timed_us
+from benchmarks.kernel_bench import (_measured_weight_bytes, _weight_bytes,
+                                     timed_us)
 from repro.kernels.ops import decode_attention, quantized_matmul
 from repro.kernels.ref import decode_attention_ref, mxint_matmul_lowrank_ref
 from repro.models import ModelConfig, init_params
-from repro.quant.mxint import mxint_quantize
+from repro.quant.mxint import mxint_quantize, pack_mantissa
 from repro.serve.engine import greedy_generate_loop, scan_generate
 from repro.serve.paging import page_bucket
 
@@ -77,7 +82,7 @@ def run(csv_rows: list | None = None) -> dict:
     a = jax.random.normal(keys[2], (k, r), jnp.float32) * 0.05
     bb = jax.random.normal(keys[3], (r, n), jnp.float32) * 0.05
     mant, exp = mxint_quantize(w, bits, bs)
-    mant = mant.reshape(k, n)
+    mant = pack_mantissa(mant.reshape(k, n), bits)   # sub-byte HBM layout
 
     def decode_gemm():
         return quantized_matmul(x, mant, exp, a, bb, bits=bits, block_size=bs,
@@ -89,21 +94,33 @@ def run(csv_rows: list | None = None) -> dict:
         rtol=1e-4, atol=1e-4)
     us = timed_us(decode_gemm)
 
-    # weight bytes moved per token per layer (the decode roofline currency)
-    q_bytes = _weight_bytes(k, n, bits, bs, r)
+    # weight bytes moved per token per layer (the decode roofline currency):
+    # measured = .nbytes of the device buffers the launch actually streams;
+    # analytic = the nominal average-bits arithmetic (labeled, not claimed
+    # as HBM traffic)
+    q_bytes_measured = _measured_weight_bytes(mant, exp, a, bb)
+    q_bytes_analytic = _weight_bytes(k, n, bits, bs, r,
+                                     lowrank_bytes=a.dtype.itemsize)
+    mant_exp_bytes = _measured_weight_bytes(mant, exp)
     bf16 = k * n * 2
     results["kernel"] = {
         "us_per_call_interp": us,
-        "weight_bytes_per_token": q_bytes,
+        "mant_hbm_layout": f"packed int8 {tuple(mant.shape)} "
+                           f"({mant.nbytes} bytes for {k}x{n} @ {bits}-bit)",
+        "weight_bytes_per_token_measured": q_bytes_measured,
+        "weight_bytes_per_token_analytic": q_bytes_analytic,
+        "mant_exp_bytes_measured": mant_exp_bytes,
         "weight_bytes_bf16": bf16,
-        "hbm_reduction": bf16 / q_bytes,
+        "hbm_reduction_measured": bf16 / q_bytes_measured,
+        "hbm_reduction_analytic": bf16 / q_bytes_analytic,
+        "hbm_reduction_weights_only": bf16 / mant_exp_bytes,
         "launches_per_layer_per_token": 1,           # fused prologue
     }
     if csv_rows is not None:
         csv_rows.append(
             f"decode,fused_gemm,{us:.0f},"
-            f"bytes_per_token={q_bytes:.0f}"
-            f";hbm_reduction={bf16 / q_bytes:.2f}x")
+            f"bytes_per_token_measured={q_bytes_measured:.0f}"
+            f";hbm_reduction_measured={bf16 / q_bytes_measured:.2f}x")
 
     # ---- paged vs dense attention bytes/token ------------------------------
     # decode-shaped attention reads: dense SDPA streams the whole

@@ -3,8 +3,10 @@ with QERA -> compare held-out CE across methods (Table 3 in miniature).
 
     PYTHONPATH=src python examples/ptq_pipeline.py
 """
+import pathlib
 import sys
-sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
+_root = str(pathlib.Path(__file__).resolve().parent.parent)
+sys.path.insert(0, _root) if _root not in sys.path else None
 
 from benchmarks.common import (
     LM_CFG, calib_batches, calibrate, eval_ce, pretrained_lm, ptq,

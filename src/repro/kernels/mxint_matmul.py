@@ -27,6 +27,16 @@ Two grid layouts share one kernel body:
 bk must be a multiple of the MXINT block size so each exponent tile covers
 whole blocks.  Accumulation is in f32 VMEM scratch ((bm, bn) main + (bm, r)
 low-rank).
+
+Sub-byte packed storage (``packed=True``): the mantissa HBM buffer is the
+``quant.mxint.pack_mantissa`` layout — (K // epb, N) int8 with epb = 2 at
+4-/3-bit (4-bit container, low nibble = even K row) and epb = 4 at 2-bit —
+so the mantissa BlockSpec shrinks to (bk // epb, bn) and only packed bytes
+cross HBM.  The kernel body widens each byte to int32, replicates it epb-fold
+along sublanes, and recovers field ``k0 % epb`` for element row ``k0`` with a
+per-row variable shift + container-width sign-extension, all in VMEM right
+before the dequant-dot.  Mantissa *values* are identical to the flat int8
+path, so outputs are bit-identical — only the storage changes.
 """
 
 from __future__ import annotations
@@ -38,9 +48,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.quant.mxint import elems_per_byte
+
+
+def _unpack_tile(packed: jax.Array, epb: int) -> jax.Array:
+    """(bk // epb, bn) int8 packed bytes -> (bk, bn) int32 mantissas.
+
+    Row-replicate + variable shift (no gather): element row k0 reads byte row
+    k0 // epb, field k0 % epb; sign-extend from the container width w = 8/epb
+    via the ``(v ^ h) - h`` two's-complement trick.
+    """
+    w = 8 // epb
+    p32 = jnp.repeat(packed.astype(jnp.int32), epb, axis=0)   # (bk, bn)
+    bk, bn = p32.shape
+    field = jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 0) % epb
+    v = (p32 >> (field * w)) & ((1 << w) - 1)
+    half = 1 << (w - 1)
+    return (v ^ half) - half
+
 
 def _kernel(x_ref, mant_ref, exp_ref, a_ref, b_ref, o_ref, acc_ref, t_ref, *,
-            bits: int, block_size: int, out_dtype, n_axis: int, k_axis: int):
+            bits: int, block_size: int, epb: int, out_dtype, n_axis: int,
+            k_axis: int):
     k_step = pl.program_id(k_axis)
     n_step = pl.program_id(n_axis)
 
@@ -53,7 +82,9 @@ def _kernel(x_ref, mant_ref, exp_ref, a_ref, b_ref, o_ref, acc_ref, t_ref, *,
         t_ref[...] = jnp.zeros_like(t_ref)
 
     # In-VMEM dequant: scale[u, n] applies to mantissa rows u*bs:(u+1)*bs.
-    mant = mant_ref[...]                          # (bk, bn) int8
+    mant = mant_ref[...]                          # (bk // epb, bn) int8
+    if epb > 1:
+        mant = _unpack_tile(mant, epb)            # (bk, bn) int32
     exp = exp_ref[...]                            # (bk//bs, bn) int8
     scale = jnp.exp2(exp.astype(jnp.float32) - (bits - 2))
     bk, bn = mant.shape
@@ -82,30 +113,34 @@ def _kernel(x_ref, mant_ref, exp_ref, a_ref, b_ref, o_ref, acc_ref, t_ref, *,
         o_ref[...] = (acc_ref[...] + lowrank).astype(out_dtype)
 
 
-def _check_shapes(x, mant, exp, a, b, block_size, block_n, block_k):
+def _check_shapes(x, mant, exp, a, b, block_size, block_n, block_k, epb):
     m, k = x.shape
     kn, n = mant.shape
     r = a.shape[1]
-    assert kn == k and exp.shape == (k // block_size, n), (
-        f"packed shapes {mant.shape}/{exp.shape} mismatch x {x.shape}")
+    assert kn * epb == k and exp.shape == (k // block_size, n), (
+        f"quantized shapes {mant.shape}/{exp.shape} mismatch x {x.shape} "
+        f"(elems_per_byte={epb})")
     assert a.shape == (k, r) and b.shape == (r, n), (
         f"low-rank factors {a.shape}/{b.shape} mismatch ({k=}, {n=})")
     assert n % block_n == 0 and k % block_k == 0, (
         f"shapes ({m},{k},{n}) must divide blocks ({block_k},{block_n}) "
         "— use kernels.ops wrapper for padding/heuristics")
     assert block_k % block_size == 0, "block_k must cover whole MXINT blocks"
+    assert block_size % epb == 0, (
+        f"MXINT block {block_size} must cover whole packed bytes (epb={epb})")
     return m, k, n, r
 
 
 def mxint_matmul_lowrank_pallas(
     x: jax.Array,        # (M, K)
-    mant: jax.Array,     # (K, N) int8
+    mant: jax.Array,     # (K, N) int8, or (K // epb, N) when packed
     exp: jax.Array,      # (K // block_size, N) int8
     a: jax.Array,        # (K, r) low-rank down-projection (fused in-kernel)
     b: jax.Array,        # (r, N)
     *,
     bits: int,
     block_size: int,
+    packed: bool = False,
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
@@ -113,19 +148,21 @@ def mxint_matmul_lowrank_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     """Prefill-shaped launch: 3D grid, K innermost for accumulation."""
-    m, k, n, r = _check_shapes(x, mant, exp, a, b, block_size, block_n, block_k)
+    epb = elems_per_byte(bits) if packed else 1
+    m, k, n, r = _check_shapes(x, mant, exp, a, b, block_size, block_n,
+                               block_k, epb)
     assert m % block_m == 0, (
         f"M={m} must divide block_m={block_m} — use kernels.ops wrapper")
 
     grid = (m // block_m, n // block_n, k // block_k)
     kernel = functools.partial(_kernel, bits=bits, block_size=block_size,
-                               out_dtype=out_dtype, n_axis=1, k_axis=2)
+                               epb=epb, out_dtype=out_dtype, n_axis=1, k_axis=2)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((block_k // epb, block_n), lambda i, j, s: (s, j)),
             pl.BlockSpec((block_k // block_size, block_n), lambda i, j, s: (s, j)),
             pl.BlockSpec((block_k, r), lambda i, j, s: (s, 0)),
             pl.BlockSpec((r, block_n), lambda i, j, s: (0, j)),
@@ -140,13 +177,14 @@ def mxint_matmul_lowrank_pallas(
 
 def mxint_matmul_lowrank_decode_pallas(
     x: jax.Array,        # (M, K) — M tiny (decode slot count), whole-M block
-    mant: jax.Array,     # (K, N) int8
+    mant: jax.Array,     # (K, N) int8, or (K // epb, N) when packed
     exp: jax.Array,      # (K // block_size, N) int8
     a: jax.Array,        # (K, r)
     b: jax.Array,        # (r, N)
     *,
     bits: int,
     block_size: int,
+    packed: bool = False,
     block_n: int = 128,
     block_k: int = 128,
     out_dtype=jnp.float32,
@@ -155,17 +193,19 @@ def mxint_matmul_lowrank_decode_pallas(
     """Skinny-M decode launch: the whole (padded) M is one block, grid is
     N-major 2D (N/bn, K/bk) — no M tiling, weight tiles stream exactly once
     per token step."""
-    m, k, n, r = _check_shapes(x, mant, exp, a, b, block_size, block_n, block_k)
+    epb = elems_per_byte(bits) if packed else 1
+    m, k, n, r = _check_shapes(x, mant, exp, a, b, block_size, block_n,
+                               block_k, epb)
 
     grid = (n // block_n, k // block_k)
     kernel = functools.partial(_kernel, bits=bits, block_size=block_size,
-                               out_dtype=out_dtype, n_axis=0, k_axis=1)
+                               epb=epb, out_dtype=out_dtype, n_axis=0, k_axis=1)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, block_k), lambda j, s: (0, s)),
-            pl.BlockSpec((block_k, block_n), lambda j, s: (s, j)),
+            pl.BlockSpec((block_k // epb, block_n), lambda j, s: (s, j)),
             pl.BlockSpec((block_k // block_size, block_n), lambda j, s: (s, j)),
             pl.BlockSpec((block_k, r), lambda j, s: (s, 0)),
             pl.BlockSpec((r, block_n), lambda j, s: (0, j)),

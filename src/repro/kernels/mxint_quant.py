@@ -1,9 +1,16 @@
 """Pallas TPU kernel: blockwise MXINT quantization.
 
 One program quantizes a (block_size, block_n) tile: shared-exponent
-reduction over the block dimension, overflow-aware exponent bump, mantissa
+reduction over the block dimension, overflow-aware exponent bump (re-clipped
+to int8 range so a bump at e = 127 saturates instead of wrapping), mantissa
 round/clip — all in VMEM.  Used to (re)pack weights on device, e.g. after an
 optimizer step in QAT-style flows, without a round-trip through HBM floats.
+
+``packed=True`` emits the sub-byte ``quant.mxint.pack_mantissa`` HBM layout
+(two 4-bit fields per byte at 4-/3-bit, four 2-bit fields at 2-bit; low
+field = even row) — the SAME layout the fused matmul kernels consume, so an
+on-device repack feeds the serving GEMM without a host round-trip and
+without a layout mismatch.
 """
 
 from __future__ import annotations
@@ -14,8 +21,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.quant.mxint import elems_per_byte, pack_fields
 
-def _kernel(w_ref, mant_ref, exp_ref, *, bits: int):
+
+def _kernel(w_ref, mant_ref, exp_ref, *, bits: int, epb: int):
     w = w_ref[...].astype(jnp.float32)            # (bs, bn)
     maxabs = jnp.max(jnp.abs(w), axis=0, keepdims=True)
     safe = jnp.where(maxabs > 0, maxabs, 1.0)
@@ -24,30 +33,38 @@ def _kernel(w_ref, mant_ref, exp_ref, *, bits: int):
     qmax = 2 ** (bits - 1) - 1
     scale = jnp.exp2(e.astype(jnp.float32) - (bits - 2))
     over = jnp.round(maxabs / scale) > qmax
-    e = jnp.where(over, e + 1, e)
+    # re-clip after the bump: e = 128 would wrap to -128 on the int8 cast
+    e = jnp.clip(jnp.where(over, e + 1, e), -126, 127)
     scale = jnp.exp2(e.astype(jnp.float32) - (bits - 2))
-    mant_ref[...] = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    # the ONE encoder of the packed byte layout lives in quant.mxint
+    mant_ref[...] = pack_fields(q, epb)
     exp_ref[...] = e.astype(jnp.int8)
 
 
 def mxint_quantize_pallas(w: jax.Array, *, bits: int, block_size: int,
-                          block_n: int = 128, interpret: bool = False):
-    """w: (K, N) -> (mant int8 (K, N), exp int8 (K//bs, N))."""
+                          block_n: int = 128, packed: bool = False,
+                          interpret: bool = False):
+    """w: (K, N) -> (mant int8 (K, N) — (K // epb, N) when packed —
+    exp int8 (K//bs, N))."""
     k, n = w.shape
     assert k % block_size == 0 and n % block_n == 0, (
         f"shape ({k},{n}) must divide (block_size={block_size}, block_n={block_n})")
+    epb = elems_per_byte(bits) if packed else 1
+    assert block_size % epb == 0, (
+        f"MXINT block {block_size} must cover whole packed bytes (epb={epb})")
     grid = (k // block_size, n // block_n)
-    kernel = functools.partial(_kernel, bits=bits)
+    kernel = functools.partial(_kernel, bits=bits, epb=epb)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((block_size, block_n), lambda i, j: (i, j))],
         out_specs=[
-            pl.BlockSpec((block_size, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_size // epb, block_n), lambda i, j: (i, j)),
             pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((k, n), jnp.int8),
+            jax.ShapeDtypeStruct((k // epb, n), jnp.int8),
             jax.ShapeDtypeStruct((k // block_size, n), jnp.int8),
         ],
         interpret=interpret,

@@ -16,6 +16,7 @@ the skinny-M N-major-grid variant instead of padding M up to prefill tiles.
 
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -28,7 +29,7 @@ from repro.kernels.mxint_matmul import (
 )
 from repro.kernels.mxint_quant import mxint_quantize_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.quant.mxint import PackedMXINT
+from repro.quant.mxint import PackedMXINT, elems_per_byte
 
 # Decode = the whole (8-padded) M fits one skinny block.  Above this M the
 # 3D prefill grid amortizes weight streaming across M tiles instead.
@@ -56,7 +57,7 @@ def _largest_divisor(dim: int, cap: int, mult: int = 1) -> int:
     return 0
 
 
-def pick_blocks(m: int, k: int, n: int, *, block_size: int,
+def pick_blocks(m: int, k: int, n: int, *, block_size: int, epb: int = 1,
                 block_m: int = 128, block_n: int = 128,
                 block_k: int = 128) -> tuple[int, int, int, bool]:
     """Block-size heuristic keyed on (M, K, N) -> (bm, bn, bk, decode).
@@ -74,10 +75,21 @@ def pick_blocks(m: int, k: int, n: int, *, block_size: int,
     bk: largest divisor of K that is a multiple of the MXINT block size and
     ≤ block_k — NOT a collapse to block_size, which tanked tile efficiency
     whenever K wasn't a block_k multiple (e.g. K=192, bk=128 now picks 96,
-    not 32).  bn: block_n when it divides N, else the largest divisor of N
-    ≤ block_n that keeps 8-lane alignment (whole-N fallback).
+    not 32).  With sub-byte packed mantissas (``epb`` > 1; epb = mantissas
+    per stored byte, ``quant.mxint.elems_per_byte``) bk must also respect
+    the packing granularity: the packed tile has bk / epb
+    sublane rows, so bk prefers multiples of lcm(block_size, 8 * epb) to keep
+    the packed mantissa tile 8-sublane-aligned (falling back to plain
+    block_size multiples — always correct, whole bytes per tile — when K has
+    no such divisor).  bn: block_n when it divides N, else the largest
+    divisor of N ≤ block_n that keeps 8-lane alignment (whole-N fallback).
     """
-    bk = _largest_divisor(k, block_k, block_size) or block_size
+    bk = 0
+    if epb > 1:
+        gran = math.lcm(block_size, 8 * epb)
+        bk = _largest_divisor(k, block_k, gran)
+    if not bk:
+        bk = _largest_divisor(k, block_k, block_size) or block_size
     if n % block_n == 0:
         bn = block_n
     else:
@@ -99,6 +111,11 @@ def quantized_matmul(x: jax.Array, mant: jax.Array, exp: jax.Array,
 
     One fused Pallas launch: ``a`` goes into the kernel and t = x @ a is
     accumulated in VMEM scratch across K-steps (no separate GEMM).
+
+    ``mant`` may be flat int8 (K, N) or the sub-byte packed (K // epb, N)
+    layout from ``quant.mxint.pack_mantissa`` — detected from the shapes
+    (static under jit); the packed form streams bits/8 bytes per element
+    from HBM and unpacks in VMEM inside the kernel.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -108,12 +125,23 @@ def quantized_matmul(x: jax.Array, mant: jax.Array, exp: jax.Array,
     x2 = x.reshape(-1, k)
     m = x2.shape[0]
 
+    epb = elems_per_byte(bits)
+    if mant.shape[0] == k:
+        packed = False
+    elif epb > 1 and mant.shape[0] * epb == k:
+        packed = True
+    else:
+        raise ValueError(
+            f"mantissa rows {mant.shape[0]} match neither flat K={k} nor "
+            f"packed K/epb={k // epb} (bits={bits})")
+
     bm, bn, bk, decode = pick_blocks(m, k, n, block_size=block_size,
+                                     epb=epb if packed else 1,
                                      block_m=block_m, block_n=block_n,
                                      block_k=block_k)
     x2p = _pad_to(x2, 0, bm)
-    common = dict(bits=bits, block_size=block_size, block_n=bn, block_k=bk,
-                  interpret=interpret)
+    common = dict(bits=bits, block_size=block_size, packed=packed,
+                  block_n=bn, block_k=bk, interpret=interpret)
     if decode:
         y = mxint_matmul_lowrank_decode_pallas(x2p, mant, exp, a, b, **common)
     else:
@@ -128,15 +156,19 @@ def quantized_matmul_packed(x: jax.Array, packed: PackedMXINT, a: jax.Array,
                             bits=packed.bits, block_size=packed.block_size, **kw)
 
 
-@partial(jax.jit, static_argnames=("bits", "block_size", "interpret"))
+@partial(jax.jit, static_argnames=("bits", "block_size", "packed", "interpret"))
 def quantize_weights(w: jax.Array, *, bits: int, block_size: int,
-                     interpret: bool | None = None):
+                     packed: bool = False, interpret: bool | None = None):
+    """On-device (re)quantize; ``packed=True`` emits the sub-byte mantissa
+    layout the fused matmul kernels consume (no host round-trip, no layout
+    mismatch)."""
     if interpret is None:
         interpret = not _on_tpu()
     k, n = w.shape
     bn = 128 if n % 128 == 0 else n
     return mxint_quantize_pallas(w, bits=bits, block_size=block_size,
-                                 block_n=bn, interpret=interpret)
+                                 block_n=bn, packed=packed,
+                                 interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("sm_scale", "interpret"))

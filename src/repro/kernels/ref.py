@@ -9,7 +9,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.quant.mxint import mxint_quantize, mxint_dequantize
+from repro.quant.mxint import (
+    mxint_quantize,
+    mxint_dequantize,
+    pack_mantissa,
+    unpack_mantissa,
+)
 
 
 def mxint_matmul_lowrank_ref(x: jax.Array, mant: jax.Array, exp: jax.Array,
@@ -17,12 +22,16 @@ def mxint_matmul_lowrank_ref(x: jax.Array, mant: jax.Array, exp: jax.Array,
                              block_size: int) -> jax.Array:
     """y = x @ dq(Wq) + (x @ A) @ B  with f32 accumulation.
 
-    x: (M, K); mant: (K, N) int8; exp: (K//bs, N) int8; a: (K, r); b: (r, N).
-    Oracle for BOTH kernel variants (prefill 3D grid and skinny-M decode
-    N-major grid) — the fused in-kernel prologue must match this unfused
-    two-GEMM form exactly up to f32 accumulation order.
+    x: (M, K); mant: (K, N) int8 — or the sub-byte packed (K // epb, N)
+    layout, detected from the shapes and unpacked here; exp: (K//bs, N) int8;
+    a: (K, r); b: (r, N).  Oracle for BOTH kernel variants (prefill 3D grid
+    and skinny-M decode N-major grid) — the fused in-kernel prologue must
+    match this unfused two-GEMM form exactly up to f32 accumulation order.
     """
-    k, n = mant.shape
+    k = x.shape[-1]
+    n = mant.shape[-1]
+    if mant.shape[-2] != k:
+        mant = unpack_mantissa(mant, bits, k)
     mant_b = mant.reshape(k // block_size, block_size, n)
     w = mxint_dequantize(mant_b, exp, bits, out_shape=(k, n), dtype=jnp.float32)
     x32 = x.astype(jnp.float32)
@@ -30,11 +39,15 @@ def mxint_matmul_lowrank_ref(x: jax.Array, mant: jax.Array, exp: jax.Array,
     return y
 
 
-def mxint_quantize_ref(w: jax.Array, bits: int, block_size: int):
-    """(mant int8 (K, N), exp int8 (K//bs, N)) — flat-mantissa layout."""
+def mxint_quantize_ref(w: jax.Array, bits: int, block_size: int,
+                       packed: bool = False):
+    """(mant int8 (K, N) — (K // epb, N) when packed — exp int8 (K//bs, N))."""
     mant, exp = mxint_quantize(w, bits, block_size)
     k, n = w.shape[-2], w.shape[-1]
-    return mant.reshape(*w.shape[:-2], k, n), exp
+    mant = mant.reshape(*w.shape[:-2], k, n)
+    if packed:
+        mant = pack_mantissa(mant, bits)
+    return mant, exp
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -73,7 +73,12 @@ def linear(p: Any, x: jax.Array, *, taps: Taps | None = None,
                     x, p["mant"], p["exp"], p["lora_a"], p["lora_b"],
                     bits=int(p["bits"]), block_size=int(p["block_size"]))
             mant, exp = p["mant"], p["exp"]
-            bs = mant.shape[-2] // exp.shape[-2]      # static from shapes
+            k = x.shape[-1]
+            bs = k // exp.shape[-2]                   # static from shapes
+            epb = k // mant.shape[-2]                 # >1 => sub-byte packed
+            if epb > 1:
+                from repro.quant.mxint import unpack_fields
+                mant = unpack_fields(mant, epb, k)
             scale = jnp.exp2(exp.astype(jnp.float32)
                              - (p["bits"].astype(jnp.float32) - 2))
             w = (mant.astype(jnp.float32)

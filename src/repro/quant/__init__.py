@@ -8,6 +8,11 @@ from repro.quant.mxint import (
     mxint_dequantize,
     mxint_fake_quant,
     pack_mxint,
+    unpack_mxint,
+    pack_mantissa,
+    unpack_mantissa,
+    container_bits,
+    elems_per_byte,
     MXINT_CONFIGS,
 )
 from repro.quant.intq import int_fake_quant

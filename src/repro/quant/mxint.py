@@ -10,6 +10,29 @@ Average bits/weight = bits + 8 / block_size:
 
 All q/dq functions are pure-jnp and jittable.  ``mxint_fake_quant`` is the
 quantize->dequantize roundtrip used everywhere the framework needs W-tilde.
+
+Sub-byte HBM storage
+--------------------
+
+``pack_mantissa``/``unpack_mantissa`` store mantissas truly sub-byte so the
+HBM bytes moved match the nominal bit-width instead of one int8 per element:
+
+* container width = smallest power-of-two >= bits (``container_bits``):
+  4-bit -> 4, 3-bit -> 4 (two per byte, savings are 4 bits/elt — documented,
+  not the ideal 3), 2-bit -> 2 (four per byte), 8-bit -> 8 (no packing).
+* ``elems_per_byte`` (epb) = 8 // container.  Packing runs along the
+  *input* (row / contraction) axis: byte row ``u`` of the packed (K/epb, N)
+  int8 buffer holds element rows ``u*epb + j`` for ``j`` in ``range(epb)``,
+  field ``j`` occupying bits ``[j*w, (j+1)*w)`` — little-endian within the
+  byte, so the LOW nibble is the EVEN row.  Fields are two's-complement at
+  container width (sign-extension recovers the int8 mantissa exactly).
+
+The fused Pallas kernels (``kernels/mxint_matmul``) consume this layout
+directly: the mantissa BlockSpec shrinks to (bk // epb, bn) and the kernel
+widens to int32 and sign-extends in VMEM right before the dequant-dot, so
+only packed bytes ever cross HBM.  ``packed=False`` on ``pack_mxint`` /
+``core.api.pack_for_serving`` keeps the flat int8 layout as an
+interpret-mode debugging escape hatch.
 """
 
 from __future__ import annotations
@@ -69,7 +92,10 @@ def mxint_quantize(w: jax.Array, bits: int, block_size: int):
     # After the floor, maxabs/scale can be up to 2^(bits-1) (=qmax+1); bump the
     # exponent where the rounded mantissa would overflow.
     over = jnp.round(maxabs / scale) > qmax
-    e = jnp.where(over, e + 1, e)
+    # re-clip AFTER the bump: a block whose maxabs needs the bump at e = 127
+    # would otherwise emit e = 128, which wraps to -128 on the int8 cast and
+    # dequantizes to garbage — clamping saturates the mantissa at qmax instead.
+    e = jnp.clip(jnp.where(over, e + 1, e), -126, 127)
     scale = jnp.exp2(e.astype(jnp.float32) - (bits - 2))
     mant = jnp.clip(jnp.round(wb / scale), -qmax, qmax).astype(jnp.int8)
     return mant, e.squeeze(-2).astype(jnp.int8)  # (..., nb, bs, n), (..., nb, n)
@@ -106,24 +132,100 @@ def mxint_fake_quant(w: jax.Array, bits: int, block_size: int) -> jax.Array:
     return mxint_dequantize(mant, exp, bits, out_shape=w.shape, dtype=w.dtype)
 
 
+# ---------------------------------------------------------------------------
+# sub-byte mantissa packing (HBM layout; see module docstring for the format)
+# ---------------------------------------------------------------------------
+
+def container_bits(bits: int) -> int:
+    """Storage width per element: smallest power-of-two >= bits (max 8)."""
+    w = 8
+    while w // 2 >= bits:
+        w //= 2
+    return w
+
+
+def elems_per_byte(bits: int) -> int:
+    """How many mantissas share one stored byte (1 for >4-bit formats)."""
+    return 8 // container_bits(bits)
+
+
+def pack_fields(mant: jax.Array, epb: int) -> jax.Array:
+    """(..., K, N) int8 mantissas -> (..., ceil(K/epb), N) int8 bytes.
+
+    Byte row u, field j (bits [j*w, (j+1)*w), w = 8/epb) <- element row
+    u*epb + j.  K not divisible by epb is zero-padded (unpack crops).
+    """
+    if epb == 1:
+        return mant
+    w = 8 // epb
+    k = mant.shape[-2]
+    pad = (-k) % epb
+    if pad:
+        widths = [(0, 0)] * (mant.ndim - 2) + [(0, pad), (0, 0)]
+        mant = jnp.pad(mant, widths)
+    g = mant.astype(jnp.int32) & ((1 << w) - 1)
+    *lead, kp, n = g.shape
+    g = g.reshape(*lead, kp // epb, epb, n)
+    out = g[..., 0, :]
+    for j in range(1, epb):
+        out = out | (g[..., j, :] << (j * w))
+    return out.astype(jnp.int8)
+
+
+def unpack_fields(packed: jax.Array, epb: int,
+                  k: int | None = None) -> jax.Array:
+    """Inverse of ``pack_fields``: sign-extend each field back to int8.
+
+    ``k`` crops the row axis (needed when pack zero-padded a non-aligned K).
+    """
+    if epb == 1:
+        return packed
+    w = 8 // epb
+    p32 = packed.astype(jnp.int32)
+    # field j: left-align (drop higher fields), arithmetic-shift back down
+    # so the container-width two's-complement sign lands in bit 31 first.
+    parts = [(p32 << (32 - w * (j + 1))) >> (32 - w) for j in range(epb)]
+    st = jnp.stack(parts, axis=-2)                # (..., Kp, epb, N)
+    *lead, kp, _, n = st.shape
+    out = st.reshape(*lead, kp * epb, n).astype(jnp.int8)
+    return out if k is None else out[..., :k, :]
+
+
+def pack_mantissa(mant: jax.Array, bits: int) -> jax.Array:
+    """Pack flat int8 mantissas along the input axis for ``bits``-bit MXINT."""
+    return pack_fields(mant, elems_per_byte(bits))
+
+
+def unpack_mantissa(packed: jax.Array, bits: int,
+                    k: int | None = None) -> jax.Array:
+    return unpack_fields(packed, elems_per_byte(bits), k)
+
+
 class PackedMXINT(NamedTuple):
-    """Storage layout the Pallas kernel consumes: int8 mantissa laid out as the
-    original (m, n) matrix plus per-(block,col) int8 exponents."""
-    mant: jax.Array      # (m, n) int8
+    """Storage layout the Pallas kernel consumes: int8 mantissa bytes —
+    sub-byte packed along the input axis when ``packed`` (the HBM layout the
+    kernels unpack in VMEM) or one int8 per element otherwise — plus
+    per-(block, col) int8 exponents."""
+    mant: jax.Array      # (m // elems_per_byte(bits), n) int8 if packed
     exp: jax.Array       # (m // block_size, n) int8
     bits: int
     block_size: int
     shape: tuple[int, int]
+    packed: bool = True
 
 
-def pack_mxint(w: jax.Array, bits: int, block_size: int) -> PackedMXINT:
+def pack_mxint(w: jax.Array, bits: int, block_size: int,
+               packed: bool = True) -> PackedMXINT:
     mant, exp = mxint_quantize(w, bits, block_size)
     m, n = w.shape[-2], w.shape[-1]
     mant2d = mant.reshape(*w.shape[:-2], m, n)
-    return PackedMXINT(mant2d, exp, bits, block_size, (m, n))
+    if packed:
+        mant2d = pack_mantissa(mant2d, bits)
+    return PackedMXINT(mant2d, exp, bits, block_size, (m, n), packed)
 
 
 def unpack_mxint(p: PackedMXINT, dtype=jnp.float32) -> jax.Array:
     m, n = p.shape
-    mant = p.mant.reshape(*p.mant.shape[:-2], m // p.block_size, p.block_size, n)
+    mant = unpack_mantissa(p.mant, p.bits, m) if p.packed else p.mant
+    mant = mant.reshape(*mant.shape[:-2], m // p.block_size, p.block_size, n)
     return mxint_dequantize(mant, p.exp, p.bits, dtype=dtype)

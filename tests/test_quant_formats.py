@@ -59,11 +59,35 @@ def test_mxint_zero_block():
 def test_mxint_pack_unpack_consistent():
     w = jax.random.normal(jax.random.PRNGKey(2), (128, 64))
     packed = pack_mxint(w, 4, 32)
-    assert packed.mant.shape == (128, 64) and packed.mant.dtype == jnp.int8
+    # sub-byte HBM layout: two 4-bit mantissas per byte along the input axis
+    assert packed.mant.shape == (64, 64) and packed.mant.dtype == jnp.int8
+    assert packed.mant.nbytes == 128 * 64 // 2
     assert packed.exp.shape == (4, 64) and packed.exp.dtype == jnp.int8
     deq = unpack_mxint(packed)
     ref = mxint_fake_quant(w, 4, 32)
     np.testing.assert_allclose(np.asarray(deq), np.asarray(ref), atol=0)
+    # flat escape hatch round-trips identically
+    flat = pack_mxint(w, 4, 32, packed=False)
+    assert flat.mant.shape == (128, 64)
+    np.testing.assert_allclose(np.asarray(unpack_mxint(flat)),
+                               np.asarray(ref), atol=0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    k=st.integers(1, 80),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mantissa_pack_roundtrip_property(bits, k, n, seed):
+    """pack -> unpack is the identity for any K (incl. non-byte-aligned)."""
+    from repro.quant.mxint import pack_mantissa, unpack_mantissa
+    qmax = 2 ** (bits - 1) - 1
+    mant = jax.random.randint(jax.random.PRNGKey(seed), (k, n), -qmax,
+                              qmax + 1, dtype=jnp.int32).astype(jnp.int8)
+    out = unpack_mantissa(pack_mantissa(mant, bits), bits, k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(mant))
 
 
 @settings(max_examples=20, deadline=None)
