@@ -19,6 +19,14 @@ Three measurements, all CPU-runnable:
   cache, cross-checked by actually running the Pallas decode-attention
   kernel at both table widths.  At prefix << max_len the paged read is
   smaller by ~max_len / bucket_tokens.
+* chunked admission — TTFT and per-tick latency p50/p95 of the two-queue
+  scheduler under a mixed load: a long prompt admitted while another slot
+  is mid-decode, chunked (budgeted tokens/tick) vs one-shot (the whole
+  prompt in a single chunk).  One-shot admission puts the entire prefill in
+  ONE tick — the running slot's inter-token latency spikes to the prompt
+  length; chunked bounds every tick by the chunk budget.  Plus the
+  chunked-paged vs one-shot-dense prefill attention bytes (the dense path
+  used to score every query row against max_len keys).
 
 Results land in the CSV rows AND in the BENCH json
 (``experiments/bench/decode_throughput.json``).
@@ -27,6 +35,7 @@ Results land in the CSV rows AND in the BENCH json
 from __future__ import annotations
 
 import json
+import time
 from pathlib import Path
 
 import jax
@@ -35,10 +44,11 @@ import numpy as np
 
 from benchmarks.kernel_bench import (_measured_weight_bytes, _weight_bytes,
                                      timed_us)
-from repro.kernels.ops import decode_attention, quantized_matmul
+from repro.kernels.ops import chunk_plan, decode_attention, quantized_matmul
 from repro.kernels.ref import decode_attention_ref, mxint_matmul_lowrank_ref
 from repro.models import ModelConfig, init_params
 from repro.quant.mxint import mxint_quantize, pack_mantissa
+from repro.serve.batching import ContinuousBatcher, Request
 from repro.serve.engine import greedy_generate_loop, scan_generate
 from repro.serve.paging import page_bucket
 
@@ -172,6 +182,81 @@ def run(csv_rows: list | None = None) -> dict:
             f"decode,paged_attention,{us_bucket:.0f},"
             f"bytes_per_token={paged_bytes:.0f}"
             f";read_reduction={dense_bytes / paged_bytes:.2f}x")
+
+    # ---- chunked admission: TTFT + per-tick latency under mixed load -------
+    # one slot decodes throughout while a long prompt is admitted; the tick
+    # times during admission ARE the running slot's inter-token latency.
+    # chunk_tokens >= prompt reproduces the one-shot admission (whole
+    # prefill in one tick); a small budget bounds every tick.
+    long_prompt = np.asarray(
+        np.random.default_rng(1).integers(0, CFG.vocab_size, 96), np.int32)
+    # max_len matches the paged-attention section above: the dense one-shot
+    # prefill paid for the whole allocation, not the prompt
+    page_size, max_len, kvh, hd = 16, 1024, CFG.num_kv_heads, CFG.hd
+
+    def mixed_load(chunk_tokens: int) -> tuple[float, list[float]]:
+        batcher = ContinuousBatcher(params, CFG, num_slots=2, max_len=max_len,
+                                    paged=True, page_size=page_size,
+                                    chunk_tokens=chunk_tokens)
+
+        def scenario(measure: bool):
+            short = Request(rid=0, prompt=np.asarray([3, 1, 4, 1, 5, 9, 2, 6],
+                                                     np.int32),
+                            max_new_tokens=120)
+            batcher.submit(short)
+            while not short.output:          # short slot reaches DECODING
+                batcher.step()
+            long_req = Request(rid=1, prompt=long_prompt, max_new_tokens=4)
+            t0 = time.perf_counter()
+            batcher.submit(long_req)
+            ticks = []
+            ttft = None
+            while ttft is None:
+                ts = time.perf_counter()
+                batcher.step()
+                ticks.append(time.perf_counter() - ts)
+                if long_req.output:
+                    ttft = time.perf_counter() - t0
+            batcher.run()                    # drain both requests
+            return (ttft, ticks) if measure else None
+
+        scenario(measure=False)              # warm every jit cache entry
+        return scenario(measure=True)
+
+    admission: dict = {"prompt_len": len(long_prompt),
+                       "page_size": page_size}
+    for label, budget in (("chunked", 16), ("oneshot", len(long_prompt))):
+        ttft, ticks = mixed_load(budget)
+        ms = np.asarray(sorted(ticks)) * 1e3
+        admission[label] = {
+            "chunk_tokens": budget,
+            "admission_ticks": len(ticks),
+            "ttft_ms": ttft * 1e3,
+            "tick_ms_p50": float(np.percentile(ms, 50)),
+            "tick_ms_p95": float(np.percentile(ms, 95)),
+            "tick_ms_max": float(ms.max()),
+        }
+        if csv_rows is not None:
+            csv_rows.append(
+                f"decode,admission_{label},{ttft * 1e6:.0f},"
+                f"tick_ms_p95={np.percentile(ms, 95):.2f}"
+                f";chunk_tokens={budget}")
+
+    # prefill attention K/V bytes, per layer: the one-shot DENSE admission
+    # (pre-chunked scheduler) scored every query row against a max_len-sized
+    # cache; chunked-paged reads only the live-prefix page bucket per chunk
+    itemsize = 4                                       # f32 pool on CPU
+    n = len(long_prompt)
+    dense_oneshot = 2 * kvh * max_len * hd * itemsize  # one Skv=max_len pass
+    chunked_paged, done = 0, 0
+    for w in chunk_plan(n, 16):
+        done += w
+        bucket = page_bucket(-(-done // page_size), max_len // page_size)
+        chunked_paged += 2 * kvh * bucket * page_size * hd * itemsize
+    admission["prefill_attn_kv_bytes_oneshot_dense"] = dense_oneshot
+    admission["prefill_attn_kv_bytes_chunked_paged"] = chunked_paged
+    admission["read_reduction"] = dense_oneshot / chunked_paged
+    results["chunked_admission"] = admission
 
     BENCH_JSON.parent.mkdir(parents=True, exist_ok=True)
     BENCH_JSON.write_text(json.dumps(results, indent=2))

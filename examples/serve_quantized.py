@@ -24,8 +24,10 @@ prompts = [rng.integers(0, 256, size=ln).astype(np.int32)
 
 outputs = {}
 for paged in (False, True):
+    # chunk_tokens=4 exercises multi-chunk admission (prompts up to 9 tokens
+    # prefill over 2-3 ticks, interleaved with running slots' decode ticks)
     batcher = ContinuousBatcher(qparams, LM_CFG, num_slots=2, max_len=96,
-                                paged=paged, page_size=16)
+                                paged=paged, page_size=16, chunk_tokens=4)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=12)
             for i, p in enumerate(prompts)]
     for r in reqs:

@@ -1,17 +1,24 @@
 """Pallas TPU kernels for QERA's compute hot-spots.
 
-mxint_matmul    — fused MXINT dequant GEMM + low-rank epilogue (serving path)
-mxint_quant     — on-device blockwise MXINT packing
-flash_attention — online-softmax attention (prefill path)
+mxint_matmul      — fused MXINT dequant GEMM + low-rank epilogue (serving)
+mxint_quant       — on-device blockwise MXINT packing
+flash_attention   — online-softmax attention (dense prefill path)
+decode_attention  — paged Sq=1 attention through the page table (decode)
+prefill_attention — paged Sq=chunk attention (chunked admission prefill)
 
-ops.py holds the jit'd public wrappers (padding + interpret fallback);
-ref.py the pure-jnp oracles every kernel is tested against.
-EXAMPLE.md documents the layout conventions.
+ops.py holds the jit'd public wrappers (padding + interpret fallback) plus
+the chunk-size heuristic for chunked prefill; ref.py the pure-jnp oracles
+every kernel is tested against.  EXAMPLE.md documents the layout
+conventions.
 """
 
 from repro.kernels.ops import (
+    chunk_plan,
+    decode_attention,
     flash_attention,
     pick_blocks,
+    pick_prefill_chunk,
+    prefill_attention,
     quantize_weights,
     quantized_matmul,
     quantized_matmul_packed,

@@ -7,6 +7,12 @@ out), pick interpret mode automatically off-TPU, choose block sizes from a
     quantized_matmul(x, packed, a, b)    # the QER serving GEMM (one launch)
     quantize_weights(w, bits, block_size)
     flash_attention(q, k, v, causal=..., kv_len=...)
+    decode_attention(q, k_pages, v_pages, page_table, kv_len)
+    prefill_attention(q, k_pages, v_pages, page_table, q_off, kv_len)
+
+``pick_prefill_chunk`` / ``chunk_plan`` are the chunked-prefill sizing
+heuristic: pow2 chunk widths + binary tail decomposition keep per-tick
+admission work bounded while bounding jit retraces to O(log chunk).
 
 ``quantized_matmul`` issues exactly one Pallas launch: the low-rank
 ``t = x @ A`` prologue is fused into the kernel's K-loop (no standalone f32
@@ -23,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.prefill_attention import prefill_attention_pallas
 from repro.kernels.mxint_matmul import (
     mxint_matmul_lowrank_decode_pallas,
     mxint_matmul_lowrank_pallas,
@@ -188,6 +195,77 @@ def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         interpret = not _on_tpu()
     return decode_attention_pallas(q, k_pages, v_pages, page_table, kv_len,
                                    sm_scale=sm_scale, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def prefill_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                      page_table: jax.Array, q_off: jax.Array,
+                      kv_len: jax.Array, *, sm_scale: float | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Paged chunk-prefill attention (Sq = C per slot) — ONE Pallas launch.
+
+    q: (B, H, C, D) a C-token prompt chunk per slot at absolute offset
+    ``q_off`` (B,); k/v_pages: (P, Hkv, page_size, D) with the chunk's own
+    K/V already scattered into the slot's pages; page_table: (B, npages)
+    int32; kv_len: (B,) int32 live tokens including the chunk.  Masking is
+    causal-with-offset: row i sees kv ids ≤ q_off + i, plus the kv_len tail
+    mask.  The page-axis grid width is the (static) table width, so the
+    scheduler bounds reads by slicing the table to the live-prefix bucket.
+    Non-8-multiple chunk widths are padded: the padded rows DO attend (their
+    q_pos runs past the real chunk under the offset-causal mask) and produce
+    don't-care values that only the crop on the way out discards — callers
+    must never rely on them being masked.  Retraces once per (chunk width,
+    bucket width) pair.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    c = q.shape[2]
+    c8 = -(-c // 8) * 8
+    qp = _pad_to(q, 2, c8) if c8 != c else q
+    out = prefill_attention_pallas(qp, k_pages, v_pages, page_table,
+                                   q_off, kv_len, sm_scale=sm_scale,
+                                   interpret=interpret)
+    return out[:, :, :c]
+
+
+def pick_prefill_chunk(prompt_len: int, *, page_size: int = 0,
+                       max_chunk: int = 64) -> int:
+    """Per-tick prefill chunk width for ``prompt_len`` prompt tokens.
+
+    The smallest power of two covering the prompt, capped at ``max_chunk``
+    (the scheduler's token budget per tick — what bounds inter-token latency
+    for running slots during an admission).  Power-of-two widths plus the
+    binary tail decomposition in ``chunk_plan`` bound jit retraces to
+    O(log max_chunk) distinct chunk shapes.  With a paged cache the width is
+    trimmed to a ``page_size`` multiple (when it is at least one page) so
+    chunk boundaries land on page boundaries and each tick allocates whole
+    pages.
+    """
+    c = 1
+    while c < prompt_len and c < max_chunk:
+        c *= 2
+    c = min(c, max_chunk)
+    if page_size and c > page_size and c % page_size:
+        c -= c % page_size
+    return max(c, 1)
+
+
+def chunk_plan(n: int, chunk: int) -> list[int]:
+    """Split ``n`` prompt tokens into per-tick chunk widths: full ``chunk``-
+    sized pieces, then a binary decomposition of the remainder (largest
+    piece first).  Every piece is exactly sized — no padded tail tokens, so
+    recurrent-state families (mamba conv/ssm, rwkv state) never integrate
+    garbage positions and chunked prefill stays token-exact — while the set
+    of distinct widths stays O(log chunk)."""
+    plan = [chunk] * (n // chunk)
+    rem = n % chunk
+    w = 1 << max(rem.bit_length() - 1, 0)
+    while rem:
+        if rem >= w:
+            plan.append(w)
+            rem -= w
+        w //= 2
+    return plan
 
 
 @partial(jax.jit, static_argnames=("causal", "sm_scale", "kv_len", "block_q",

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: paged prefill attention (Sq = chunk, per-slot offset).
+
+The chunked-admission counterpart of ``decode_attention.py``: Q is a chunk of
+C prompt tokens per slot at absolute offset ``q_off`` (the tokens already
+prefilled), K/V are read through the slot's **page table** — the chunk's own
+keys included, because the caller scatters them into the slot's pages before
+the launch (models/attention.py ``paged_attention_prefill``).  That is what
+lets admission write straight into the page pool: no dense batch=1 scratch
+cache exists for the prefix to be copied out of afterwards.
+
+Masking is causal *with offset*: query row i (absolute position
+``q_off + i``) sees every already-written prefix token and the chunk tokens
+at positions ≤ its own — ``kv_id <= q_off + i`` — plus the usual
+``kv_id < kv_len`` length mask for page tails (and padded query rows, which
+the ops wrapper crops).
+
+Layout (see serve/paging.py for the pool):
+
+  q           (B, H, C, D)         C-token chunk per slot, GQA grouped
+  k/v pages   (P, Hkv, ps, D)      shared pool, page 0 reserved as garbage
+  page_table  (B, npages) int32    slot's logical page j -> physical page
+  q_off       (B,) int32           absolute position of q[:, :, 0]
+  kv_len      (B,) int32           live tokens incl. this chunk (masks tails)
+
+grid = (B, Hkv, npages), page axis innermost; page table / q_off / kv_len
+ride in as **scalar prefetch** (``PrefetchScalarGridSpec``) so the K/V
+BlockSpec index_map gathers ``pt[b, p]`` — the kernel never touches pages
+the slot does not own, and attention reads scale with the table width the
+scheduler ships (the live-prefix bucket), never with max_len.  All
+G = H/Hkv query heads are flattened into the chunk's row axis, so each page
+costs one (G*C, ps) MXU dot.
+
+Online-softmax state (m, l, acc) lives in VMEM scratch across the page
+sweep.  Logical page 0 always holds live tokens for every real query row
+(kv ids from 0 are visible under the offset-causal mask), so the running
+max is real before any fully-masked page contributes exp(s - m) ~= 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, sm_scale: float, page_size: int,
+            chunk: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G*C, d)
+    k = k_ref[0, 0].astype(jnp.float32)            # (ps, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+    kv_ids = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # rows are g-major: row = g*C + i, so the in-chunk position is row % C
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    q_pos = off_ref[b] + rows % chunk
+    mask = (kv_ids <= q_pos) & (kv_ids < len_ref[b])
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (G*C, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    pexp = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        pexp, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def prefill_attention_pallas(
+    q: jax.Array,           # (B, H, C, D) — C-token chunk per slot
+    k_pages: jax.Array,     # (P, Hkv, page_size, D)
+    v_pages: jax.Array,     # (P, Hkv, page_size, D)
+    page_table: jax.Array,  # (B, npages) int32
+    q_off: jax.Array,       # (B,) int32 — absolute position of q[:, :, 0]
+    kv_len: jax.Array,      # (B,) int32 — live tokens incl. this chunk
+    *,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, h, c, d = q.shape
+    _, hkv, page_size, _ = k_pages.shape
+    g = h // hkv
+    npages = page_table.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    # flatten the GQA group into the chunk's row axis: (B, Hkv, G*C, d)
+    qg = q.reshape(bsz, hkv, g, c, d).reshape(bsz, hkv, g * c, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,            # page_table, q_off, kv_len
+        grid=(bsz, hkv, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g * c, d),
+                         lambda b, h_, p, pt, off, ln: (b, h_, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b, h_, p, pt, off, ln: (pt[b, p], h_, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b, h_, p, pt, off, ln: (pt[b, p], h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g * c, d),
+                               lambda b, h_, p, pt, off, ln: (b, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g * c, 1), jnp.float32),
+            pltpu.VMEM((g * c, 1), jnp.float32),
+            pltpu.VMEM((g * c, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, sm_scale=sm_scale,
+                               page_size=page_size, chunk=c)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+        interpret=interpret,
+    )(page_table, q_off.astype(jnp.int32), kv_len.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(bsz, hkv, g, c, d).reshape(bsz, h, c, d)

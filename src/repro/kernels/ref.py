@@ -86,6 +86,40 @@ def gather_paged_kv(pages: jax.Array, page_table: jax.Array) -> jax.Array:
     return jnp.moveaxis(g, 2, 1).reshape(b, hkv, npages * ps, d)
 
 
+def prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, page_table: jax.Array,
+                          q_off: jax.Array, kv_len: jax.Array, *,
+                          sm_scale: float | None = None) -> jax.Array:
+    """Chunked paged prefill attention oracle: gather the slot's pages to a
+    contiguous prefix, then offset-causal masked softmax attention.
+
+    q: (B, H, C, D) — a C-token prompt chunk per slot whose first token sits
+    at absolute position ``q_off[b]``; k/v_pages: (P, Hkv, ps, D) with the
+    chunk's own K/V already scattered in; page_table: (B, npages) int32;
+    kv_len: (B,) int32 live tokens including this chunk.  Query row i sees
+    kv ids ≤ q_off + i (the written prefix plus the chunk's causal part) and
+    < kv_len (page tails).  Returns (B, H, C, D).
+    """
+    b, h, c, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kk = gather_paged_kv(k_pages, page_table)          # (B, Hkv, S, D)
+    vv = gather_paged_kv(v_pages, page_table)
+    g = h // kk.shape[1]
+    kk = jnp.repeat(kk, g, axis=1)
+    vv = jnp.repeat(vv, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * sm_scale
+    kv_ids = jnp.arange(kk.shape[2])
+    q_pos = q_off[:, None] + jnp.arange(c)             # (B, C)
+    mask = (kv_ids[None, None, :] <= q_pos[:, :, None]) & \
+           (kv_ids[None, None, :] < kv_len[:, None, None])
+    s = jnp.where(mask[:, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
 def decode_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                          page_table: jax.Array, kv_len: jax.Array, *,
                          sm_scale: float | None = None) -> jax.Array:

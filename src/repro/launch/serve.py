@@ -32,6 +32,9 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk-tokens", type=int, default=64,
+                    help="prefill token budget per tick (bounds per-tick "
+                         "latency during admissions)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -55,7 +58,8 @@ def main():
         print(f"quantized with {args.quantize}/{args.bits} rank {args.rank}")
 
     batcher = ContinuousBatcher(params, cfg, num_slots=args.slots,
-                                max_len=args.max_len)
+                                max_len=args.max_len,
+                                chunk_tokens=args.chunk_tokens)
     rng = np.random.default_rng(7)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,

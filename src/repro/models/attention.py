@@ -127,6 +127,38 @@ def paged_attention_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return out[:, :, None, :], {"k_pages": kp, "v_pages": vp}
 
 
+def paged_attention_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                            cache: Mapping[str, jax.Array],
+                            page_table: jax.Array, cache_len: jax.Array):
+    """Chunked direct-to-page prefill: scatter the chunk's K/V straight into
+    the slot's pages, then attend over the pages through the Pallas paged
+    prefill kernel — causal within the chunk, fully visible over the
+    already-written prefix.
+
+    q/k/v: (B, *, S, hd) with S the chunk width; ``cache_len`` (scalar or
+    (B,)) is the absolute position of the chunk's first token.  The chunk
+    occupies positions cache_len..cache_len+S-1, whose pages the scheduler
+    has already allocated (entries routed through an unallocated 0 entry
+    would land in the reserved garbage page).  This is what removes the
+    dense batch=1 scratch cache + ``place_pages`` copy from paged admission.
+    """
+    from repro.kernels.ops import prefill_attention
+
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    page_size = kp.shape[2]
+    b, _, s, _ = q.shape
+    pos0 = cache_len
+    if getattr(pos0, "ndim", 0) == 0:
+        pos0 = jnp.full((b,), pos0, jnp.int32)
+    pos = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]   # (B, S)
+    phys = jnp.take_along_axis(page_table, pos // page_size, axis=1)
+    off = pos % page_size
+    kp = kp.at[phys, :, off].set(k.transpose(0, 2, 1, 3).astype(kp.dtype))
+    vp = vp.at[phys, :, off].set(v.transpose(0, 2, 1, 3).astype(vp.dtype))
+    out = prefill_attention(q, kp, vp, page_table, pos0, pos0 + s)
+    return out, {"k_pages": kp, "v_pages": vp}
+
+
 def attention_block(p: Mapping[str, Any], x: jax.Array, angles: jax.Array, *,
                     num_heads: int, num_kv_heads: int, head_dim: int,
                     causal: bool = True, chunk: int = 0,
@@ -140,9 +172,10 @@ def attention_block(p: Mapping[str, Any], x: jax.Array, angles: jax.Array, *,
 
     x: (B, S, D).  Returns (out, new_cache) where new_cache is None when no
     cache was passed.  ``angles`` must already be sliced to x's positions.
-    A paged cache (k_pages/v_pages leaves + ``page_table``) takes the
-    single-token paged decode path; prefill stays dense (admission repages
-    it via serve.paging).
+    A paged cache (k_pages/v_pages leaves + ``page_table``) routes through
+    the page pool: s == 1 takes the single-token paged decode path, s > 1
+    the chunked direct-to-page prefill path (both scatter the new K/V into
+    the slot's pages in-graph, then launch ONE Pallas attention kernel).
     """
     b, s, _ = x.shape
     q = linear(p["wq"], x, taps=taps, name=f"{prefix}wq", use_pallas=use_pallas)
@@ -163,9 +196,12 @@ def attention_block(p: Mapping[str, Any], x: jax.Array, angles: jax.Array, *,
 
     new_cache = None
     if cache is not None and "k_pages" in cache:
-        assert s == 1, "paged attention is decode-only (prefill repages)"
-        out, new_cache = paged_attention_decode(q, k, v, cache, page_table,
-                                               cache_len)
+        if s == 1:
+            out, new_cache = paged_attention_decode(q, k, v, cache,
+                                                    page_table, cache_len)
+        else:
+            out, new_cache = paged_attention_prefill(q, k, v, cache,
+                                                     page_table, cache_len)
     elif cache is not None:
         # insert into cache at cache_len, attend over the whole cache
         ck, cv = cache["k"], cache["v"]

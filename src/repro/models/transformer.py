@@ -319,9 +319,15 @@ def forward(params: Params, batch: Mapping[str, jax.Array], cfg: ModelConfig,
     pos0 = jnp.zeros((), jnp.int32) if cache_len is None else cache_len
     all_angles = rope_freqs(cfg.hd, cfg.max_seq_len, cfg.rope_theta)
     if getattr(pos0, "ndim", 0) == 1:
-        # per-row positions (continuous-batching decode, s == 1)
-        angles = jnp.take(all_angles, pos0, axis=0)[:, None, None, :]
+        # per-row positions (continuous-batching decode s == 1, or per-row
+        # chunked prefill s > 1: row b covers positions pos0[b]..pos0[b]+s-1)
+        pos = pos0[:, None] + jnp.arange(s, dtype=pos0.dtype)[None, :]
+        angles = jnp.take(all_angles, pos, axis=0)[:, None]   # (B,1,S,hd/2)
     else:
+        # scalar offset: one-shot prefill (pos0 == 0) or a chunk-prefill
+        # step at offset pos0 (chunked admission / scan prologue) — the
+        # cache threads per-slot recurrent rows (mamba conv/ssm, rwkv
+        # state) across chunks, so hybrid families stay token-exact.
         angles = jax.lax.dynamic_slice_in_dim(all_angles, pos0, s, axis=0)
 
     aux_total = jnp.zeros((), jnp.float32)

@@ -3,6 +3,7 @@ from repro.serve.engine import (
     greedy_generate,
     greedy_generate_loop,
     init_cache,
+    make_chunk_step,
     make_decode_step,
     make_prefill_step,
     scan_generate,
@@ -11,7 +12,8 @@ from repro.serve.paging import (
     PagePool,
     dense_to_paged,
     init_paged_cache,
-    make_place_pages,
+    make_chunk_prefill,
+    make_zero_slot,
     page_bucket,
 )
 
@@ -23,9 +25,11 @@ __all__ = [
     "greedy_generate_loop",
     "init_cache",
     "init_paged_cache",
+    "make_chunk_prefill",
+    "make_chunk_step",
     "make_decode_step",
-    "make_place_pages",
     "make_prefill_step",
+    "make_zero_slot",
     "page_bucket",
     "scan_generate",
 ]

@@ -1,53 +1,78 @@
-"""Continuous batching: slot-based request scheduler over prefill/decode.
+"""Continuous batching: a two-queue scheduler over chunked prefill + decode.
 
 The production pattern (vLLM-style, simplified to the parts that matter for
-QER serving): a fixed pool of B slots shares one decode step; new requests
-are prefilled into a free slot's cache region while other slots keep
+QER serving): a fixed pool of B slots shares one fused decode step; new
+requests are *chunk-prefilled* into a slot while the other slots keep
 decoding; finished slots are freed immediately.
 
-Implementation notes for the JAX runtime:
-* one (B, max_len) KV cache, slot = batch row; per-slot lengths vector;
-* prefill computes the prompt with batch=1 and writes its cache rows into
-  the slot via ONE jitted ``place_slot`` call with the big cache donated
-  (zero-copy admission: XLA updates the cache in place instead of copying
-  every leaf, and the slot index is a traced scalar so one compile serves
-  every slot);
-* decode advances ALL active slots each step with a single decode_step call
-  (inactive slots are masked out of sampling).
+State machine (one ``step()`` == one tick; two queues = the waiting deque
+plus the decoding slot set, with at most ONE request in the PREFILLING
+state between them):
+
+    submit() ──> waiting (collections.deque)
+    waiting ──_start_admission()──> PREFILLING   (one free slot claimed)
+    PREFILLING ──one chunk per tick (≤ chunk_tokens)──> … ──last chunk──>
+        DECODING   (first token = the chunk step's in-graph argmax)
+    DECODING ──fused decode tick, all slots──> … ──eos/max──> slot freed
+
+Every tick runs AT MOST one prefill chunk for the admitting request *and*
+the decode step for all running slots, so admitting a long prompt never
+stalls running requests for more than one chunk's worth of compute:
+per-tick latency (and therefore inter-token latency of running slots) is
+bounded by the chunk budget, never by the prompt length.  Chunk widths come
+from ``kernels.ops.pick_prefill_chunk`` / ``chunk_plan`` — power-of-two
+pieces plus a binary tail, so every chunk is exactly sized (recurrent-state
+families never integrate padding) and jit retraces stay O(log chunk).
+
+Dense mode: chunks run through a batch=1 scratch cache sized to the
+(power-of-two bucketed) prompt — never max_len, so prefill attention stops
+reading max_len worth of masked keys — threading mamba conv/ssm and rwkv
+state across chunks; the finished scratch is placed into the slot's rows
+with ONE jitted donated call (``make_place_slot``).
 
 Paged mode (``paged=True``, see serve/paging.py):
-* K/V rows are replaced by a shared **page pool** + host-owned page tables;
-  admission becomes page **allocation** (``PagePool.alloc``) + ONE jitted
-  ``place_pages`` scatter into exactly the pages the request owns, so
-  capacity is bounded by pool pages actually in use — not B x max_len;
-* each tick ships the page table sliced to the live-prefix **bucket**
-  (power-of-two page count covering the longest active context), so the
-  Pallas decode-attention kernel reads only live pages: attention bytes
-  scale with the context in use, never with max_len;
-* a slot whose next token crosses a page boundary allocates lazily before
-  the tick; if the pool is empty the slot **pauses** — its append lands in
-  the reserved garbage page, its sampled token is discarded, and the same
-  token is recomputed once a page frees (greedy decode is deterministic);
-* freeing a slot returns its pages to the pool and zeroes its table row.
+* chunks write STRAIGHT into the slot's pages: ``make_chunk_prefill`` views
+  the slot's per-slot rows batch=1, scatters the chunk's K/V through the
+  page-table row, and the Pallas paged prefill kernel
+  (kernels/prefill_attention.py) attends over the already-written prefix
+  through the same table — no dense scratch cache, no ``place_pages`` copy;
+* pages are allocated **chunk-by-chunk**, not all-up-front; if the pool
+  runs dry mid-prefill the partial pages are rolled back and the request is
+  requeued at the head (greedy recompute is deterministic) —
+  ``admission_rollbacks`` counts these;
+* while a slot is PREFILLING, decode ticks ship its page-table row zeroed
+  (its appends land in the reserved garbage page) and roll its recurrent
+  rows back afterwards (``make_restore_slot``), so the interleaved decode
+  stream can never corrupt the half-built prefix;
+* decode-tick behavior is unchanged: per-tick lazy page growth with
+  pause-don't-corrupt on pool exhaustion, live-prefix bucketed page tables
+  (attention bytes scale with context in use, not max_len), and
+  preempt-and-requeue eviction to break all-slots-paused livelock — an
+  in-flight admission is rolled back first, since freeing its pages is
+  cheaper than evicting a decoded prefix.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.ops import chunk_plan, pick_prefill_chunk
 from repro.models.config import ModelConfig
-from repro.serve.engine import init_cache, make_decode_step, make_prefill_step
+from repro.serve.engine import init_cache, make_chunk_step, make_decode_step
 from repro.serve.paging import (
     PagePool,
     _place_row,
+    has_slot_rows,
     init_paged_cache,
-    make_place_pages,
+    make_chunk_prefill,
     make_restore_slot,
+    make_zero_slot,
     page_bucket,
 )
 
@@ -56,9 +81,13 @@ def make_place_slot(num_slots: int) -> Callable:
     """(cache, cache1, slot) -> cache with cache1's batch row written at slot.
 
     The batch axis differs per leaf family; it is the (static) axis whose
-    size == num_slots in the big leaf and 1 in the small one.  ``slot`` is a
-    traced scalar, so the jitted function compiles once for all slots; jit
-    with ``donate_argnums=(0,)`` to update the cache buffers in place.
+    size == num_slots in the big leaf and 1 in the small one.  Axes where
+    the small leaf is shorter (a prompt-bucket-sized scratch cache vs the
+    slot's max_len row) are written as a prefix — the tail beyond the
+    prompt is masked by the slot's kv length and never attended.  ``slot``
+    is a traced scalar, so the jitted function compiles once per scratch
+    bucket; jit with ``donate_argnums=(0,)`` to update the cache buffers in
+    place.
     """
 
     def place_slot(cache: Any, cache1: Any, slot: jax.Array) -> Any:
@@ -80,12 +109,23 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class _Admission:
+    """The PREFILLING state: one request mid-chunked-prefill in one slot."""
+    req: Request
+    slot: int
+    plan: list[int]                    # remaining chunk widths
+    done: int = 0                      # prompt tokens prefilled so far
+    cache1: Any = None                 # dense mode: batch=1 scratch cache
+
+
 class ContinuousBatcher:
     def __init__(self, params: Any, cfg: ModelConfig, *, num_slots: int = 4,
                  max_len: int = 256, paged: bool = False, page_size: int = 32,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None, chunk_tokens: int = 64):
         self.params, self.cfg = params, cfg
         self.paged = paged
+        self.chunk_tokens = chunk_tokens
         # page geometry needs a page-multiple length; the request done-check
         # keeps the CALLER's max_len so paged stays token-identical to dense
         # even when max_len % page_size != 0.
@@ -94,12 +134,11 @@ class ContinuousBatcher:
         self.lengths = np.zeros(num_slots, np.int32)
         self.slot_req: list[Request | None] = [None] * num_slots
         self.last_tok = np.zeros(num_slots, np.int32)
-        self._prefill = jax.jit(make_prefill_step(cfg, max_len=alloc_len))
         self._decode = jax.jit(make_decode_step(cfg))
-        # donate the big cache so admission is a true in-place slot write
+        # donate the big cache so admission/restore are true in-place writes
         # (no full-cache copy); CPU ignores donation, so only request it on
         # backends that implement it to avoid per-call warnings.
-        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        donate = jax.default_backend() in ("tpu", "gpu")
         if paged:
             self.page_size = page_size
             self.max_pages_per_slot = alloc_len // page_size
@@ -116,18 +155,27 @@ class ContinuousBatcher:
                 (num_slots, self.max_pages_per_slot), np.int32)
             self.slot_pages: list[list[int]] = [[] for _ in range(num_slots)]
             self._starved: list[int] = []    # slots paused on the last tick
-            self._place = jax.jit(make_place_pages(num_slots, page_size),
-                                  donate_argnums=donate)
+            self._has_slot_rows = has_slot_rows(self.cache)
+            self._chunk = jax.jit(make_chunk_prefill(cfg, num_slots),
+                                  donate_argnums=(1,) if donate else ())
+            self._zero = jax.jit(make_zero_slot(num_slots),
+                                 donate_argnums=(0,) if donate else ())
             self._restore = jax.jit(make_restore_slot(num_slots),
-                                    donate_argnums=donate)
+                                    donate_argnums=(0,) if donate else ())
         else:
             self.cache = init_cache(cfg, num_slots, max_len)
+            self._chunk = jax.jit(make_chunk_step(cfg),
+                                  donate_argnums=(1,) if donate else ())
             self._place = jax.jit(make_place_slot(num_slots),
-                                  donate_argnums=donate)
-        self.queue: list[Request] = []
+                                  donate_argnums=(0,) if donate else ())
+        self.queue: deque[Request] = deque()
+        self._adm: _Admission | None = None
+        self.admission_rollbacks = 0       # pool ran dry mid-prefill
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
         if self.paged:
             need = self.pool.pages_for(len(req.prompt))
             if need > self.pool.num_pages - 1:
@@ -138,52 +186,113 @@ class ContinuousBatcher:
         self.queue.append(req)
 
     def _free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+        adm_slot = self._adm.slot if self._adm is not None else -1
+        return [i for i, r in enumerate(self.slot_req)
+                if r is None and i != adm_slot]
 
-    def _admit(self) -> None:
+    def _start_admission(self) -> None:
+        if self._adm is not None or not self.queue:
+            return
         if self.paged and self._starved and self._active():
             # running slots are stalled on page allocation: freed pages must
             # grow them first, or admission (notably of a just-evicted
             # request) steals the page back and the pool thrashes
             return
-        for slot in self._free_slots():
-            if not self.queue:
-                return
-            req = self.queue[0]
-            pages: list[int] | None = None
-            if self.paged:
-                need = self.pool.pages_for(len(req.prompt))
-                pages = self.pool.alloc(need)
-                if pages is None:          # pool exhausted: wait for frees
+        free = self._free_slots()
+        if not free:
+            return
+        req = self.queue[0]
+        n = len(req.prompt)
+        chunk = pick_prefill_chunk(
+            n, page_size=self.page_size if self.paged else 0,
+            max_chunk=self.chunk_tokens)
+        slot = free[0]
+        adm = _Admission(req=req, slot=slot, plan=chunk_plan(n, chunk))
+        if self.paged:
+            if self.pool.available() < self.pool.pages_for(adm.plan[0]):
+                return                 # first chunk can't land; stay queued
+            self.page_table[slot, :] = 0
+            self.slot_pages[slot] = []
+            if self._has_slot_rows:
+                # the previous occupant's recurrent rows are live state for
+                # direct-to-slot prefill — zero them before chunk 1
+                self.cache = self._zero(self.cache,
+                                        jnp.asarray(slot, jnp.int32))
+        else:
+            # pow2-bucketed scratch length: O(log) chunk-step compiles
+            adm.cache1 = init_cache(self.cfg, 1, page_bucket(n, self.max_len))
+        self.queue.popleft()
+        self.slot_req[slot] = req
+        self.lengths[slot] = 0         # stays 0 until the last chunk lands
+        self._adm = adm
+
+    def _rollback_admission(self) -> None:
+        """Pool ran dry mid-prefill: free the partial pages, requeue the
+        request at the head (greedy recompute is deterministic) and release
+        the slot — decoders get the pages back immediately."""
+        adm = self._adm
+        self.pool.free(self.slot_pages[adm.slot])
+        self.slot_pages[adm.slot] = []
+        self.page_table[adm.slot, :] = 0
+        self.slot_req[adm.slot] = None
+        self.lengths[adm.slot] = 0
+        adm.req.output.clear()
+        self.queue.appendleft(adm.req)
+        self._adm = None
+        self.admission_rollbacks += 1
+
+    def _prefill_tick(self) -> None:
+        """Run at most ONE chunk of the in-flight admission."""
+        adm = self._adm
+        if adm is None:
+            return
+        if self.paged and self._starved and self._active():
+            return                     # freed pages belong to starved slots
+        w = adm.plan[0]
+        prompt = adm.req.prompt
+        chunk = jnp.asarray(prompt[None, adm.done:adm.done + w])
+        pos = jnp.asarray(adm.done, jnp.int32)
+        if self.paged:
+            # allocate exactly the pages this chunk's positions cover
+            lp0 = adm.done // self.page_size
+            lp1 = (adm.done + w - 1) // self.page_size
+            need = [lp for lp in range(lp0, lp1 + 1)
+                    if self.page_table[adm.slot, lp] == 0]
+            if need:
+                pages = self.pool.alloc(len(need))
+                if pages is None:
+                    self._rollback_admission()
                     return
-            self.queue.pop(0)
-            prompt = jnp.asarray(req.prompt[None, :])            # (1, len)
-            logits, cache1 = self._prefill(self.params, {"tokens": prompt})
-            if self.paged:
-                # scatter the prefix into exactly the pages this request
-                # owns: one jitted call, page-table row + slot traced
-                self.page_table[slot, :] = 0
-                self.page_table[slot, :len(pages)] = pages
-                self.slot_pages[slot] = pages
-                self.cache = self._place(
-                    self.cache, cache1,
-                    jnp.asarray(self.page_table[slot]),
-                    jnp.asarray(slot, jnp.int32))
-            else:
-                # write the single-row cache into this slot's row: one jitted
-                # call, slot as a traced scalar (prompt cache rows were
-                # already padded to max_len inside prefill)
-                self.cache = self._place(self.cache, cache1,
-                                         jnp.asarray(slot, jnp.int32))
-            tok = int(jnp.argmax(logits[0, -1]))
-            req.output.append(tok)
-            self.slot_req[slot] = req
-            self.lengths[slot] = len(req.prompt)
-            self.last_tok[slot] = tok
+                for lp, pg in zip(need, pages):
+                    self.page_table[adm.slot, lp] = pg
+                self.slot_pages[adm.slot].extend(pages)
+            width = page_bucket(-(-(adm.done + w) // self.page_size),
+                                self.max_pages_per_slot)
+            tok, self.cache = self._chunk(
+                self.params, self.cache, chunk,
+                jnp.asarray(self.page_table[adm.slot, :width]),
+                jnp.asarray(adm.slot, jnp.int32), pos)
+        else:
+            tok, adm.cache1 = self._chunk(self.params, adm.cache1, chunk, pos)
+        adm.plan.pop(0)
+        adm.done += w
+        if adm.plan:
+            return
+        # last chunk: the slot joins THIS tick's decode with its first token
+        if not self.paged:
+            self.cache = self._place(self.cache, adm.cache1,
+                                     jnp.asarray(adm.slot, jnp.int32))
+        t = int(tok)                   # 4-byte scalar; argmax ran in-graph
+        adm.req.output.append(t)
+        self.lengths[adm.slot] = len(prompt)
+        self.last_tok[adm.slot] = t
+        self._adm = None
 
     # -- decode tick ----------------------------------------------------------
     def _active(self) -> list[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is not None]
+        adm_slot = self._adm.slot if self._adm is not None else -1
+        return [i for i, r in enumerate(self.slot_req)
+                if r is not None and i != adm_slot]
 
     def _grow_pages(self, active: list[int]) -> list[int]:
         """Lazily allocate the page each active slot's next token lands in.
@@ -208,7 +317,7 @@ class ContinuousBatcher:
         deterministic, so re-admission recomputes the same tokens."""
         req = self.slot_req[slot]
         req.output.clear()
-        self.queue.insert(0, req)
+        self.queue.appendleft(req)
         self.slot_req[slot] = None
         self.pool.free(self.slot_pages[slot])
         self.slot_pages[slot] = []
@@ -216,21 +325,28 @@ class ContinuousBatcher:
         self.lengths[slot] = 0
 
     def step(self) -> None:
-        self._admit()
+        self._start_admission()
+        self._prefill_tick()
         active = self._active()
         if not active:
             return
         # single fused decode for all slots (inactive rows are don't-care);
         # per-slot cache lengths keep each request's positions independent
         paused: list[int] = []
+        adm = self._adm
         toks = jnp.asarray(self.last_tok[:, None])
         clen = jnp.asarray(self.lengths, jnp.int32)          # (B,)
         if self.paged:
             paused = self._grow_pages(active)
             self._starved = list(paused)
             if paused and len(paused) == len(active):
-                # every active slot stalled on allocation: no tick can ever
-                # free a page, so preempt one request to restore progress
+                # every decoding slot stalled on allocation: no tick can
+                # ever free a page, so reclaim some to restore progress —
+                # rolling back an in-flight admission is cheaper than
+                # evicting a decoded prefix
+                if adm is not None:
+                    self._rollback_admission()
+                    return
                 if len(active) == 1:
                     raise RuntimeError(
                         f"page pool ({self.pool.num_pages} pages, page_size="
@@ -241,13 +357,20 @@ class ContinuousBatcher:
             # paused slots' appends land in the garbage page and their
             # tokens are discarded, but per-slot recurrent state (mamba
             # conv/ssm rows) would still advance on the discarded token —
-            # keep the pre-tick cache to roll those rows back below.
-            prev = self.cache if paused else None
+            # keep the pre-tick cache to roll those rows back below.  The
+            # PREFILLING slot is treated the same way: its table row ships
+            # zeroed (append -> garbage page) and its rows roll back, so
+            # the decode stream cannot touch the half-built prefix.
+            roll_adm = adm is not None and self._has_slot_rows
+            prev = self.cache if (paused or roll_adm) else None
             live = max(-(-int(self.lengths[i] + 1) // self.page_size)
                        for i in active)
             bucket = page_bucket(live, self.max_pages_per_slot)
-            cache = {**self.cache,
-                     "page_table": jnp.asarray(self.page_table[:, :bucket])}
+            tbl = self.page_table[:, :bucket]
+            if adm is not None:
+                tbl = tbl.copy()
+                tbl[adm.slot] = 0
+            cache = {**self.cache, "page_table": jnp.asarray(tbl)}
             logits, cache = self._decode(self.params, cache,
                                          {"tokens": toks}, clen)
             cache.pop("page_table")
@@ -255,7 +378,13 @@ class ContinuousBatcher:
             for i in paused:
                 self.cache = self._restore(self.cache, prev,
                                            jnp.asarray(i, jnp.int32))
+            if roll_adm:
+                self.cache = self._restore(self.cache, prev,
+                                           jnp.asarray(adm.slot, jnp.int32))
         else:
+            # dense mode needs no admission shielding: chunks run in the
+            # scratch cache, and the slot's garbage decode rows are fully
+            # overwritten by the final place
             logits, self.cache = self._decode(self.params, self.cache,
                                               {"tokens": toks}, clen)
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
@@ -277,9 +406,11 @@ class ContinuousBatcher:
                     self.slot_pages[i] = []
                     self.page_table[i, :] = 0
                     self.lengths[i] = 0   # freed row attends 1 garbage token
+                else:
+                    self.lengths[i] = 0
 
     def run(self, max_ticks: int = 1000) -> None:
         for _ in range(max_ticks):
-            if not self.queue and not self._active():
+            if not self.queue and self._adm is None and not self._active():
                 return
             self.step()

@@ -14,9 +14,13 @@ reference).  Caches:
 Paged caches (serve/paging.py) replace the dense K/V rows with a shared page
 pool ("k_pages"/"v_pages": (L, P, KVH, page_size, hd)) plus a "page_table"
 leaf; ``forward`` detects the layout from the leaf names and routes cached
-decode through the Pallas decode-attention kernel, reading only the pages
-each slot owns.  ``scan_generate(page_size=N)`` runs the fused rollout on
-that path; the dense layout stays as the reference oracle.
+decode through the Pallas decode-attention kernel (s == 1) or chunked
+prefill through the paged prefill kernel (s > 1), reading/writing only the
+pages each slot owns.  ``scan_generate(page_size=N)`` prefills straight
+into the pool (chunked prologue) and runs the fused rollout on that path;
+the dense layout stays as the reference oracle.  ``make_chunk_step`` is
+the dense-mode chunked-admission step (batch=1 scratch sized to the
+prompt, argmax in-graph).
 """
 
 from __future__ import annotations
@@ -98,11 +102,32 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
     return decode_step
 
 
+def make_chunk_step(cfg: ModelConfig) -> Callable:
+    """(params, cache1, chunk, pos) -> (tok, cache1): one prompt chunk
+    through a batch=1 scratch cache at absolute offset ``pos``.
+
+    The dense-mode chunked admission step: the scratch cache is sized to
+    the (bucketed) prompt — never max_len — so prefill attention stops
+    reading max_len worth of mostly-masked keys, and recurrent rows (mamba
+    conv/ssm, rwkv state) thread across chunks through the cache.  ``tok``
+    is the argmax of the chunk's last position computed in-graph, so
+    admission fetches a 4-byte scalar instead of syncing full logits to
+    host.
+    """
+
+    def chunk_step(params, cache, chunk, pos):
+        logits, _, cache = forward(params, {"tokens": chunk}, cfg,
+                                   cache=cache, cache_len=pos)
+        return jnp.argmax(logits[0, -1]).astype(jnp.int32), cache
+
+    return chunk_step
+
+
 @partial(jax.jit, static_argnames=("cfg", "steps", "max_len", "has_eos",
-                                   "page_size"))
+                                   "page_size", "prefill_chunk"))
 def _scan_generate(params, prompt: jax.Array, eos_tok: jax.Array, *,
                    cfg: ModelConfig, steps: int, max_len: int, has_eos: bool,
-                   page_size: int = 0):
+                   page_size: int = 0, prefill_chunk: int = 0):
     """One-compile greedy rollout: prefill + a ``lax.scan`` over decode steps.
 
     Everything stays on device — argmax, eos masking, cache updates — so an
@@ -111,19 +136,35 @@ def _scan_generate(params, prompt: jax.Array, eos_tok: jax.Array, *,
     eos *value* is a traced scalar (only its presence is static), so
     per-request eos ids never retrace the rollout.
 
-    ``page_size`` > 0 repages the prefilled cache (identity page table,
-    serve.paging.dense_to_paged) so every decode step in the scan runs the
-    fused Pallas decode-attention kernel over the page pool instead of the
-    jnp SDPA path — the rollout-shaped proof that the paged decode step is
-    a drop-in for the dense one.
+    ``page_size`` > 0 allocates the page pool up front (identity page
+    table) and runs the *chunked direct-to-page prefill* as the rollout
+    prologue: each chunk's K/V are scattered straight into the pages and
+    attended through the Pallas paged prefill kernel, then every decode
+    step in the scan runs the fused Pallas decode-attention kernel over the
+    same pool — no dense max_len cache is ever materialized on the paged
+    path.  ``prefill_chunk`` bounds the prologue chunk width (0 = whole
+    prompt in one chunk).
     """
     b, s = prompt.shape
-    cache = init_cache(cfg, b, max_len)
-    logits, _, cache = forward(params, {"tokens": prompt}, cfg, cache=cache,
-                               cache_len=jnp.zeros((), jnp.int32))
     if page_size:
-        from repro.serve.paging import dense_to_paged
-        cache = dense_to_paged(cache, page_size)
+        from repro.kernels.ops import chunk_plan
+        from repro.serve.paging import init_paged_cache
+        npg = max_len // page_size
+        cache = init_paged_cache(cfg, b, max_len, page_size=page_size,
+                                 num_pages=1 + b * npg)
+        cache["page_table"] = (1 + jnp.arange(b * npg, dtype=jnp.int32)
+                               ).reshape(b, npg)
+        off = 0
+        for w in chunk_plan(s, prefill_chunk or s):
+            logits, _, cache = forward(params, {"tokens": prompt[:, off:off + w]},
+                                       cfg, cache=cache,
+                                       cache_len=jnp.asarray(off, jnp.int32))
+            off += w
+    else:
+        cache = init_cache(cfg, b, max_len)
+        logits, _, cache = forward(params, {"tokens": prompt}, cfg,
+                                   cache=cache,
+                                   cache_len=jnp.zeros((), jnp.int32))
     tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(prompt.dtype)
     done0 = (tok0 == eos_tok.astype(tok0.dtype) if has_eos
              else jnp.zeros((b,), bool))
@@ -147,10 +188,11 @@ def _scan_generate(params, prompt: jax.Array, eos_tok: jax.Array, *,
 
 def scan_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
                   max_len: int | None = None, eos_id: int | None = None,
-                  page_size: int = 0):
+                  page_size: int = 0, prefill_chunk: int = 0):
     """Fused greedy decoding: compiles once per (shape, steps), returns the
     (B, steps) token matrix with no per-token host sync.  ``page_size`` > 0
-    routes every decode step through the paged KV pool + Pallas
+    prefills straight into the paged KV pool (chunked by ``prefill_chunk``;
+    0 = one chunk) and routes every decode step through the Pallas
     decode-attention kernel (see serve/paging.py)."""
     _, s = prompt.shape
     eos_tok = jnp.asarray(0 if eos_id is None else eos_id, jnp.int32)
@@ -159,7 +201,7 @@ def scan_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
         max_len = -(-max_len // page_size) * page_size
     return _scan_generate(params, prompt, eos_tok, cfg=cfg, steps=steps,
                           max_len=max_len, has_eos=eos_id is not None,
-                          page_size=page_size)
+                          page_size=page_size, prefill_chunk=prefill_chunk)
 
 
 def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,

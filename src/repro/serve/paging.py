@@ -15,12 +15,19 @@ K/V per slot.  This module decouples both:
   pages), shipped to device per decode tick sliced to the live-prefix
   bucket, so the decode-attention grid covers only pages in actual use.
 * **append** — in-kernel: the attention layer scatters the new token's K/V
-  into ``pool[pt[b, pos // ps], :, pos % ps]`` (see models/attention.py).
-* **admit** — ``make_place_pages`` returns ONE jitted call that scatters a
-  freshly prefilled batch=1 dense cache into exactly the pages the request
-  owns (unallocated logical pages alias the garbage page) and row-writes
-  the non-paged per-slot leaves (mamba conv/ssm states).  The slot index
-  and page-table row are traced, so one compile serves every slot.
+  into ``pool[pt[b, pos // ps], :, pos % ps]`` (decode) or the whole
+  chunk's K/V into the pages its positions cover (chunked prefill); see
+  models/attention.py.
+* **admit** — ``make_chunk_prefill`` returns ONE jitted call that runs one
+  prompt chunk *directly against the pool* through the slot's page-table
+  row: the chunk's K/V are scattered straight into the slot's pages and
+  attention reads the already-written prefix back through the same table
+  (kernels/prefill_attention.py).  No dense batch=1 scratch cache is ever
+  allocated and nothing is copied at admission time.  Per-slot O(1) leaves
+  (mamba conv/ssm rows) are viewed as a batch=1 slice and written back, so
+  recurrent state threads across chunks.  The slot index, page-table row
+  and chunk offset are traced, so compiles are bounded by the O(log) set
+  of (chunk width, table bucket) shapes.
 
 ``dense_to_paged`` converts a dense cache to the paged layout with an
 identity page table (slot i owns pages 1 + i*npg .. 1 + (i+1)*npg - 1) —
@@ -173,37 +180,74 @@ def _slot_row(big: jax.Array, slot: jax.Array, num_slots: int) -> jax.Array:
     return jax.lax.dynamic_slice_in_dim(big, slot, 1, axis=ax)
 
 
-def make_place_pages(num_slots: int, page_size: int):
-    """(cache, cache1, pt_row, slot) -> cache with the prefilled request
-    admitted.
+def has_slot_rows(cache: Any) -> bool:
+    """True when the paged cache carries per-slot (non-pool) leaves — the
+    recurrent rows chunked prefill must view/restore per slot."""
+    return any(not _num_pages_axis(k) for k in flatten_dict(cache))
+
+
+def make_chunk_prefill(cfg, num_slots: int):
+    """(params, cache, chunk, pt_row, slot, pos) -> (tok, cache): one prompt
+    chunk prefilled DIRECTLY into the slot's pages.
 
     ``cache`` is the paged pool cache (WITHOUT the page_table leaf — the
-    batcher owns that on host); ``cache1`` the dense batch=1 prefill cache;
-    ``pt_row`` the slot's (max_pages_per_slot,) page-table row with
-    unallocated entries = 0.  Paged leaves scatter page-granular (entries 0
-    dump into the garbage page); everything else is a slot row write.  Both
-    ``pt_row`` and ``slot`` are traced -> one compile admits any request
-    into any slot; jit with the cache donated for an in-place pool write.
+    batcher owns that on host); ``chunk`` the (1, C) token slice at absolute
+    offset ``pos``; ``pt_row`` the slot's page-table row sliced to the live
+    bucket, with every page the chunk's positions cover already allocated.
+    Pool leaves are shared (the in-graph scatter + Pallas prefill kernel
+    read/write them through ``pt_row``); per-slot leaves (mamba conv/ssm
+    rows) are sliced to a batch=1 view so recurrent state threads across
+    chunks, and written back at ``slot``.  ``tok`` is the argmax of the
+    chunk's last position, computed in-graph — admission never ships logits
+    to host, and only the final chunk's 4-byte token is fetched.  ``slot``
+    and ``pos`` are traced; jit with the cache donated for in-place pool
+    writes.
+    """
+    from repro.models.transformer import forward
+
+    def chunk_prefill(params: Any, cache: Any, chunk: jax.Array,
+                      pt_row: jax.Array, slot: jax.Array,
+                      pos: jax.Array) -> tuple[jax.Array, Any]:
+        flat = flatten_dict(cache)
+        view = {k: (v if _num_pages_axis(k) else _slot_row(v, slot, num_slots))
+                for k, v in flat.items()}
+        view = unflatten_dict(view)
+        view["page_table"] = pt_row[None, :]
+        logits, _, vnew = forward(params, {"tokens": chunk}, cfg,
+                                  cache=view, cache_len=pos)
+        vnew.pop("page_table")
+        flatn = flatten_dict(vnew)
+        out = {k: (flatn[k] if _num_pages_axis(k)
+                   else _place_row(v, flatn[k], slot, num_slots))
+               for k, v in flat.items()}
+        tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        return tok, unflatten_dict(out)
+
+    return chunk_prefill
+
+
+def make_zero_slot(num_slots: int):
+    """(cache, slot) -> cache with ``slot``'s per-slot rows zeroed.
+
+    Chunked prefill writes straight into the slot's rows, so a freshly
+    admitted request must not see the previous occupant's recurrent state
+    (mamba conv/ssm rows); pool leaves are untouched — stale page contents
+    are dead the moment the table row is re-pointed.
     """
 
-    def place_pages(cache: Any, cache1: Any, pt_row: jax.Array,
-                    slot: jax.Array) -> Any:
-        flat, flat1 = flatten_dict(cache), flatten_dict(cache1)
+    def zero_slot(cache: Any, slot: jax.Array) -> Any:
+        flat = flatten_dict(cache)
         out: dict[str, jax.Array] = {}
         for key, leaf in flat.items():
             if _num_pages_axis(key):
-                src = flat1[key.rsplit("/", 1)[0] + "/"
-                            + key.rsplit("/", 1)[-1][0]]   # k_pages -> k
-                lx, _, kvh, s, hd = src.shape              # (Lx,1,Hkv,S,hd)
-                npg = s // page_size
-                pages = src[:, 0].reshape(lx, kvh, npg, page_size, hd)
-                pages = jnp.moveaxis(pages, 2, 1)          # (Lx,npg,Hkv,ps,hd)
-                out[key] = leaf.at[:, pt_row].set(pages.astype(leaf.dtype))
+                out[key] = leaf
             else:
-                out[key] = _place_row(leaf, flat1[key], slot, num_slots)
+                row = _slot_row(leaf, slot, num_slots)
+                out[key] = _place_row(leaf, jnp.zeros_like(row), slot,
+                                      num_slots)
         return unflatten_dict(out)
 
-    return place_pages
+    return zero_slot
 
 
 def dense_to_paged(cache: dict[str, Any], page_size: int) -> dict[str, Any]:
