@@ -35,7 +35,23 @@ def main():
     ap.add_argument("--chunk-tokens", type=int, default=64,
                     help="prefill token budget per tick (bounds per-tick "
                          "latency during admissions)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: slots share a fixed page pool "
+                         "(capacity = pool pages, not slots x max_len)")
+    ap.add_argument("--page-size", type=int, default=32,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool pages incl. the garbage page (default: "
+                         "lossless, every slot can reach max_len)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="copy-on-write prefix caching (implies --paged): "
+                         "prompts sharing full token pages with cached "
+                         "sequences reuse them via refcounted page-table "
+                         "indirection and prefill only the uncached suffix; "
+                         "a shared page is forked before any write")
     args = ap.parse_args()
+    if args.prefix_cache:
+        args.paged = True
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -59,14 +75,24 @@ def main():
 
     batcher = ContinuousBatcher(params, cfg, num_slots=args.slots,
                                 max_len=args.max_len,
-                                chunk_tokens=args.chunk_tokens)
+                                chunk_tokens=args.chunk_tokens,
+                                paged=args.paged, page_size=args.page_size,
+                                num_pages=args.num_pages,
+                                prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(7)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        size=int(rng.integers(3, 12)),
-                                        ).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
+    # shared few-shot preamble on half the requests so --prefix-cache has
+    # real hits to report (production traffic is dominated by shared
+    # system prompts)
+    preamble = rng.integers(0, cfg.vocab_size,
+                            size=min(2 * args.page_size, args.max_len // 2)
+                            ).astype(np.int32)
+    prompts = []
+    for i in range(args.requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(3, 12))).astype(np.int32)
+        prompts.append(np.concatenate([preamble, tail]) if i % 2 else tail)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=args.max_new)
+            for i, p in enumerate(prompts)]
     t0 = time.time()
     for r in reqs:
         batcher.submit(r)
@@ -75,6 +101,12 @@ def main():
     toks = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests / {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s)")
+    if batcher.prefix is not None:
+        pfx = batcher.prefix
+        print(f"prefix cache: {pfx.hits} hits / {pfx.misses} misses, "
+              f"{pfx.hit_tokens} prompt tokens served from cache, "
+              f"{batcher.cow_forks} CoW forks, "
+              f"{len(pfx)} pages registered")
     for r in reqs[:4]:
         print(f"  req {r.rid}: {list(r.prompt)} -> {r.output}")
 

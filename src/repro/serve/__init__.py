@@ -10,15 +10,18 @@ from repro.serve.engine import (
 )
 from repro.serve.paging import (
     PagePool,
+    PrefixIndex,
     dense_to_paged,
     init_paged_cache,
     make_chunk_prefill,
+    make_fork_page,
     make_zero_slot,
     page_bucket,
 )
 
 __all__ = [
     "PagePool",
+    "PrefixIndex",
     "cache_shapes",
     "dense_to_paged",
     "greedy_generate",
@@ -28,6 +31,7 @@ __all__ = [
     "make_chunk_prefill",
     "make_chunk_step",
     "make_decode_step",
+    "make_fork_page",
     "make_prefill_step",
     "make_zero_slot",
     "page_bucket",

@@ -50,6 +50,28 @@ Paged mode (``paged=True``, see serve/paging.py):
   preempt-and-requeue eviction to break all-slots-paused livelock — an
   in-flight admission is rolled back first, since freeing its pages is
   cheaper than evicting a decoded prefix.
+
+Prefix caching (``prefix_cache=True``, paged mode only): admission matches
+the longest cached hash-chain of the prompt's full pages in the
+``PrefixIndex``, points the slot's table row at the shared physical pages
+(``PagePool.share`` bumps refcounts) and chunk-prefills ONLY the uncached
+suffix — a warm request costs ``pages_for(suffix)`` fresh pages and the
+suffix's compute.  At least one token is always recomputed (the final
+chunk's in-graph argmax is the first output token), so a page-aligned full
+match shares every page and recomputes just the last position — the one
+write that lands in a shared page, forked first by the copy-on-write rule:
+NO write (chunk scatter or decode append) ever touches a page with
+refcount > 1 or registered content; ``_cow_fork`` copies it to a fresh
+page (one jitted gather/scatter across the layer axis) and repoints the
+table row on host.  Full pages register into the index as prefill covers
+them and when a finished/evicted slot releases (generated tokens become
+matchable for conversation-continuation prompts); released registered
+pages park on the pool's refcount-0 LRU and are reclaimed lazily under
+allocation pressure.  Families with per-slot recurrent rows (hybrid
+shared-attn) snapshot those rows at page boundaries into the index — the
+state is not page-addressable, so their matches stop at the deepest
+boundary with a snapshot; rwkv has no pageable KV and cannot run paged at
+all.
 """
 
 from __future__ import annotations
@@ -67,11 +89,15 @@ from repro.models.config import ModelConfig
 from repro.serve.engine import init_cache, make_chunk_step, make_decode_step
 from repro.serve.paging import (
     PagePool,
+    PrefixIndex,
     _place_row,
     has_slot_rows,
     init_paged_cache,
     make_chunk_prefill,
+    make_fork_page,
+    make_get_slot_rows,
     make_restore_slot,
+    make_set_slot_rows,
     make_zero_slot,
     page_bucket,
 )
@@ -107,6 +133,10 @@ class Request:
     # filled by the engine
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # prefix-cache stats are per REQUEST, not per admission attempt: a
+    # rollback/evict re-admission re-matches the same pages but must not
+    # re-count the hit (hit rates could exceed 1.0 under churn)
+    prefix_counted: bool = dataclasses.field(default=False, repr=False)
 
 
 @dataclasses.dataclass
@@ -117,15 +147,22 @@ class _Admission:
     plan: list[int]                    # remaining chunk widths
     done: int = 0                      # prompt tokens prefilled so far
     cache1: Any = None                 # dense mode: batch=1 scratch cache
+    hashes: list = None                # prefix cache: prompt's page chain
+    registered: int = 0                # pages already in the prefix index
 
 
 class ContinuousBatcher:
     def __init__(self, params: Any, cfg: ModelConfig, *, num_slots: int = 4,
                  max_len: int = 256, paged: bool = False, page_size: int = 32,
-                 num_pages: int | None = None, chunk_tokens: int = 64):
+                 num_pages: int | None = None, chunk_tokens: int = 64,
+                 prefix_cache: bool = False):
         self.params, self.cfg = params, cfg
         self.paged = paged
         self.chunk_tokens = chunk_tokens
+        self.prefix: PrefixIndex | None = None
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache requires paged=True (sharing is "
+                             "page-table indirection over the page pool)")
         # page geometry needs a page-multiple length; the request done-check
         # keeps the CALLER's max_len so paged stays token-identical to dense
         # even when max_len % page_size != 0.
@@ -162,6 +199,15 @@ class ContinuousBatcher:
                                  donate_argnums=(0,) if donate else ())
             self._restore = jax.jit(make_restore_slot(num_slots),
                                     donate_argnums=(0,) if donate else ())
+            if prefix_cache:
+                self.prefix = PrefixIndex(self.pool)
+                self._fork = jax.jit(make_fork_page(),
+                                     donate_argnums=(0,) if donate else ())
+                if self._has_slot_rows:
+                    self._get_rows = jax.jit(make_get_slot_rows(num_slots))
+                    self._set_rows = jax.jit(
+                        make_set_slot_rows(num_slots),
+                        donate_argnums=(0,) if donate else ())
         else:
             self.cache = init_cache(cfg, num_slots, max_len)
             self._chunk = jax.jit(make_chunk_step(cfg),
@@ -171,18 +217,31 @@ class ContinuousBatcher:
         self.queue: deque[Request] = deque()
         self._adm: _Admission | None = None
         self.admission_rollbacks = 0       # pool ran dry mid-prefill
+        self.cow_forks = 0                 # shared pages copied before a write
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
-        if len(req.prompt) == 0:
+        n = len(req.prompt)
+        if n == 0:
             raise ValueError(f"request {req.rid}: empty prompt")
+        if n + 1 > self.max_len:
+            # dense mode would silently clamp the decode append into the last
+            # cache row; paged mode would index past the page-table width
+            # mid-admission — reject up front in both modes
+            raise ValueError(
+                f"request {req.rid}: prompt of {n} tokens + 1 generated "
+                f"token exceeds max_len {self.max_len}")
         if self.paged:
-            need = self.pool.pages_for(len(req.prompt))
+            # +1: the first decode append needs a page slot too — a
+            # page-aligned prompt that exactly fills the pool can prefill
+            # but never take its first decode step
+            need = self.pool.pages_for(n + 1)
             if need > self.pool.num_pages - 1:
                 # reject up front: queued it would stall admission forever
                 raise ValueError(
-                    f"request {req.rid}: prompt needs {need} pages but the "
-                    f"pool has {self.pool.num_pages - 1} allocatable")
+                    f"request {req.rid}: prompt + first decode append need "
+                    f"{need} pages but the pool has "
+                    f"{self.pool.num_pages - 1} allocatable")
         self.queue.append(req)
 
     def _free_slots(self) -> list[int]:
@@ -203,11 +262,29 @@ class ContinuousBatcher:
             return
         req = self.queue[0]
         n = len(req.prompt)
+        matched, mpages, mstate = 0, [], None
+        if self.prefix is not None:
+            if self._has_slot_rows:
+                # recurrent rows must be restorable at the match boundary:
+                # match only boundaries with a state snapshot, and never the
+                # whole prompt (>= 1 token is always recomputed)
+                mpages, mstate = self.prefix.match(
+                    req.prompt, max_pages=(n - 1) // self.page_size,
+                    need_state=True)
+                matched = len(mpages) * self.page_size
+            else:
+                mpages, _ = self.prefix.match(
+                    req.prompt, max_pages=n // self.page_size)
+                # a page-aligned full match still recomputes the final token
+                # (its argmax is the first output) — the lone write into a
+                # shared page, handled by the copy-on-write fork
+                matched = min(len(mpages) * self.page_size, n - 1)
         chunk = pick_prefill_chunk(
-            n, page_size=self.page_size if self.paged else 0,
+            n - matched, page_size=self.page_size if self.paged else 0,
             max_chunk=self.chunk_tokens)
         slot = free[0]
-        adm = _Admission(req=req, slot=slot, plan=chunk_plan(n, chunk))
+        adm = _Admission(req=req, slot=slot,
+                         plan=chunk_plan(n - matched, chunk), done=matched)
         if self.paged:
             if self.pool.available() < self.pool.pages_for(adm.plan[0]):
                 return                 # first chunk can't land; stay queued
@@ -218,6 +295,25 @@ class ContinuousBatcher:
                 # direct-to-slot prefill — zero them before chunk 1
                 self.cache = self._zero(self.cache,
                                         jnp.asarray(slot, jnp.int32))
+            if self.prefix is not None:
+                if mpages:
+                    # point the slot's row at the cached prefix: refcounts
+                    # up, zero new pages, only the suffix gets prefilled
+                    self.pool.share(mpages)
+                    self.slot_pages[slot] = list(mpages)
+                    self.page_table[slot, :len(mpages)] = mpages
+                    if mstate is not None:
+                        self.cache = self._set_rows(
+                            self.cache, mstate, jnp.asarray(slot, jnp.int32))
+                    if not req.prefix_counted:
+                        self.prefix.hits += 1
+                        self.prefix.hit_tokens += matched
+                elif not req.prefix_counted:
+                    self.prefix.misses += 1
+                req.prefix_counted = True
+                adm.hashes = PrefixIndex.chain_hashes(req.prompt,
+                                                      self.page_size)
+                adm.registered = len(mpages)
         else:
             # pow2-bucketed scratch length: O(log) chunk-step compiles
             adm.cache1 = init_cache(self.cfg, 1, page_bucket(n, self.max_len))
@@ -227,11 +323,13 @@ class ContinuousBatcher:
         self._adm = adm
 
     def _rollback_admission(self) -> None:
-        """Pool ran dry mid-prefill: free the partial pages, requeue the
+        """Pool ran dry mid-prefill: release the partial pages, requeue the
         request at the head (greedy recompute is deterministic) and release
-        the slot — decoders get the pages back immediately."""
+        the slot — decoders get the pages back immediately.  Pages already
+        registered in the prefix index stay cached (refcount 0 on the LRU),
+        so the requeued request's re-admission skips the work it finished."""
         adm = self._adm
-        self.pool.free(self.slot_pages[adm.slot])
+        self.pool.release(self.slot_pages[adm.slot])
         self.slot_pages[adm.slot] = []
         self.page_table[adm.slot, :] = 0
         self.slot_req[adm.slot] = None
@@ -240,6 +338,67 @@ class ContinuousBatcher:
         self.queue.appendleft(adm.req)
         self._adm = None
         self.admission_rollbacks += 1
+
+    # -- prefix cache ---------------------------------------------------------
+    def _cow_fork(self, slot: int, lp: int) -> bool:
+        """Copy-on-write: if writing the slot's logical page ``lp`` would
+        mutate a shared (refcount > 1) or prefix-cached physical page, fork
+        it — acquire a fresh page, copy src -> dst across the layer axis in
+        one jitted call, repoint the table row, drop the shared ref.  True
+        when the page is now safely writable; False when the pool could not
+        supply the fork page."""
+        src = int(self.page_table[slot, lp])
+        if src == 0 or not (self.pool.refcount(src) > 1
+                            or self.pool.is_registered(src)):
+            return True
+        dst = self.pool.acquire(1)
+        if dst is None:
+            return False
+        self.cache = self._fork(self.cache, jnp.asarray(src, jnp.int32),
+                                jnp.asarray(dst[0], jnp.int32))
+        self.page_table[slot, lp] = dst[0]
+        owned = self.slot_pages[slot]
+        owned[owned.index(src)] = dst[0]
+        self.pool.release([src])
+        self.cow_forks += 1
+        return True
+
+    def _register_prefilled(self, adm: _Admission, done: int) -> None:
+        """Register every prompt page fully covered by the first ``done``
+        prefilled tokens.  Recurrent-row families attach a host snapshot of
+        the slot's rows when ``done`` lands exactly on a page boundary (the
+        state a future match at that boundary must restore)."""
+        full = done // self.page_size
+        if full <= adm.registered:
+            return
+        state = None
+        if self._has_slot_rows and done % self.page_size == 0:
+            state = jax.device_get(self._get_rows(
+                self.cache, jnp.asarray(adm.slot, jnp.int32)))
+        for j in range(adm.registered, full):
+            st = state if (j + 1) * self.page_size == done else None
+            self.prefix.register(adm.hashes[j],
+                                 int(self.page_table[adm.slot, j]), st)
+        adm.registered = full
+
+    def _register_finished(self, slot: int, req: Request) -> None:
+        """A slot is releasing its pages (finished or evicted): register the
+        full pages of everything in its cache — prompt AND generated tokens,
+        so a conversation-continuation prompt that extends this response can
+        share them.  Content is immutable from here (registered pages are
+        never written; release parks them on the pool's refcount-0 LRU)."""
+        if self.prefix is None:
+            return
+        n_cache = int(self.lengths[slot])
+        fed = n_cache - len(req.prompt)    # output tokens already appended
+        if fed < 0:
+            return                         # mid-admission eviction
+        seq = np.concatenate([req.prompt,
+                              np.asarray(req.output[:fed], np.int32)])
+        for j, h in enumerate(PrefixIndex.chain_hashes(seq, self.page_size)):
+            pg = int(self.page_table[slot, j])
+            if pg:
+                self.prefix.register(h, pg)
 
     def _prefill_tick(self) -> None:
         """Run at most ONE chunk of the in-flight admission."""
@@ -259,19 +418,29 @@ class ContinuousBatcher:
             need = [lp for lp in range(lp0, lp1 + 1)
                     if self.page_table[adm.slot, lp] == 0]
             if need:
-                pages = self.pool.alloc(len(need))
+                pages = self.pool.acquire(len(need))
                 if pages is None:
                     self._rollback_admission()
                     return
                 for lp, pg in zip(need, pages):
                     self.page_table[adm.slot, lp] = pg
                 self.slot_pages[adm.slot].extend(pages)
+            if self.prefix is not None:
+                # copy-on-write: the chunk's scatter may cover a page shared
+                # from the prefix index (the recompute-last-token case) —
+                # fork it so a refcount>1 / cached page is never written
+                for lp in range(lp0, lp1 + 1):
+                    if not self._cow_fork(adm.slot, lp):
+                        self._rollback_admission()
+                        return
             width = page_bucket(-(-(adm.done + w) // self.page_size),
                                 self.max_pages_per_slot)
             tok, self.cache = self._chunk(
                 self.params, self.cache, chunk,
                 jnp.asarray(self.page_table[adm.slot, :width]),
                 jnp.asarray(adm.slot, jnp.int32), pos)
+            if self.prefix is not None:
+                self._register_prefilled(adm, adm.done + w)
         else:
             tok, adm.cache1 = self._chunk(self.params, adm.cache1, chunk, pos)
         adm.plan.pop(0)
@@ -294,32 +463,44 @@ class ContinuousBatcher:
         return [i for i, r in enumerate(self.slot_req)
                 if r is not None and i != adm_slot]
 
-    def _grow_pages(self, active: list[int]) -> list[int]:
+    def _grow_pages(self, active: list[int]
+                    ) -> tuple[list[int], list[tuple[int, int]]]:
         """Lazily allocate the page each active slot's next token lands in.
         Returns the slots that must pause this tick (pool empty): their
         append hits the garbage page and their token is discarded — greedy
-        decode recomputes the identical token once a page frees."""
-        paused = []
+        decode recomputes the identical token once a page frees.  A slot
+        whose append page is shared must fork it first (copy-on-write); if
+        the fork page cannot be acquired the slot pauses too, and its table
+        entry is shielded (shipped zeroed) so the decode append cannot
+        touch the shared page."""
+        paused: list[int] = []
+        shield: list[tuple[int, int]] = []
         for i in active:
             lp = self.lengths[i] // self.page_size
             if self.page_table[i, lp] == 0:
-                pg = self.pool.alloc(1)
+                pg = self.pool.acquire(1)
                 if pg is None:
                     paused.append(i)
                     continue
                 self.page_table[i, lp] = pg[0]
                 self.slot_pages[i].append(pg[0])
-        return paused
+            elif self.prefix is not None and not self._cow_fork(i, lp):
+                paused.append(i)
+                shield.append((i, lp))
+        return paused, shield
 
     def _evict(self, slot: int) -> None:
         """Preempt-and-requeue: release the slot's pages and put its request
         back at the head of the queue with output cleared — greedy decode is
-        deterministic, so re-admission recomputes the same tokens."""
+        deterministic, so re-admission recomputes the same tokens (and, with
+        the prefix cache on, mostly re-matches them: the evicted slot's full
+        pages register before release and park on the reclaimable LRU)."""
         req = self.slot_req[slot]
+        self._register_finished(slot, req)
         req.output.clear()
         self.queue.appendleft(req)
         self.slot_req[slot] = None
-        self.pool.free(self.slot_pages[slot])
+        self.pool.release(self.slot_pages[slot])
         self.slot_pages[slot] = []
         self.page_table[slot, :] = 0
         self.lengths[slot] = 0
@@ -337,7 +518,7 @@ class ContinuousBatcher:
         toks = jnp.asarray(self.last_tok[:, None])
         clen = jnp.asarray(self.lengths, jnp.int32)          # (B,)
         if self.paged:
-            paused = self._grow_pages(active)
+            paused, shield = self._grow_pages(active)
             self._starved = list(paused)
             if paused and len(paused) == len(active):
                 # every decoding slot stalled on allocation: no tick can
@@ -367,9 +548,17 @@ class ContinuousBatcher:
                        for i in active)
             bucket = page_bucket(live, self.max_pages_per_slot)
             tbl = self.page_table[:, :bucket]
-            if adm is not None:
+            if adm is not None or shield:
                 tbl = tbl.copy()
-                tbl[adm.slot] = 0
+                if adm is not None:
+                    tbl[adm.slot] = 0
+                for i, lp in shield:
+                    # fork-starved slot: its append must not reach the
+                    # shared page — route it to the garbage page instead
+                    # (the entry is at a fresh page boundary, so no live
+                    # position is hidden from attention)
+                    if lp < bucket:
+                        tbl[i, lp] = 0
             cache = {**self.cache, "page_table": jnp.asarray(tbl)}
             logits, cache = self._decode(self.params, cache,
                                          {"tokens": toks}, clen)
@@ -402,7 +591,10 @@ class ContinuousBatcher:
                 req.done = True
                 self.slot_req[i] = None      # slot freed; admitted next tick
                 if self.paged:
-                    self.pool.free(self.slot_pages[i])
+                    # full pages register (generated tokens become matchable
+                    # for continuation prompts) before the refs drop
+                    self._register_finished(i, req)
+                    self.pool.release(self.slot_pages[i])
                     self.slot_pages[i] = []
                     self.page_table[i, :] = 0
                     self.lengths[i] = 0   # freed row attends 1 garbage token

@@ -197,6 +197,13 @@ def scan_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
     _, s = prompt.shape
     eos_tok = jnp.asarray(0 if eos_id is None else eos_id, jnp.int32)
     max_len = max_len or (s + steps)
+    if max_len < s + steps:
+        # the rollout appends past the cache/pool end otherwise: JAX clamps
+        # the dynamic-slice start, so late tokens silently overwrite the
+        # last row/page and greedy outputs diverge from the loop oracle
+        raise ValueError(
+            f"max_len={max_len} cannot hold prompt ({s}) + steps ({steps}) "
+            f"tokens; raise max_len or lower steps")
     if page_size:
         max_len = -(-max_len // page_size) * page_size
     return _scan_generate(params, prompt, eos_tok, cfg=cfg, steps=steps,

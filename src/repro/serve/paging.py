@@ -1,8 +1,8 @@
-"""Paged KV cache: fixed-size pages in a shared pool + per-slot page tables.
+"""Paged KV cache: refcounted pages in a shared pool + copy-on-write tables.
 
 The dense continuous-batching cache allocates (B, max_len) KV rows, so slot
 admission is coupled to max_len and every decode step reads max_len worth of
-K/V per slot.  This module decouples both:
+K/V per slot.  This module decouples both, and lets slots SHARE pages:
 
 * **pool** — K/V live in ``k_pages``/``v_pages`` leaves shaped
   (L, P, Hkv, page_size, hd): P fixed-size pages shared by all slots, with
@@ -10,10 +10,35 @@ K/V per slot.  This module decouples both:
   **Physical page 0 is reserved as the garbage page**: page-table entries
   default to 0, so appends routed through an unallocated entry land in
   garbage (harmless — never attended to) instead of corrupting a live slot.
+* **refcounts** — ``PagePool`` is a *refcounted* allocator: ``acquire``
+  hands out pages at refcount 1, ``share`` bumps the count when a second
+  slot points its table row at the same physical page, ``release``
+  decrements, and a page is reclaimable only at refcount 0.  A page whose
+  content is registered in the prefix index (below) is parked on an LRU
+  when its refcount drops to 0 instead of returning to the free list; under
+  allocation pressure ``acquire`` reclaims the least-recently-used cached
+  page (unregistering it) — so cached prefixes cost nothing until the pool
+  actually needs the memory.
+* **prefix index** — ``PrefixIndex`` maps the hash-chain of full token
+  pages (block hash = H(parent_hash, page_tokens), vLLM-style) to physical
+  pages.  Admission matches the longest cached chain of the new prompt,
+  points the slot's table row at the shared pages, bumps refcounts, and
+  chunk-prefills only the uncached suffix.  Families with per-slot
+  recurrent rows (mamba conv/ssm) additionally key a host-side snapshot of
+  those rows at each page boundary, since recurrent state is not
+  page-addressable; pure-recurrent families (rwkv) have no pageable KV and
+  opt out entirely.
+* **copy-on-write** — a page with refcount > 1 (or registered content) is
+  NEVER written: any write that would touch one first *forks* it —
+  ``make_fork_page`` gathers ``pool[src]`` and scatters it to
+  ``pool[dst]`` across the layer axis in one jitted call, then the batcher
+  repoints the table row on host.  All sharing is page-table indirection,
+  so the Pallas decode/prefill kernels and the garbage-page shielding need
+  zero changes.
 * **page table** — (B, max_pages_per_slot) int32, slot's logical page j ->
-  physical page.  Host-owned by the batcher (``PagePool`` below hands out
-  pages), shipped to device per decode tick sliced to the live-prefix
-  bucket, so the decode-attention grid covers only pages in actual use.
+  physical page.  Host-owned by the batcher, shipped to device per decode
+  tick sliced to the live-prefix bucket, so the decode-attention grid
+  covers only pages in actual use.
 * **append** — in-kernel: the attention layer scatters the new token's K/V
   into ``pool[pt[b, pos // ps], :, pos % ps]`` (decode) or the whole
   chunk's K/V into the pages its positions cover (chunked prefill); see
@@ -22,12 +47,10 @@ K/V per slot.  This module decouples both:
   prompt chunk *directly against the pool* through the slot's page-table
   row: the chunk's K/V are scattered straight into the slot's pages and
   attention reads the already-written prefix back through the same table
-  (kernels/prefill_attention.py).  No dense batch=1 scratch cache is ever
-  allocated and nothing is copied at admission time.  Per-slot O(1) leaves
-  (mamba conv/ssm rows) are viewed as a batch=1 slice and written back, so
-  recurrent state threads across chunks.  The slot index, page-table row
-  and chunk offset are traced, so compiles are bounded by the O(log) set
-  of (chunk width, table bucket) shapes.
+  (kernels/prefill_attention.py) — including pages shared from the prefix
+  index, which are read but never written.  Per-slot O(1) leaves (mamba
+  conv/ssm rows) are viewed as a batch=1 slice and written back, so
+  recurrent state threads across chunks.
 
 ``dense_to_paged`` converts a dense cache to the paged layout with an
 identity page table (slot i owns pages 1 + i*npg .. 1 + (i+1)*npg - 1) —
@@ -37,10 +60,13 @@ fused rollout on the paged decode-attention kernel.
 
 from __future__ import annotations
 
-from typing import Any
+import hashlib
+from collections import OrderedDict
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.serve.engine import init_cache
@@ -54,11 +80,17 @@ def _num_pages_axis(key: str) -> bool:
 
 
 class PagePool:
-    """Host-side free-list allocator over the shared page pool.
+    """Host-side refcounted allocator over the shared page pool.
 
-    Page 0 is the reserved garbage page and is never handed out.  ``alloc``
-    is all-or-nothing (returns None if n pages are not available) so the
-    scheduler can keep a request queued instead of half-admitting it.
+    Page 0 is the reserved garbage page and is never handed out.
+    ``acquire`` is all-or-nothing (returns None if n pages are not
+    available) so the scheduler can keep a request queued instead of
+    half-admitting it.  ``share`` adds an owner to an existing page;
+    ``release`` drops one — a page is reclaimable only at refcount 0.
+    Registered (prefix-cached) pages at refcount 0 are parked on an LRU and
+    reclaimed lazily under allocation pressure via ``on_reclaim`` (the
+    prefix index unregisters the hash there), so ``available()`` counts
+    them as allocatable.
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -66,26 +98,175 @@ class PagePool:
         self.num_pages = num_pages
         self.page_size = page_size
         self._free = list(range(num_pages - 1, 0, -1))   # pop() -> low first
-        self._live: set[int] = set()
+        self._refs = np.zeros(num_pages, np.int32)
+        self._registered: set[int] = set()
+        self._cached: OrderedDict[int, None] = OrderedDict()  # refcount-0 LRU
+        self.on_reclaim: Callable[[int], None] | None = None
+        self.acquired_total = 0            # stats: pages handed out, ever
+        self.reclaimed_cached = 0          # stats: cached pages evicted
 
     def pages_for(self, tokens: int) -> int:
         return -(-tokens // self.page_size)
 
     def available(self) -> int:
-        return len(self._free)
+        """Allocatable pages: the free list plus reclaimable cached pages."""
+        return len(self._free) + len(self._cached)
 
-    def alloc(self, n: int) -> list[int] | None:
-        if n > len(self._free):
+    def refcount(self, page: int) -> int:
+        return int(self._refs[page])
+
+    def is_registered(self, page: int) -> bool:
+        return page in self._registered
+
+    def acquire(self, n: int) -> list[int] | None:
+        """Hand out n pages at refcount 1 (None if not available), evicting
+        LRU cached pages under pressure."""
+        if n > self.available():
             return None
-        pages = [self._free.pop() for _ in range(n)]
-        self._live.update(pages)
+        pages = []
+        for _ in range(n):
+            if self._free:
+                p = self._free.pop()
+            else:
+                p, _ = self._cached.popitem(last=False)   # LRU eviction
+                assert self._refs[p] == 0
+                self.reclaimed_cached += 1
+                self._drop_registration(p)
+            self._refs[p] = 1
+            pages.append(p)
+        self.acquired_total += n
         return pages
 
-    def free(self, pages: list[int]) -> None:
+    def share(self, pages: list[int]) -> None:
+        """Add an owner to each page (a slot's table row now points at it).
+        Sharing a cached refcount-0 page revives it off the LRU."""
         for p in pages:
-            assert p in self._live, f"double free / foreign page {p}"
-            self._live.discard(p)
-            self._free.append(p)
+            assert 0 < p < self.num_pages, f"bad page {p}"
+            if self._refs[p] == 0:
+                assert p in self._cached, f"share of unowned page {p}"
+                del self._cached[p]
+            self._refs[p] += 1
+
+    def release(self, pages: list[int]) -> None:
+        """Drop one owner per page.  At refcount 0 a registered page parks
+        on the cached LRU (most-recently-used end); an unregistered page
+        returns to the free list."""
+        for p in pages:
+            assert self._refs[p] > 0, f"release of unowned page {p}"
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                if p in self._registered:
+                    self._cached[p] = None
+                else:
+                    self._free.append(p)
+
+    def set_registered(self, page: int, flag: bool) -> None:
+        """Prefix-index hook: mark a page's content as cached (survives
+        refcount 0 on the LRU) or drop the mark (parks -> free list)."""
+        if flag:
+            self._registered.add(page)
+        else:
+            self._registered.discard(page)
+            if page in self._cached:
+                del self._cached[page]
+                self._free.append(page)
+
+    def _drop_registration(self, page: int) -> None:
+        self._registered.discard(page)
+        if self.on_reclaim is not None:
+            self.on_reclaim(page)
+
+    # legacy exclusive-ownership names, kept for external callers
+    alloc = acquire
+    free = release
+
+
+class PrefixIndex:
+    """Host-side hash-chain index over full token pages in the pool.
+
+    Block hash = H(parent_hash, page_tokens) (sha256 digests), so a hit on
+    page j implies every earlier page of the prefix matched too — matching
+    is a single walk down the prompt's chain.  Entries map a hash to the
+    physical page holding that block's K/V; the page's refcount lifecycle
+    lives in ``PagePool`` (registered pages park on the LRU at refcount 0
+    and this index is notified through ``on_reclaim`` when one is evicted).
+
+    Families with per-slot recurrent rows (hybrid shared-attn) additionally
+    store a host snapshot of those rows keyed by the boundary's hash —
+    recurrent state is not page-addressable, so a match is only usable up
+    to the deepest boundary with a snapshot.
+    """
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        pool.on_reclaim = self._reclaimed
+        self._by_hash: dict[bytes, int] = {}
+        self._hash_of: dict[int, bytes] = {}
+        self._state: dict[bytes, Any] = {}     # boundary hash -> host rows
+        self.hits = 0                          # admissions that shared >= 1pg
+        self.misses = 0
+        self.hit_tokens = 0                    # prompt tokens served by cache
+
+    def __len__(self) -> int:
+        return len(self._by_hash)
+
+    @staticmethod
+    def chain_hashes(tokens: np.ndarray, page_size: int) -> list[bytes]:
+        """Hashes of every FULL page of ``tokens``: h_j = H(h_{j-1}, page)."""
+        h = b"\x00" * 32
+        out = []
+        for j in range(len(tokens) // page_size):
+            m = hashlib.sha256(h)
+            page = np.ascontiguousarray(
+                tokens[j * page_size:(j + 1) * page_size], np.int32)
+            m.update(page.tobytes())
+            h = m.digest()
+            out.append(h)
+        return out
+
+    def match(self, prompt: np.ndarray, *, max_pages: int,
+              need_state: bool = False) -> tuple[list[int], Any]:
+        """Longest cached chain of ``prompt``'s full pages, capped at
+        ``max_pages``.  Returns (physical pages, recurrent-rows snapshot at
+        the match boundary).  With ``need_state`` the match is truncated to
+        the deepest boundary that HAS a snapshot (None matched otherwise);
+        the caller bumps refcounts via ``pool.share``."""
+        pages: list[int] = []
+        best: tuple[list[int], Any] = ([], None)
+        for h in self.chain_hashes(prompt, self.pool.page_size)[:max_pages]:
+            pg = self._by_hash.get(h)
+            if pg is None:
+                break
+            pages.append(pg)
+            if need_state and h in self._state:
+                best = (list(pages), self._state[h])
+        return best if need_state else (pages, None)
+
+    def register(self, h: bytes, page: int, state: Any = None) -> bool:
+        """Record ``page`` as holding the block hashed ``h``.  First writer
+        wins: a duplicate hash keeps the existing page (the newcomer's copy
+        stays exclusively owned and is simply never shared), but a state
+        snapshot still attaches to the boundary if it lacked one."""
+        if h in self._by_hash:
+            if state is not None and h not in self._state:
+                self._state[h] = state
+            return False
+        if page in self._hash_of:          # already registered under another
+            return False                   # hash; cannot alias
+        self._by_hash[h] = page
+        self._hash_of[page] = h
+        if state is not None:
+            self._state[h] = state
+        self.pool.set_registered(page, True)
+        return True
+
+    def _reclaimed(self, page: int) -> None:
+        """Pool evicted a cached page: drop its hash (and any deeper chain
+        entries become unreachable — they age out of the LRU on their own)."""
+        h = self._hash_of.pop(page, None)
+        if h is not None:
+            self._by_hash.pop(h, None)
+            self._state.pop(h, None)
 
 
 def page_bucket(live_pages: int, max_pages: int) -> int:
@@ -224,6 +405,63 @@ def make_chunk_prefill(cfg, num_slots: int):
         return tok, unflatten_dict(out)
 
     return chunk_prefill
+
+
+def make_fork_page():
+    """(cache, src, dst) -> cache with physical page ``dst`` holding a copy
+    of ``src`` across every pool leaf (all layers, one call per fork).
+
+    The copy-on-write primitive: before any write that would touch a page
+    with refcount > 1 (or whose content is registered in the prefix index),
+    the batcher acquires a fresh page, forks the shared one into it, and
+    repoints the slot's page-table row — the shared original is never
+    mutated.  ``src``/``dst`` are traced scalars, so every fork reuses one
+    compiled executable; jit with the cache donated for an in-place
+    scatter.  Per-slot (non-pool) leaves pass through untouched.
+    """
+
+    def fork_page(cache: Any, src: jax.Array, dst: jax.Array) -> Any:
+        flat = flatten_dict(cache)
+        out: dict[str, jax.Array] = {}
+        for key, leaf in flat.items():
+            if _num_pages_axis(key):
+                page = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=1)
+                out[key] = jax.lax.dynamic_update_slice_in_dim(
+                    leaf, page, dst, axis=1)
+            else:
+                out[key] = leaf
+        return unflatten_dict(out)
+
+    return fork_page
+
+
+def make_get_slot_rows(num_slots: int):
+    """(cache, slot) -> batch=1 pytree of the slot's per-slot (non-pool)
+    rows — the recurrent state (mamba conv/ssm) the prefix index snapshots
+    at page boundaries, since it is not page-addressable."""
+
+    def get_slot_rows(cache: Any, slot: jax.Array) -> Any:
+        flat = flatten_dict(cache)
+        rows = {k: _slot_row(v, slot, num_slots)
+                for k, v in flat.items() if not _num_pages_axis(k)}
+        return unflatten_dict(rows)
+
+    return get_slot_rows
+
+
+def make_set_slot_rows(num_slots: int):
+    """(cache, rows, slot) -> cache with the slot's per-slot rows replaced
+    by ``rows`` (a batch=1 pytree from ``make_get_slot_rows``) — restores a
+    prefix-cached recurrent-state snapshot at admission."""
+
+    def set_slot_rows(cache: Any, rows: Any, slot: jax.Array) -> Any:
+        flat, flatr = flatten_dict(cache), flatten_dict(rows)
+        out = {k: (_place_row(v, flatr[k], slot, num_slots)
+                   if k in flatr else v)
+               for k, v in flat.items()}
+        return unflatten_dict(out)
+
+    return set_slot_rows
 
 
 def make_zero_slot(num_slots: int):

@@ -101,30 +101,47 @@ def test_dense_to_paged_roundtrip():
 # ---------------------------------------------------------------------------
 
 def test_page_pool_invariants_under_churn():
+    """Refcounted-pool churn: random acquire / share (an extra owner per
+    page) / release / register storms never double-free, never hand out a
+    page that still has owners, and keep the available-page accounting
+    exact — registered refcount-0 pages stay reclaimable (LRU), so they
+    count as available."""
     rng = np.random.RandomState(0)
     pool = PagePool(num_pages=17, page_size=8)
-    held: list[list[int]] = []
+    held: list[list[int]] = []                    # one entry per ownership
     seen_live: set[int] = set()
-    for _ in range(500):
-        if held and rng.rand() < 0.4:
-            pool.free(held.pop(rng.randint(len(held))))
+    for _ in range(1000):
+        r = rng.rand()
+        if held and r < 0.35:
+            pool.release(held.pop(rng.randint(len(held))))
+        elif held and r < 0.5:
+            pages = held[rng.randint(len(held))]  # second owner of a ref
+            pool.share(pages)
+            held.append(list(pages))
+        elif held and r < 0.6:
+            # prefix index registers a random held page's content
+            pool.set_registered(held[rng.randint(len(held))][0], True)
         else:
-            got = pool.alloc(rng.randint(1, 5))
+            got = pool.acquire(rng.randint(1, 5))
             if got is None:
                 assert pool.available() < 5       # only all-or-nothing fails
                 continue
             flat = [p for ps_ in held for p in ps_]
-            assert not set(got) & set(flat), "page double-allocated"
+            assert not set(got) & set(flat), "page with owners handed out"
             assert 0 not in got, "garbage page handed out"
+            assert all(pool.refcount(p) == 1 for p in got)
             held.append(got)
             seen_live.update(got)
-        live = sum(len(h) for h in held)
-        assert pool.available() == pool.num_pages - 1 - live
+        flat = [p for ps_ in held for p in ps_]
+        for p in set(flat):
+            assert pool.refcount(p) == flat.count(p), "refcount drifted"
+        # every page without owners is allocatable (free or cached LRU)
+        assert pool.available() == pool.num_pages - 1 - len(set(flat))
     for h in held:
-        pool.free(h)
+        pool.release(h)
     assert pool.available() == pool.num_pages - 1
     assert seen_live <= set(range(1, 17))
-    with pytest.raises(AssertionError):           # double free is an error
+    with pytest.raises(AssertionError):           # over-release is an error
         pool.free([1])
 
 

@@ -1,0 +1,378 @@
+"""Copy-on-write prefix caching tests.
+
+Four layers of coverage: the refcounted ``PagePool`` (acquire/share/release
+lifecycle, registered-page LRU parking + reclaim-under-pressure), the
+``PrefixIndex`` hash-chain (match/register/unregister), end-to-end warm-vs-
+cold token identity through the ContinuousBatcher (dense + hybrid
+shared-attn, page-aligned full matches forcing a CoW fork, concurrent
+sharing, LRU eviction under pressure, rollback/evict churn), and the
+submit-time / scan_generate capacity bugfixes that rode along."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params
+from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.engine import greedy_generate_loop, scan_generate
+from repro.serve.paging import PagePool, PrefixIndex
+from repro.utils.trees import flatten_dict
+
+CFGS = {
+    "dense": ModelConfig(family="dense", num_layers=2, d_model=32, num_heads=4,
+                         num_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8),
+    "hybrid_mamba": ModelConfig(family="hybrid_mamba", num_layers=4,
+                                d_model=32, num_heads=4, num_kv_heads=4,
+                                head_dim=8, d_ff=64, vocab_size=64,
+                                ssm_state=8, ssm_head_dim=8, ssm_chunk=4,
+                                attn_every=2),
+}
+
+
+# ---------------------------------------------------------------------------
+# refcounted page pool
+# ---------------------------------------------------------------------------
+
+def test_pool_refcount_lifecycle():
+    pool = PagePool(num_pages=6, page_size=4)
+    a = pool.acquire(2)
+    assert all(pool.refcount(p) == 1 for p in a)
+    pool.share(a)                                  # a second slot points here
+    assert all(pool.refcount(p) == 2 for p in a)
+    pool.release(a)
+    assert all(pool.refcount(p) == 1 for p in a)   # still owned once
+    assert pool.available() == 3
+    pool.release(a)
+    assert pool.available() == 5                   # back on the free list
+    with pytest.raises(AssertionError):            # over-release is an error
+        pool.release([a[0]])
+
+
+def test_pool_registered_pages_park_on_lru_and_revive():
+    pool = PagePool(num_pages=6, page_size=4)
+    a = pool.acquire(3)
+    pool.set_registered(a[0], True)
+    pool.release(a)
+    # registered page parks (reclaimable, not free); others free outright
+    assert pool.available() == 5
+    assert pool.refcount(a[0]) == 0 and pool.is_registered(a[0])
+    pool.share([a[0]])                             # a prefix hit revives it
+    assert pool.refcount(a[0]) == 1
+    pool.release([a[0]])
+    pool.set_registered(a[0], False)               # index dropped the hash
+    assert pool.refcount(a[0]) == 0
+    got = pool.acquire(5)                          # whole pool reallocatable
+    assert got is not None and len(got) == 5
+
+
+def test_pool_reclaims_cached_lru_under_pressure():
+    pool = PagePool(num_pages=5, page_size=4)
+    reclaimed = []
+    pool.on_reclaim = reclaimed.append
+    pages = pool.acquire(4)                        # pool exhausted
+    for p in pages:
+        pool.set_registered(p, True)
+    pool.release(pages[:2])                        # 2 park on the LRU
+    pool.release(pages[2:])                        # then the other 2
+    assert pool.available() == 4 and not pool._free
+    got = pool.acquire(3)                          # must evict LRU-first
+    assert got == pages[:3] == reclaimed           # oldest released first
+    assert all(not pool.is_registered(p) for p in got)
+    assert pool.acquire(2) is None                 # 1 cached page left
+
+
+def test_prefix_index_chain_match_and_reclaim():
+    pool = PagePool(num_pages=8, page_size=4)
+    idx = PrefixIndex(pool)
+    toks = np.arange(12, dtype=np.int32)
+    hashes = PrefixIndex.chain_hashes(toks, 4)
+    assert len(hashes) == 3 and len(set(hashes)) == 3
+    # chaining: same page tokens at a different depth hash differently
+    assert PrefixIndex.chain_hashes(toks[4:8], 4)[0] != hashes[1]
+    pages = pool.acquire(3)
+    for h, p in zip(hashes, pages):
+        assert idx.register(h, p)
+    assert not idx.register(hashes[0], 7)          # first writer wins
+    got, _ = idx.match(toks, max_pages=3)
+    assert got == pages
+    got, _ = idx.match(toks, max_pages=2)          # caller caps the walk
+    assert got == pages[:2]
+    other = np.concatenate([toks[:4], np.full(8, 63, np.int32)])
+    got, _ = idx.match(other, max_pages=3)         # chain breaks at page 1
+    assert got == pages[:1]
+    # reclaim under pressure drops the hash: the chain is no longer matchable
+    pool.release(pages)
+    while pool._free:
+        pool.acquire(1)
+    assert pool.acquire(1) == [pages[0]]           # LRU eviction
+    got, _ = idx.match(toks, max_pages=3)
+    assert got == []
+    assert len(idx) == 2
+
+
+def test_prefix_index_state_truncates_match():
+    pool = PagePool(num_pages=8, page_size=4)
+    idx = PrefixIndex(pool)
+    toks = np.arange(12, dtype=np.int32)
+    hashes = PrefixIndex.chain_hashes(toks, 4)
+    pages = pool.acquire(3)
+    idx.register(hashes[0], pages[0], state={"s": 0})
+    idx.register(hashes[1], pages[1])              # boundary without state
+    idx.register(hashes[2], pages[2], state={"s": 2})
+    got, st = idx.match(toks, max_pages=3, need_state=True)
+    assert got == pages and st == {"s": 2}
+    got, st = idx.match(toks, max_pages=2, need_state=True)
+    assert got == pages[:1] and st == {"s": 0}     # page 1 has no snapshot
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: warm == cold, shared pages never written
+# ---------------------------------------------------------------------------
+
+def _serve(batcher, prompt, steps=6):
+    req = Request(rid=0, prompt=prompt, max_new_tokens=steps)
+    before = batcher.pool.acquired_total
+    batcher.submit(req)
+    batcher.run(max_ticks=400)
+    assert req.done
+    return req.output, batcher.pool.acquired_total - before
+
+
+def _batcher(params, cfg, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 4)
+    return ContinuousBatcher(params, cfg, **kw)
+
+
+@pytest.mark.parametrize("family", list(CFGS))
+def test_warm_prefix_matches_cold_and_allocates_only_suffix(family):
+    """Two requests sharing a 8-token prefix: the warm one must be
+    token-identical to a cold-cache run and allocate only
+    ``pages_for(suffix)`` new pages."""
+    cfg = CFGS[family]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)  # 2 pages
+    p1 = np.concatenate([prefix, np.asarray([1, 2, 3], np.int32)])
+    p2 = np.concatenate([prefix, np.asarray([9, 8, 7], np.int32)])
+
+    cold = _batcher(params, cfg, chunk_tokens=4)
+    out1_cold, pages1_cold = _serve(cold, p1)
+    out2_cold, pages2_cold = _serve(cold, p2)
+
+    warm = _batcher(params, cfg, chunk_tokens=4, prefix_cache=True)
+    out1, pages1 = _serve(warm, p1)
+    out2, pages2 = _serve(warm, p2)
+    assert (out1, out2) == (out1_cold, out2_cold)
+    assert pages1 == pages1_cold                   # first request is cold
+    # 11-token prompt, 8 matched: 1 suffix page + 1 decode-growth page
+    # fewer than the cold run's full allocation
+    assert pages2 == pages2_cold - 2               # the 2 prefix pages
+    assert warm.prefix.hits == 1 and warm.prefix.hit_tokens == 8
+    # all slots freed: every page refcount 0, pool fully reallocatable
+    assert warm.pool.available() == warm.pool.num_pages - 1
+
+
+def test_page_aligned_full_match_forks_not_mutates():
+    """A page-aligned identical prompt matches every page; the recompute of
+    the final token is the one write that lands in a shared page and MUST
+    fork it — the cached original's content must be bit-identical after."""
+    cfg = CFGS["dense"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.arange(16, dtype=np.int32)         # exactly 4 pages
+
+    b = _batcher(params, cfg, chunk_tokens=8, prefix_cache=True)
+    out1, _ = _serve(b, prompt)
+    # snapshot the cached prefix pages' content before the warm admission
+    cached = [p for p in range(1, b.pool.num_pages)
+              if b.pool.is_registered(p)]
+    assert len(cached) >= 4
+    pool_leaves = {k: np.asarray(v) for k, v in
+                   flatten_dict(b.cache).items() if k.endswith("_pages")}
+    snap = {k: v[:, cached].copy() for k, v in pool_leaves.items()}
+
+    out2, pages2 = _serve(b, prompt)
+    assert out2 == out1                            # deterministic greedy
+    assert b.cow_forks >= 1                        # the tail page forked
+    after = {k: np.asarray(v)[:, cached] for k, v in
+             flatten_dict(b.cache).items() if k.endswith("_pages")}
+    for k in snap:
+        np.testing.assert_array_equal(snap[k], after[k],
+                                      err_msg=f"shared page mutated: {k}")
+
+
+def test_concurrent_sharing_never_writes_refcounted_pages():
+    """Both slots decode simultaneously over the same shared prefix pages
+    (refcount 2 while both run): outputs match the cold run and the shared
+    pages' content never changes while shared."""
+    cfg = CFGS["dense"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    prompts = [np.concatenate([prefix, np.asarray(s, np.int32)])
+               for s in ([1, 2], [5, 6])]
+
+    def run(prefix_cache):
+        b = _batcher(params, cfg, chunk_tokens=4, prefix_cache=prefix_cache)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            b.submit(r)
+        snaps = {}
+        for _ in range(400):
+            if not b.queue and b._adm is None and not b._active():
+                break
+            b.step()
+            # every page shared between slots right now must be bit-stable
+            shared = [p for p in range(1, b.pool.num_pages)
+                      if b.pool.refcount(p) > 1]
+            leaves = {k: np.asarray(v) for k, v in
+                      flatten_dict(b.cache).items() if k.endswith("_pages")}
+            for p in shared:
+                for k, v in leaves.items():
+                    if (k, p) in snaps:
+                        np.testing.assert_array_equal(
+                            snaps[(k, p)], v[:, p],
+                            err_msg=f"refcount>1 page {p} written ({k})")
+            snaps = {(k, p): leaves[k][:, p].copy()
+                     for p in shared for k in leaves}
+        assert all(r.done for r in reqs)
+        return [r.output for r in reqs], b
+
+    cold, _ = run(False)
+    warm, b = run(True)
+    assert warm == cold
+    assert b.prefix.hits >= 1
+    assert b.pool.available() == b.pool.num_pages - 1
+
+
+def test_lru_eviction_under_pressure_keeps_serving():
+    """A pool too small to cache everything must reclaim refcount-0 cached
+    pages (LRU) to admit new work — and stay token-identical to a roomy
+    prefix-cached run."""
+    cfg = CFGS["dense"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+               for _ in range(4)]
+
+    def run(num_pages):
+        b = _batcher(params, cfg, chunk_tokens=4, prefix_cache=True,
+                     num_pages=num_pages, max_len=32)
+        return [_serve(b, p, steps=4)[0] for p in prompts], b
+
+    roomy, _ = run(None)
+    tight, b = run(9)          # 8 allocatable; each request needs 4 live
+    assert tight == roomy
+    assert b.pool.reclaimed_cached > 0             # cache actually cycled
+    assert b.pool.available() == b.pool.num_pages - 1
+
+
+def test_churn_storm_with_prefix_cache_stays_lossless():
+    """Admit/evict/rollback churn on an oversubscribed pool with the prefix
+    cache on: outputs identical to the lossless run, nothing double-freed,
+    every page accounted for after the drain."""
+    cfg = CFGS["dense"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(
+        0, cfg.vocab_size, 1 + i % 3).astype(np.int32)]) for i in range(5)]
+
+    def run(num_pages):
+        b = _batcher(params, cfg, chunk_tokens=4, prefix_cache=True,
+                     num_pages=num_pages, max_len=24)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=8)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            b.submit(r)
+        b.run(max_ticks=800)
+        assert all(r.done for r in reqs)
+        return [r.output for r in reqs], b
+
+    lossless, _ = run(None)
+    tight, b = run(8)                              # 7 allocatable pages
+    assert tight == lossless
+    assert b.pool.available() == b.pool.num_pages - 1
+    refs = [b.pool.refcount(p) for p in range(1, b.pool.num_pages)]
+    assert all(r == 0 for r in refs)
+
+
+def test_hybrid_match_requires_state_snapshot():
+    """Hybrid matches stop at the deepest page boundary with a recurrent-row
+    snapshot; a prefix registered without state (generated pages at slot
+    free) must not be skipped over."""
+    cfg = CFGS["hybrid_mamba"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(6)
+    prefix = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    p1 = np.concatenate([prefix, np.asarray([1], np.int32)])
+    b = _batcher(params, cfg, chunk_tokens=4, prefix_cache=True)
+    out1, _ = _serve(b, p1, steps=6)
+    # continuation prompt extends p1 + its outputs: those pages registered
+    # at slot-free WITHOUT state, so the match must stop at the prompt's
+    # boundary snapshots, never beyond — and stay correct
+    cont = np.concatenate([p1, np.asarray(out1[:4], np.int32)])
+    out_warm, _ = _serve(b, cont, steps=4)
+    cold = _batcher(params, cfg, chunk_tokens=4)
+    out_cold, _ = _serve(cold, cont, steps=4)
+    assert out_warm == out_cold
+
+
+# ---------------------------------------------------------------------------
+# capacity bugfixes (submit-time validation, scan_generate bounds)
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_page_aligned_prompt_filling_whole_pool():
+    """A page-aligned prompt that needs every allocatable page can prefill
+    but never take its first decode append — must be rejected at submit,
+    not die later in step()'s lone-request RuntimeError path."""
+    cfg = CFGS["dense"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = ContinuousBatcher(params, cfg, num_slots=1, max_len=32, paged=True,
+                          page_size=4, num_pages=3)   # 2 allocatable pages
+    with pytest.raises(ValueError, match="first decode append"):
+        b.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32)))
+    # one page shy of the pool is fine: the append reuses the partial page
+    b.submit(Request(rid=1, prompt=np.arange(7, dtype=np.int32),
+                     max_new_tokens=1))
+    b.run(max_ticks=50)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_submit_rejects_prompt_exceeding_max_len(paged):
+    """len(prompt) + 1 > max_len used to IndexError mid-admission (paged)
+    or silently clamp the decode append (dense) — reject at submit."""
+    cfg = CFGS["dense"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = ContinuousBatcher(params, cfg, num_slots=2, max_len=8, paged=paged,
+                          page_size=4)
+    with pytest.raises(ValueError, match="max_len"):
+        b.submit(Request(rid=0, prompt=np.arange(9, dtype=np.int32)))
+    with pytest.raises(ValueError, match="max_len"):
+        b.submit(Request(rid=1, prompt=np.arange(8, dtype=np.int32)))
+    b.submit(Request(rid=2, prompt=np.arange(7, dtype=np.int32),
+                     max_new_tokens=1))              # exactly fits
+    b.run(max_ticks=50)
+
+
+@pytest.mark.parametrize("page_size", [0, 4])
+def test_scan_generate_rejects_overflowing_rollout(page_size):
+    """max_len < prompt + steps used to clamp the decode append index: late
+    tokens silently overwrote the last row/page and outputs diverged from
+    the loop oracle — must raise instead, in dense and paged modes."""
+    cfg = CFGS["dense"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 5), 0,
+                                cfg.vocab_size)
+    with pytest.raises(ValueError, match="max_len"):
+        scan_generate(params, cfg, prompt, steps=8, max_len=8,
+                      page_size=page_size)
+    # the boundary case still works and matches the oracle
+    ref = greedy_generate_loop(params, cfg, prompt, steps=8, max_len=13)
+    got = scan_generate(params, cfg, prompt, steps=8, max_len=13,
+                        page_size=page_size)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
