@@ -31,9 +31,16 @@ Three measurements, all CPU-runnable:
   copy-on-write prefix cache: prompt-token hit rate, pages allocated warm
   vs cold (a warm admission pays only ``pages_for(suffix)``), and TTFT
   warm vs cold (the skipped prefill work, jit pre-warmed).
+* fault tolerance — the same paged+prefix serving load run clean and under
+  a seeded fault storm (pool-exhaustion spikes + NaN decode ticks + a
+  mid-tick crash recovered from a snapshot): goodput (completed tokens per
+  tick), recovery-tick overhead vs clean, and a ``token_identical`` flag
+  asserting the storm changed *when* tokens arrived, never *which*.
 
 Results land in the CSV rows AND in the BENCH json
-(``experiments/bench/decode_throughput.json``).
+(``experiments/bench/decode_throughput.json``); the fault-tolerance section
+is additionally mirrored to ``experiments/bench/fault_tolerance.json`` so CI
+can upload it as a standalone per-PR artifact.
 """
 
 from __future__ import annotations
@@ -52,12 +59,16 @@ from repro.kernels.ops import chunk_plan, decode_attention, quantized_matmul
 from repro.kernels.ref import decode_attention_ref, mxint_matmul_lowrank_ref
 from repro.models import ModelConfig, init_params
 from repro.quant.mxint import mxint_quantize, pack_mantissa
+from repro.runtime.fault_tolerance import RestartPolicy
 from repro.serve.batching import ContinuousBatcher, Request
 from repro.serve.engine import greedy_generate_loop, scan_generate
+from repro.serve.faults import FaultInjector
 from repro.serve.paging import page_bucket
+from repro.serve.supervisor import ServingSupervisor
 
 BENCH_JSON = (Path(__file__).resolve().parent.parent / "experiments" / "bench"
               / "decode_throughput.json")
+FAULT_JSON = BENCH_JSON.with_name("fault_tolerance.json")
 
 CFG = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
                   num_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16)
@@ -333,8 +344,71 @@ def run(csv_rows: list | None = None) -> dict:
             f";page_alloc_reduction={shared['page_alloc_reduction']:.2f}x"
             f";hit_rate={shared['hit_rate_prompt_tokens']:.2f}")
 
+    # ---- fault tolerance: goodput + recovery overhead under a storm --------
+    # Same serving substrate (paged + prefix cache, shared preamble), run
+    # twice: fault-free, then under a seeded storm of pool-exhaustion
+    # spikes, NaN decode ticks and one mid-tick crash recovered from an
+    # in-memory snapshot.  Faults must cost ticks (retries, stalls, replay),
+    # never tokens: the outputs are compared bit-for-bit.
+    def serve_load(injector=None):
+        batcher = ContinuousBatcher(params, CFG, num_slots=2, max_len=64,
+                                    paged=True, page_size=16, num_pages=17,
+                                    chunk_tokens=16, prefix_cache=True,
+                                    nan_retry_limit=10)
+        sup = ServingSupervisor(
+            batcher, injector=injector, snapshot_every=2,
+            policy=RestartPolicy(max_restarts=4, backoff_base_s=0.0),
+            sleep=lambda _: None)
+        reqs = [Request(rid=i,
+                        prompt=np.concatenate([sys_prompt[:32],
+                                               suffixes[i % len(suffixes)]]),
+                        max_new_tokens=8)
+                for i in range(4)]
+        for r in reqs:
+            assert sup.submit(r).accepted
+        t0 = time.perf_counter()
+        rep = sup.run(max_ticks=400)
+        wall = time.perf_counter() - t0
+        return reqs, rep, wall
+
+    serve_load()                                # warm the jit caches
+    clean_reqs, clean_rep, clean_wall = serve_load()
+    storm_reqs, storm_rep, storm_wall = serve_load(
+        FaultInjector.storm(seed=11, ticks=30, p_spike=0.25, p_nan=0.25,
+                            crash_ticks=(5,), spike_duration=2))
+    identical = [r.output for r in storm_reqs] == [r.output
+                                                   for r in clean_reqs]
+    tokens = sum(len(r.output) for r in storm_reqs if r.done)
+    fault = {
+        "requests": len(storm_reqs),
+        "completed_clean": len(clean_rep.completed),
+        "completed_storm": len(storm_rep.completed),
+        "token_identical": identical,
+        "ticks_clean": clean_rep.ticks,
+        "ticks_storm": storm_rep.ticks,
+        "recovery_tick_overhead": storm_rep.ticks - clean_rep.ticks,
+        "goodput_tokens_per_tick_clean":
+            sum(len(r.output) for r in clean_reqs if r.done) / clean_rep.ticks,
+        "goodput_tokens_per_tick_storm": tokens / storm_rep.ticks,
+        "goodput_tokens_per_sec_clean":
+            sum(len(r.output) for r in clean_reqs if r.done) / clean_wall,
+        "goodput_tokens_per_sec_storm": tokens / storm_wall,
+        "recoveries": storm_rep.recoveries,
+        "nan_events": storm_rep.nan_events,
+        "snapshots": storm_rep.snapshots,
+    }
+    results["fault_tolerance"] = fault
+    if csv_rows is not None:
+        csv_rows.append(
+            f"decode,fault_tolerance,{storm_wall * 1e6:.0f},"
+            f"token_identical={identical}"
+            f";recovery_tick_overhead={fault['recovery_tick_overhead']}"
+            f";goodput_storm={fault['goodput_tokens_per_tick_storm']:.2f}"
+            f"tok/tick;recoveries={storm_rep.recoveries}")
+
     BENCH_JSON.parent.mkdir(parents=True, exist_ok=True)
     BENCH_JSON.write_text(json.dumps(results, indent=2))
+    FAULT_JSON.write_text(json.dumps(fault, indent=2))
     return results
 
 

@@ -3,6 +3,10 @@ run a continuous-batching session over synthetic requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --reduced \
         --quantize qera_exact --bits mxint4 --rank 16 --requests 8
+
+With any fault-tolerance flag (--inject-faults, --ttl-ticks, --max-queue,
+--snapshot-dir, --snapshot-every) the batcher runs under the
+``ServingSupervisor`` and prints a :class:`ServeReport`.
 """
 
 from __future__ import annotations
@@ -19,9 +23,38 @@ from repro.models import Taps, forward, init_params
 from repro.models.config import reduced
 from repro.serve.batching import ContinuousBatcher, Request
 
+FAILURE_SEMANTICS = """\
+failure semantics (supervised mode):
+  admission   submit() returns a TYPED verdict, never queues unboundedly:
+              Accepted, or Rejected(reason=queue_full|overloaded|unservable).
+              Shed requests are counted in the report, never raised
+              mid-traffic.
+  deadlines   --ttl-ticks attaches a deadline to every request; an expired
+              request is aborted wherever it lives (queued, mid-admission,
+              decoding) with failed="deadline" and listed in the report —
+              expiry is reported, never silent.
+  NaN/Inf     non-finite decode logits quarantine ONLY the affected slot:
+              the token is discarded, recurrent rows roll back one token and
+              the slot re-decodes next tick; after nan-retry-limit
+              consecutive strikes the request fails ("nan") and its pages
+              are released WITHOUT entering the prefix index.  Co-batched
+              slots are unaffected.
+  crashes     a tick that raises a device failure is recovered from the
+              newest snapshot (--snapshot-dir for crash-safe disk snapshots
+              via the checkpoint manager, else in-memory) under a bounded
+              exponential-backoff restart policy.  Greedy decode is
+              deterministic, so replayed streams re-emit bit-identical
+              tokens; injected one-shot faults never re-fire during replay.
+  --inject-faults runs a seeded storm (pool-exhaustion spikes + NaN ticks +
+              one mid-tick crash) to demonstrate the above; outputs must be
+              token-identical to the fault-free run.
+"""
+
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=FAILURE_SEMANTICS,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", default="minicpm-2b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quantize", default=None,
@@ -49,9 +82,34 @@ def main():
                          "sequences reuse them via refcounted page-table "
                          "indirection and prefill only the uncached suffix; "
                          "a shared page is forked before any write")
+    ft = ap.add_argument_group("fault tolerance (any flag enables the "
+                               "supervisor; see failure semantics below)")
+    ft.add_argument("--inject-faults", action="store_true",
+                    help="seeded deterministic fault storm: pool-exhaustion "
+                         "spikes, NaN decode ticks, one mid-tick crash")
+    ft.add_argument("--fault-seed", type=int, default=11,
+                    help="storm seed (same seed => identical fault schedule)")
+    ft.add_argument("--ttl-ticks", type=int, default=None,
+                    help="per-request deadline in supervisor ticks; expired "
+                         "requests abort with failed='deadline'")
+    ft.add_argument("--max-queue", type=int, default=None,
+                    help="waiting-queue depth above which submit() sheds "
+                         "with Rejected(queue_full)")
+    ft.add_argument("--snapshot-dir", default=None,
+                    help="directory for crash-safe disk snapshots (atomic "
+                         "rename, keep-k GC); default: in-memory snapshots")
+    ft.add_argument("--snapshot-every", type=int, default=None,
+                    help="ticks between batcher snapshots (default 4 in "
+                         "supervised mode)")
+    ft.add_argument("--nan-retry-limit", type=int, default=3,
+                    help="consecutive non-finite decode ticks before a slot "
+                         "is quarantined (request fails with 'nan')")
     args = ap.parse_args()
     if args.prefix_cache:
         args.paged = True
+    supervised = (args.inject_faults or args.ttl_ticks is not None
+                  or args.max_queue is not None or args.snapshot_dir
+                  or args.snapshot_every is not None)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -78,7 +136,8 @@ def main():
                                 chunk_tokens=args.chunk_tokens,
                                 paged=args.paged, page_size=args.page_size,
                                 num_pages=args.num_pages,
-                                prefix_cache=args.prefix_cache)
+                                prefix_cache=args.prefix_cache,
+                                nan_retry_limit=args.nan_retry_limit)
     rng = np.random.default_rng(7)
     # shared few-shot preamble on half the requests so --prefix-cache has
     # real hits to report (production traffic is dominated by shared
@@ -94,13 +153,52 @@ def main():
     reqs = [Request(rid=i, prompt=p, max_new_tokens=args.max_new)
             for i, p in enumerate(prompts)]
     t0 = time.time()
-    for r in reqs:
-        batcher.submit(r)
-    batcher.run()
-    dt = time.time() - t0
-    toks = sum(len(r.output) for r in reqs)
-    print(f"served {len(reqs)} requests / {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s)")
+    if supervised:
+        from repro.checkpoint.ckpt import CheckpointManager
+        from repro.runtime.fault_tolerance import RestartPolicy
+        from repro.serve.faults import FaultInjector
+        from repro.serve.supervisor import ServingSupervisor
+        injector = None
+        if args.inject_faults:
+            injector = FaultInjector.storm(
+                seed=args.fault_seed, ticks=8 * args.requests,
+                p_spike=0.15 if args.paged else 0.0, p_nan=0.15,
+                crash_ticks=(5,), spike_duration=2)
+        sup = ServingSupervisor(
+            batcher, injector=injector,
+            policy=RestartPolicy(max_restarts=4, jitter=0.25,
+                                 seed=args.fault_seed),
+            ckpt=(CheckpointManager(args.snapshot_dir, keep=3)
+                  if args.snapshot_dir else None),
+            snapshot_every=(args.snapshot_every
+                            if args.snapshot_every is not None else 4),
+            max_queue_depth=(args.max_queue if args.max_queue is not None
+                             else 64),
+            default_ttl_ticks=args.ttl_ticks)
+        for r in reqs:
+            verdict = sup.submit(r)
+            if not verdict.accepted:
+                print(f"  shed req {r.rid}: {verdict.reason} "
+                      f"({verdict.detail})")
+        report = sup.run()
+        dt = time.time() - t0
+        toks = sum(len(r.output) for r in reqs if r.done)
+        print(f"served {len(report.completed)}/{len(reqs)} requests / "
+              f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s goodput)")
+        print(f"report: ticks={report.ticks} shed={report.shed} "
+              f"expired={report.expired} failed={report.failed} "
+              f"recoveries={report.recoveries} "
+              f"snapshots={report.snapshots} nan_events={report.nan_events}")
+        if injector is not None:
+            print(f"faults fired: {injector.log}")
+    else:
+        for r in reqs:
+            batcher.submit(r)
+        batcher.run()
+        dt = time.time() - t0
+        toks = sum(len(r.output) for r in reqs)
+        print(f"served {len(reqs)} requests / {toks} tokens in {dt:.2f}s "
+              f"({toks / dt:.1f} tok/s)")
     if batcher.prefix is not None:
         pfx = batcher.prefix
         print(f"prefix cache: {pfx.hits} hits / {pfx.misses} misses, "

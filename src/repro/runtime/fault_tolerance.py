@@ -18,6 +18,7 @@ logic is complete and unit-tested against simulated clocks/failures:
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from collections import defaultdict
 from typing import Callable
@@ -41,7 +42,12 @@ class StragglerMonitor:
 
     def median(self) -> float:
         vals = sorted(self.ema.values())
-        return vals[len(vals) // 2] if vals else 0.0
+        if not vals:
+            return 0.0
+        mid = len(vals) // 2
+        # even length: mean of the two middle elements (the upper-middle
+        # alone biases the fleet median high, under-flagging stragglers)
+        return vals[mid] if len(vals) % 2 else 0.5 * (vals[mid - 1] + vals[mid])
 
     def stragglers(self) -> list[str]:
         med = self.median()
@@ -57,9 +63,19 @@ class RestartPolicy:
     max_restarts: int = 5
     backoff_base_s: float = 0.01
     backoff_cap_s: float = 1.0
+    # deterministic jitter: +-jitter fraction around the capped delay, keyed
+    # by (seed, attempt) so a fleet of restarters with distinct seeds
+    # de-synchronizes (no thundering herd) while each individual schedule
+    # stays reproducible.  Default 0.0 = exact exponential backoff.
+    jitter: float = 0.0
+    seed: int = 0
 
     def backoff(self, attempt: int) -> float:
-        return min(self.backoff_base_s * (2 ** attempt), self.backoff_cap_s)
+        delay = min(self.backoff_base_s * (2 ** attempt), self.backoff_cap_s)
+        if self.jitter:
+            u = random.Random(self.seed * 1_000_003 + attempt).uniform(-1, 1)
+            delay = max(0.0, delay * (1.0 + self.jitter * u))
+        return delay
 
 
 @dataclasses.dataclass(frozen=True)

@@ -133,10 +133,41 @@ class Request:
     # filled by the engine
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # terminal failure reason ("nan", "deadline", ...) — a failed request is
+    # REPORTED, never silently dropped; ``done`` stays False
+    failed: str | None = None
     # prefix-cache stats are per REQUEST, not per admission attempt: a
     # rollback/evict re-admission re-matches the same pages but must not
     # re-count the hit (hit rates could exceed 1.0 under churn)
     prefix_counted: bool = dataclasses.field(default=False, repr=False)
+
+    @property
+    def finished(self) -> bool:
+        return self.done or self.failed is not None
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What a ``run()`` drain actually did — completions AND failures are
+    accounted; nothing falls on the floor."""
+    ticks: int
+    completed: list[int]               # rids that emitted their full output
+    failed: dict[int, str]             # rid -> terminal failure reason
+
+
+class IncompleteRunError(RuntimeError):
+    """``run(max_ticks)`` exhausted its tick budget with requests still
+    queued/decoding.  Carries the pending rids and the partial report so the
+    caller can retry, extend the budget, or fail the requests explicitly."""
+
+    def __init__(self, pending: list[int], report: RunReport):
+        self.pending = pending
+        self.report = report
+        super().__init__(
+            f"run() stopped after {report.ticks} ticks with "
+            f"{len(pending)} unfinished request(s): {pending} "
+            f"(completed {len(report.completed)}, "
+            f"failed {len(report.failed)})")
 
 
 @dataclasses.dataclass
@@ -155,11 +186,29 @@ class ContinuousBatcher:
     def __init__(self, params: Any, cfg: ModelConfig, *, num_slots: int = 4,
                  max_len: int = 256, paged: bool = False, page_size: int = 32,
                  num_pages: int | None = None, chunk_tokens: int = 64,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, fault_injector: Any = None,
+                 nan_guard: bool = True, nan_retry_limit: int = 3):
         self.params, self.cfg = params, cfg
         self.paged = paged
         self.chunk_tokens = chunk_tokens
         self.prefix: PrefixIndex | None = None
+        # fault tolerance: an optional FaultInjector (serve/faults.py) whose
+        # hooks fire inside step(), and the NaN/Inf sentinel on decode
+        # logits — a non-finite logits row pauses that slot (token
+        # discarded, recurrent rows rolled back, re-decoded next tick) and
+        # after ``nan_retry_limit`` consecutive strikes quarantines the
+        # request (failed="nan", slot freed WITHOUT registering its pages in
+        # the prefix index) so one poisoned stream never stalls co-batched
+        # slots.
+        self.injector = fault_injector
+        self.nan_guard = nan_guard
+        self.nan_retry_limit = nan_retry_limit
+        self._nan_strikes = np.zeros(num_slots, np.int32)
+        self.nan_events = 0                # non-finite decode rows seen
+        self.nan_quarantined: list[int] = []   # rids failed by the sentinel
+        self.tick_count = 0
+        self.completed_rids: list[int] = []
+        self.failed_rids: dict[int, str] = {}
         if prefix_cache and not paged:
             raise ValueError("prefix_cache requires paged=True (sharing is "
                              "page-table indirection over the page pool)")
@@ -214,6 +263,11 @@ class ContinuousBatcher:
                                   donate_argnums=(1,) if donate else ())
             self._place = jax.jit(make_place_slot(num_slots),
                                   donate_argnums=(0,) if donate else ())
+            # the NaN sentinel rolls a poisoned slot back one token; in
+            # dense mode that restores ALL its per-slot rows (K/V append is
+            # re-written identically on the re-decode)
+            self._restore = jax.jit(make_restore_slot(num_slots),
+                                    donate_argnums=(0,) if donate else ())
         self.queue: deque[Request] = deque()
         self._adm: _Admission | None = None
         self.admission_rollbacks = 0       # pool ran dry mid-prefill
@@ -320,6 +374,7 @@ class ContinuousBatcher:
         self.queue.popleft()
         self.slot_req[slot] = req
         self.lengths[slot] = 0         # stays 0 until the last chunk lands
+        self._nan_strikes[slot] = 0
         self._adm = adm
 
     def _rollback_admission(self) -> None:
@@ -505,9 +560,31 @@ class ContinuousBatcher:
         self.page_table[slot, :] = 0
         self.lengths[slot] = 0
 
+    def _release_slot(self, slot: int, *, register: bool) -> None:
+        """Free a slot's resources (terminal: finished, quarantined, or
+        aborted).  ``register`` controls whether its full pages enter the
+        prefix index — quarantined slots must NOT register (their K/V may
+        carry the NaN that poisoned the logits)."""
+        req = self.slot_req[slot]
+        self.slot_req[slot] = None
+        self._nan_strikes[slot] = 0
+        if self.paged:
+            if register:
+                self._register_finished(slot, req)
+            self.pool.release(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+            self.page_table[slot, :] = 0
+        self.lengths[slot] = 0
+
     def step(self) -> None:
+        self.tick_count += 1
+        if self.injector is not None:
+            self.injector.maybe_crash("pre")
         self._start_admission()
         self._prefill_tick()
+        if self.injector is not None:
+            # "mid-tick": admission/prefill work done, decode not committed
+            self.injector.maybe_crash("mid")
         active = self._active()
         if not active:
             return
@@ -521,6 +598,12 @@ class ContinuousBatcher:
             paused, shield = self._grow_pages(active)
             self._starved = list(paused)
             if paused and len(paused) == len(active):
+                if self.pool.reserved:
+                    # fault-injected exhaustion spike: the pressure is
+                    # transient by construction, so pause-and-wait IS the
+                    # recovery — evicting or raising here would turn a
+                    # simulated blip into real lost work
+                    return
                 # every decoding slot stalled on allocation: no tick can
                 # ever free a page, so reclaim some to restore progress —
                 # rolling back an in-flight admission is cheaper than
@@ -543,7 +626,8 @@ class ContinuousBatcher:
             # zeroed (append -> garbage page) and its rows roll back, so
             # the decode stream cannot touch the half-built prefix.
             roll_adm = adm is not None and self._has_slot_rows
-            prev = self.cache if (paused or roll_adm) else None
+            prev = (self.cache if (paused or roll_adm or self.nan_guard)
+                    else None)
             live = max(-(-int(self.lengths[i] + 1) // self.page_size)
                        for i in active)
             bucket = page_bucket(live, self.max_pages_per_slot)
@@ -573,13 +657,44 @@ class ContinuousBatcher:
         else:
             # dense mode needs no admission shielding: chunks run in the
             # scratch cache, and the slot's garbage decode rows are fully
-            # overwritten by the final place
+            # overwritten by the final place.  prev backs the NaN sentinel's
+            # one-token rollback (the decode step is not donated, so this is
+            # a reference, not a copy).
+            prev = self.cache if self.nan_guard else None
             logits, self.cache = self._decode(self.params, self.cache,
                                               {"tokens": toks}, clen)
+        live = [i for i in active if i not in paused]
+        if self.injector is not None:
+            logits = self.injector.corrupt_logits(logits, live)
+        bad: list[int] = []
+        if self.nan_guard:
+            finite = np.asarray(jnp.all(jnp.isfinite(logits[:, -1]), -1))
+            bad = [i for i in live if not finite[i]]
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-        for i in active:
-            if i in paused:
+        for i in bad:
+            # NaN/Inf sentinel: the slot's token this tick is garbage.
+            # Quarantine = pause-don't-corrupt, one slot at a time: discard
+            # the token, roll the recurrent rows back (the K/V append is
+            # re-written identically on the re-decode), and retry next tick.
+            # Rows are independent through the batched forward, so
+            # co-batched slots commit their tokens normally below.
+            self.nan_events += 1
+            self._nan_strikes[i] += 1
+            req = self.slot_req[i]
+            if self._nan_strikes[i] >= self.nan_retry_limit:
+                # persistent blowup: fail THIS request, not the batch; its
+                # pages never enter the prefix index (K/V may be poisoned)
+                req.failed = "nan"
+                self.failed_rids[req.rid] = "nan"
+                self.nan_quarantined.append(req.rid)
+                self._release_slot(i, register=False)
+            else:
+                self.cache = self._restore(self.cache, prev,
+                                           jnp.asarray(i, jnp.int32))
+        for i in live:
+            if i in bad:
                 continue
+            self._nan_strikes[i] = 0
             req = self.slot_req[i]
             tok = int(nxt[i])
             req.output.append(tok)
@@ -589,20 +704,63 @@ class ContinuousBatcher:
             if (len(req.output) >= req.max_new_tokens or hit_eos
                     or self.lengths[i] + 1 >= self.max_len):
                 req.done = True
-                self.slot_req[i] = None      # slot freed; admitted next tick
-                if self.paged:
-                    # full pages register (generated tokens become matchable
-                    # for continuation prompts) before the refs drop
-                    self._register_finished(i, req)
-                    self.pool.release(self.slot_pages[i])
-                    self.slot_pages[i] = []
-                    self.page_table[i, :] = 0
-                    self.lengths[i] = 0   # freed row attends 1 garbage token
-                else:
-                    self.lengths[i] = 0
+                self.completed_rids.append(req.rid)
+                # full pages register (generated tokens become matchable
+                # for continuation prompts) before the refs drop; the freed
+                # paged row attends 1 garbage token until re-admitted
+                self._release_slot(i, register=True)
 
-    def run(self, max_ticks: int = 1000) -> None:
+    # -- abort / drain --------------------------------------------------------
+    def abort(self, req: Request, reason: str) -> bool:
+        """Terminally fail ``req`` wherever it currently lives — queued,
+        mid-admission, or decoding — releasing its resources.  Used by the
+        supervisor for deadline/TTL expiry; the request is marked
+        ``failed=reason`` and reported, never silently dropped.  Returns
+        False if the request is not in the batcher (already finished)."""
+        if req.finished:
+            return False
+        if self._adm is not None and self._adm.req is req:
+            adm = self._adm
+            if self.paged:
+                self.pool.release(self.slot_pages[adm.slot])
+                self.slot_pages[adm.slot] = []
+                self.page_table[adm.slot, :] = 0
+            self.slot_req[adm.slot] = None
+            self.lengths[adm.slot] = 0
+            req.output.clear()
+            self._adm = None
+        elif req in self.queue:
+            self.queue.remove(req)
+        elif req in self.slot_req:
+            # a decoded prefix is valid content: register before release
+            self._release_slot(self.slot_req.index(req), register=True)
+        else:
+            return False
+        req.failed = reason
+        self.failed_rids[req.rid] = reason
+        return True
+
+    def pending_rids(self) -> list[int]:
+        """Requests still owed work: queued, mid-admission, or decoding."""
+        rids = [r.rid for r in self.queue]
+        rids += [r.rid for r in self.slot_req if r is not None]
+        return rids
+
+    def run(self, max_ticks: int = 1000) -> RunReport:
+        """Drive ticks until every submitted request is terminal (done or
+        failed).  Returns a :class:`RunReport`; raises
+        :class:`IncompleteRunError` if the tick budget runs out with
+        requests still pending — unfinished work is never silently
+        dropped."""
+        t0 = self.tick_count
         for _ in range(max_ticks):
             if not self.queue and self._adm is None and not self._active():
-                return
+                break
             self.step()
+        report = RunReport(ticks=self.tick_count - t0,
+                           completed=list(self.completed_rids),
+                           failed=dict(self.failed_rids))
+        pending = self.pending_rids()
+        if pending:
+            raise IncompleteRunError(pending, report)
+        return report

@@ -1,0 +1,163 @@
+"""Deterministic fault injection for the serving stack.
+
+A ``FaultInjector`` carries a schedule of :class:`FaultEvent`\\ s pinned to
+*injector tick indices* and exposes the hooks the batcher/supervisor call
+each tick.  The injector owns its own monotonically increasing tick counter
+(``begin_tick``), which is **never rewound by crash recovery** — so a
+one-shot event (a crash, a NaN-corrupted decode) fires exactly once on the
+global timeline even when the supervisor restores the batcher to an earlier
+state and replays ticks.  Given the same schedule (or the same
+``FaultInjector.storm`` seed) a serving session therefore sees a bit-for-bit
+identical fault sequence, which is what makes the fault-equivalence tests
+(token-identical outputs vs a fault-free run) possible.
+
+Fault kinds:
+
+* ``pool_spike`` — simulated pool-exhaustion pressure: for ``duration``
+  ticks, ``pages`` pages of the ``PagePool`` are *reserved* (subtracted from
+  ``available()``) without touching refcounts or the free list.  The batcher
+  reacts through its existing machinery (admission rollback + requeue,
+  pause-don't-corrupt decode).  Reservation — not acquisition — keeps the
+  spike out of snapshot state: a snapshot taken mid-spike records the true
+  pool ownership, and after a crash-restore the injector simply re-asserts
+  the reservation on the fresh pool object via ``pre_tick``.
+* ``crash`` — a simulated mid-tick device failure: ``maybe_crash(where)``
+  raises :class:`SimulatedDeviceFailure` at the named point inside
+  ``ContinuousBatcher.step`` (``"pre"`` = before admission, ``"mid"`` =
+  after the prefill chunk, before the decode commit).  One-shot.
+* ``nan_logits`` — numeric-blowup simulation: ``corrupt_logits`` overwrites
+  the last-position logits of the chosen slot rows with NaN/Inf before the
+  batcher's sentinel sees them.  One-shot per event.
+* ``slow_tick`` — an artificial straggler tick: ``pre_tick`` sleeps
+  ``seconds`` (injectable ``sleep`` for tests).
+
+The injector also keeps a host-side ``log`` of every fired event —
+``(tick, kind)`` tuples — so tests and the benchmark can assert the storm
+actually happened.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.fault_tolerance import SimulatedFailure
+
+
+class SimulatedDeviceFailure(SimulatedFailure):
+    """A fault-injected mid-tick device failure (recoverable by restore)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``tick`` is an injector-tick index (the first
+    supervised tick is tick 0).  Unused fields are ignored per kind."""
+    tick: int
+    kind: str                      # pool_spike | crash | nan_logits | slow_tick
+    duration: int = 1              # pool_spike: ticks the reservation holds
+    pages: int = 0                 # pool_spike: pages reserved (0 = the pool)
+    slots: tuple[int, ...] = ()    # nan_logits: slot rows hit (() = all)
+    seconds: float = 0.0           # slow_tick: artificial tick latency
+    where: str = "mid"             # crash point: "pre" | "mid"
+
+
+class FaultInjector:
+    def __init__(self, events: list[FaultEvent] | tuple[FaultEvent, ...] = ()):
+        for ev in events:
+            if ev.kind not in ("pool_spike", "crash", "nan_logits",
+                               "slow_tick"):
+                raise ValueError(f"unknown fault kind {ev.kind!r}")
+        self.events = sorted(events, key=lambda e: e.tick)
+        self.tick = -1                       # begin_tick() makes it 0-based
+        self._consumed: set[int] = set()     # ids of fired one-shot events
+        self.log: list[tuple[int, str]] = []
+
+    @classmethod
+    def storm(cls, seed: int, ticks: int, *, p_spike: float = 0.05,
+              p_nan: float = 0.05, p_slow: float = 0.0,
+              crash_ticks: tuple[int, ...] = (), spike_duration: int = 2,
+              slow_seconds: float = 0.0) -> "FaultInjector":
+        """A seeded random fault storm over ``ticks`` injector ticks.  The
+        schedule is a pure function of the arguments (``default_rng(seed)``),
+        so two storms with the same seed are identical.  Crashes are pinned
+        explicitly (``crash_ticks``) because every crash costs a restore —
+        callers choose how many recoveries the scenario pays for."""
+        rng = np.random.default_rng(seed)
+        events: list[FaultEvent] = []
+        for t in range(ticks):
+            draw = rng.random(3)
+            if draw[0] < p_spike:
+                events.append(FaultEvent(tick=t, kind="pool_spike",
+                                         duration=spike_duration))
+            if draw[1] < p_nan:
+                events.append(FaultEvent(tick=t, kind="nan_logits"))
+            if p_slow and draw[2] < p_slow:
+                events.append(FaultEvent(tick=t, kind="slow_tick",
+                                         seconds=slow_seconds))
+        events.extend(FaultEvent(tick=t, kind="crash") for t in crash_ticks)
+        return cls(events)
+
+    # -- schedule walking ----------------------------------------------------
+    def begin_tick(self) -> int:
+        """Advance the global injector clock; call once per supervised tick
+        (crash-recovery replays do NOT rewind it)."""
+        self.tick += 1
+        return self.tick
+
+    def _due(self, kind: str, *, at: int | None = None) -> list[FaultEvent]:
+        t = self.tick if at is None else at
+        return [ev for ev in self.events if ev.kind == kind and ev.tick == t]
+
+    def _fire_once(self, ev: FaultEvent) -> bool:
+        if id(ev) in self._consumed:
+            return False
+        self._consumed.add(id(ev))
+        self.log.append((self.tick, ev.kind))
+        return True
+
+    # -- hooks ---------------------------------------------------------------
+    def pre_tick(self, pool=None,
+                 sleep: Callable[[float], None] = time.sleep) -> None:
+        """Start-of-tick hook: asserts the current pool reservation (sum of
+        active spikes, re-applied every tick so it survives a pool swapped
+        out by crash restore) and sleeps through slow-tick events."""
+        if pool is not None:
+            reserve = 0
+            for ev in self.events:
+                if ev.kind != "pool_spike":
+                    continue
+                if ev.tick <= self.tick < ev.tick + ev.duration:
+                    reserve += ev.pages or pool.num_pages
+                    if ev.tick == self.tick:
+                        self._fire_once(ev)
+            pool.reserved = reserve
+        for ev in self._due("slow_tick"):
+            if self._fire_once(ev):
+                sleep(ev.seconds)
+
+    def maybe_crash(self, where: str) -> None:
+        """Raise a one-shot :class:`SimulatedDeviceFailure` if a crash is
+        scheduled at this tick and point."""
+        for ev in self._due("crash"):
+            if ev.where == where and self._fire_once(ev):
+                raise SimulatedDeviceFailure(
+                    f"injected device failure at tick {self.tick} ({where})")
+
+    def corrupt_logits(self, logits: jnp.ndarray,
+                       active: list[int]) -> jnp.ndarray:
+        """Overwrite the last-position logits of the targeted slot rows with
+        NaN (even vocab entries) and +Inf (odd entries) — both classes the
+        sentinel must catch.  One-shot per event."""
+        for ev in self._due("nan_logits"):
+            rows = [s for s in (ev.slots or tuple(active)) if s in active]
+            if rows and self._fire_once(ev):
+                logits = jnp.asarray(logits)
+                rows_ix = jnp.asarray(rows, jnp.int32)
+                row = jnp.where(jnp.arange(logits.shape[-1]) % 2 == 0,
+                                jnp.nan, jnp.inf).astype(logits.dtype)
+                logits = logits.at[rows_ix, -1, :].set(row)
+        return logits

@@ -104,13 +104,19 @@ class PagePool:
         self.on_reclaim: Callable[[int], None] | None = None
         self.acquired_total = 0            # stats: pages handed out, ever
         self.reclaimed_cached = 0          # stats: cached pages evicted
+        # pages withheld from allocation without owning them (fault
+        # injection's pool-exhaustion spikes).  Ephemeral pressure, NOT part
+        # of pool ownership: snapshots ignore it and the injector re-asserts
+        # it each tick, so a crash-restored pool sees the same spike.
+        self.reserved = 0
 
     def pages_for(self, tokens: int) -> int:
         return -(-tokens // self.page_size)
 
     def available(self) -> int:
-        """Allocatable pages: the free list plus reclaimable cached pages."""
-        return len(self._free) + len(self._cached)
+        """Allocatable pages: the free list plus reclaimable cached pages,
+        minus any fault-injected reservation."""
+        return max(0, len(self._free) + len(self._cached) - self.reserved)
 
     def refcount(self, page: int) -> int:
         return int(self._refs[page])
@@ -175,6 +181,32 @@ class PagePool:
         self._registered.discard(page)
         if self.on_reclaim is not None:
             self.on_reclaim(page)
+
+    # -- snapshot ------------------------------------------------------------
+    def state(self) -> dict:
+        """JSON-serializable allocator state (crash-safe snapshot).  The
+        ``reserved`` pressure is deliberately excluded — it is injected
+        ephemera, re-asserted by the fault injector after restore."""
+        return {
+            "num_pages": self.num_pages, "page_size": self.page_size,
+            "free": list(self._free),
+            "refs": [int(r) for r in self._refs],
+            "registered": sorted(self._registered),
+            "cached": list(self._cached),           # LRU order preserved
+            "acquired_total": self.acquired_total,
+            "reclaimed_cached": self.reclaimed_cached,
+        }
+
+    def load_state(self, state: dict) -> None:
+        assert state["num_pages"] == self.num_pages, "pool geometry mismatch"
+        assert state["page_size"] == self.page_size, "pool geometry mismatch"
+        self._free = list(state["free"])
+        self._refs = np.asarray(state["refs"], np.int32)
+        self._registered = set(state["registered"])
+        self._cached = OrderedDict((p, None) for p in state["cached"])
+        self.acquired_total = state["acquired_total"]
+        self.reclaimed_cached = state["reclaimed_cached"]
+        self.reserved = 0
 
     # legacy exclusive-ownership names, kept for external callers
     alloc = acquire
@@ -259,6 +291,25 @@ class PrefixIndex:
             self._state[h] = state
         self.pool.set_registered(page, True)
         return True
+
+    def state(self) -> tuple[dict, dict]:
+        """(json_state, state_snapshots): the hash->page map in insertion
+        order (hashes hex-encoded for JSON) plus the recurrent-row snapshot
+        pytrees keyed by hex hash (saved as array leaves, not JSON)."""
+        return ({
+            "entries": [[h.hex(), int(p)] for h, p in self._by_hash.items()],
+            "hits": self.hits, "misses": self.misses,
+            "hit_tokens": self.hit_tokens,
+        }, {h.hex(): s for h, s in self._state.items()})
+
+    def load_state(self, state: dict, snapshots: dict) -> None:
+        self._by_hash = {bytes.fromhex(h): p for h, p in state["entries"]}
+        self._hash_of = {p: h for h, p in self._by_hash.items()}
+        self._state = {bytes.fromhex(h): s for h, s in snapshots.items()}
+        self.hits, self.misses = state["hits"], state["misses"]
+        self.hit_tokens = state["hit_tokens"]
+        for p in self._hash_of:
+            self.pool.set_registered(p, True)
 
     def _reclaimed(self, page: int) -> None:
         """Pool evicted a cached page: drop its hash (and any deeper chain

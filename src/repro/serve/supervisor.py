@@ -1,0 +1,408 @@
+"""Serving-layer fault tolerance: supervision, deadlines, load shedding,
+and crash-safe snapshot/restore of the continuous batcher.
+
+``ServingSupervisor`` wraps a ``ContinuousBatcher`` and turns its happy-path
+tick loop into a production failure contract:
+
+* **typed admission** — ``submit()`` returns :class:`Accepted` or a typed
+  :class:`Rejected` backpressure verdict instead of queuing unboundedly:
+  ``queue_full`` (waiting deque at ``max_queue_depth``), ``overloaded``
+  (pool/slot utilization above ``shed_utilization`` with a non-empty
+  queue), or ``unservable`` (the batcher's own validation — prompt too
+  long for max_len or the page pool).  Shed requests are recorded, never
+  raised mid-traffic.
+* **deadlines / TTL** — every accepted request may carry a deadline in
+  supervisor ticks; an expired request is aborted wherever it lives
+  (queued, mid-admission, decoding) with ``failed="deadline"`` and shows up
+  in the final :class:`ServeReport` — expiry is reported, never silent.
+* **crash recovery** — a tick that raises ``SimulatedDeviceFailure`` (or
+  any ``SimulatedFailure``) is retried through the existing
+  ``RestartPolicy`` (bounded restarts, exponential backoff with optional
+  deterministic jitter): the batcher is restored from the newest snapshot
+  and the lost ticks replay.  Greedy decode is deterministic, so replayed
+  requests re-emit bit-identical tokens.
+* **snapshot/restore** — ``capture_state``/``apply_state`` serialize the
+  FULL batcher state: host queues and slot metadata, page tables + pool
+  refcounts/free-list/LRU, the prefix index (hash chain + recurrent-row
+  snapshots), the in-flight admission, and every device cache leaf.
+  ``save_snapshot``/``load_snapshot`` persist that through
+  ``checkpoint/ckpt.py`` (atomic rename, keep-k GC), so a killed server
+  process resumes mid-stream token-identically — see
+  ``checkpoint/serving_snapshot.md`` for the on-disk format.
+
+The supervisor owns the *global* tick clock (``self.tick``) and the fault
+injector's clock: neither rewinds on recovery, so deadlines keep their
+meaning across restores and one-shot injected faults never re-fire during
+replay.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.runtime.fault_tolerance import RestartPolicy, SimulatedFailure
+from repro.serve.batching import ContinuousBatcher, Request, _Admission
+
+# ---------------------------------------------------------------------------
+# typed submit results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Accepted:
+    rid: int
+    deadline_tick: int | None = None
+    accepted: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejected:
+    """Typed backpressure/shed verdict — the caller decides whether to
+    retry elsewhere, back off, or fail upstream."""
+    rid: int
+    reason: str                # "queue_full" | "overloaded" | "unservable"
+    detail: str = ""
+    queue_depth: int = 0
+    utilization: float = 0.0
+    accepted: bool = False
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """End-of-run accounting: every submitted request is in exactly one of
+    completed / failed / pending; shed requests never entered the queue."""
+    ticks: int
+    completed: list[int]
+    failed: dict[int, str]             # rid -> reason (deadline, nan, ...)
+    expired: list[int]                 # the failed subset with reason=deadline
+    pending: list[int]                 # only non-empty when max_ticks ran out
+    shed: int
+    recoveries: int
+    snapshots: int
+    nan_events: int
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+def _request_state(req: Request) -> dict:
+    return {"rid": req.rid, "prompt": [int(t) for t in req.prompt],
+            "max_new_tokens": req.max_new_tokens, "eos_id": req.eos_id,
+            "output": list(req.output),
+            "prefix_counted": bool(req.prefix_counted)}
+
+
+def capture_state(batcher: ContinuousBatcher) -> tuple[dict, dict]:
+    """(host, device): the complete batcher state.  ``host`` is
+    JSON-serializable (queues, slot metadata, page table, pool allocator,
+    prefix index, in-flight admission, counters); ``device`` is a pytree of
+    array leaves (the cache pool, the dense admission scratch, the prefix
+    index's recurrent-row snapshots)."""
+    b = batcher
+    live = list(b.queue) + [r for r in b.slot_req if r is not None]
+    host: dict[str, Any] = {
+        "geometry": {
+            "num_slots": b.b, "max_len": b.max_len, "paged": b.paged,
+            "page_size": b.page_size if b.paged else 0,
+            "num_pages": b.pool.num_pages if b.paged else 0,
+            "chunk_tokens": b.chunk_tokens,
+            "prefix_cache": b.prefix is not None,
+            "nan_guard": b.nan_guard, "nan_retry_limit": b.nan_retry_limit,
+            "family": b.cfg.family,
+        },
+        "tick": b.tick_count,
+        "lengths": b.lengths.tolist(),
+        "last_tok": b.last_tok.tolist(),
+        "slot_rids": [r.rid if r is not None else None for r in b.slot_req],
+        "queue": [r.rid for r in b.queue],
+        "requests": [_request_state(r) for r in live],
+        "counters": {
+            "admission_rollbacks": b.admission_rollbacks,
+            "cow_forks": b.cow_forks, "nan_events": b.nan_events,
+            "nan_strikes": b._nan_strikes.tolist(),
+            "nan_quarantined": list(b.nan_quarantined),
+            "completed_rids": list(b.completed_rids),
+            "failed_rids": {str(k): v for k, v in b.failed_rids.items()},
+        },
+    }
+    dev: dict[str, Any] = {"cache": b.cache}
+    if b.paged:
+        host["page_table"] = b.page_table.tolist()
+        host["slot_pages"] = [list(p) for p in b.slot_pages]
+        host["starved"] = list(b._starved)
+        host["pool"] = b.pool.state()
+        if b.prefix is not None:
+            pjson, psnaps = b.prefix.state()
+            host["prefix"] = pjson
+            if psnaps:
+                dev["prefix_state"] = psnaps
+    adm = b._adm
+    if adm is not None:
+        host["adm"] = {
+            "rid": adm.req.rid, "slot": adm.slot, "plan": list(adm.plan),
+            "done": adm.done, "registered": adm.registered,
+            "hashes": ([h.hex() for h in adm.hashes]
+                       if adm.hashes is not None else None),
+            "has_cache1": adm.cache1 is not None,
+        }
+        if adm.cache1 is not None:
+            dev["adm_cache1"] = adm.cache1
+    else:
+        host["adm"] = None
+    return host, dev
+
+
+def apply_state(batcher: ContinuousBatcher, host: dict, dev: dict,
+                requests: dict[int, Request] | None = None
+                ) -> dict[int, Request]:
+    """Overwrite ``batcher``'s state with a snapshot.  ``requests`` maps
+    rid -> existing Request objects to restore IN PLACE (in-process crash
+    recovery: callers holding references see outputs rolled back to the
+    snapshot); missing rids get fresh Request objects (new-process
+    restore).  Returns the rid -> Request map actually used."""
+    b = batcher
+    g = host["geometry"]
+    assert g["num_slots"] == b.b and g["max_len"] == b.max_len \
+        and g["paged"] == b.paged, "snapshot/batcher geometry mismatch"
+    requests = dict(requests or {})
+    by_rid: dict[int, Request] = {}
+    for rs in host["requests"]:
+        req = requests.get(rs["rid"])
+        if req is None:
+            req = Request(rid=rs["rid"],
+                          prompt=np.asarray(rs["prompt"], np.int32),
+                          max_new_tokens=rs["max_new_tokens"],
+                          eos_id=rs["eos_id"])
+        # live-at-snapshot: whatever happened since (completion, failure,
+        # extra tokens) rolls back; greedy replay re-derives it identically
+        req.output[:] = rs["output"]
+        req.done, req.failed = False, None
+        req.prefix_counted = rs["prefix_counted"]
+        by_rid[req.rid] = req
+    b.queue = deque(by_rid[rid] for rid in host["queue"])
+    b.slot_req = [by_rid[rid] if rid is not None else None
+                  for rid in host["slot_rids"]]
+    b.lengths = np.asarray(host["lengths"], np.int32)
+    b.last_tok = np.asarray(host["last_tok"], np.int32)
+    b.tick_count = host["tick"]
+    c = host["counters"]
+    b.admission_rollbacks = c["admission_rollbacks"]
+    b.cow_forks = c["cow_forks"]
+    b.nan_events = c["nan_events"]
+    b._nan_strikes = np.asarray(c["nan_strikes"], np.int32)
+    b.nan_quarantined = list(c["nan_quarantined"])
+    b.completed_rids = list(c["completed_rids"])
+    b.failed_rids = {int(k): v for k, v in c["failed_rids"].items()}
+    if b.paged:
+        b.pool.load_state(host["pool"])
+        b.page_table = np.asarray(host["page_table"], np.int32)
+        b.slot_pages = [list(p) for p in host["slot_pages"]]
+        b._starved = list(host["starved"])
+        if b.prefix is not None:
+            b.prefix.load_state(host.get("prefix", {"entries": [], "hits": 0,
+                                                    "misses": 0,
+                                                    "hit_tokens": 0}),
+                                dev.get("prefix_state", {}))
+    b.cache = jax.tree.map(jnp.asarray, dev["cache"])
+    a = host["adm"]
+    if a is None:
+        b._adm = None
+    else:
+        b._adm = _Admission(
+            req=by_rid[a["rid"]], slot=a["slot"], plan=list(a["plan"]),
+            done=a["done"], registered=a["registered"],
+            hashes=([bytes.fromhex(h) for h in a["hashes"]]
+                    if a["hashes"] is not None else None),
+            cache1=(jax.tree.map(jnp.asarray, dev["adm_cache1"])
+                    if a["has_cache1"] else None))
+    return by_rid
+
+
+def save_snapshot(manager: CheckpointManager,
+                  batcher: ContinuousBatcher) -> Any:
+    """Persist a crash-safe snapshot through the checkpoint manager (atomic
+    rename, keep-k GC).  The snapshot step is the batcher tick, so replays
+    that re-reach a tick simply overwrite its snapshot."""
+    host, dev = capture_state(batcher)
+    return manager.save(batcher.tick_count, dev, extra=host)
+
+
+def load_snapshot(manager: CheckpointManager, params: Any, cfg: Any, *,
+                  step: int | None = None,
+                  requests: dict[int, Request] | None = None,
+                  fault_injector: Any = None
+                  ) -> tuple[ContinuousBatcher, dict[int, Request]]:
+    """Rebuild a batcher (fresh process) from the newest (or given)
+    snapshot.  Returns (batcher, rid -> Request) — resuming ``run()`` on the
+    result continues every in-flight stream token-identically."""
+    _, dev, host = manager.restore(step)
+    g = host["geometry"]
+    batcher = ContinuousBatcher(
+        params, cfg, num_slots=g["num_slots"], max_len=g["max_len"],
+        paged=g["paged"], page_size=g["page_size"] or 32,
+        num_pages=g["num_pages"] or None, chunk_tokens=g["chunk_tokens"],
+        prefix_cache=g["prefix_cache"], fault_injector=fault_injector,
+        nan_guard=g["nan_guard"], nan_retry_limit=g["nan_retry_limit"])
+    by_rid = apply_state(batcher, host, dev, requests)
+    return batcher, by_rid
+
+
+# ---------------------------------------------------------------------------
+# the supervisor
+# ---------------------------------------------------------------------------
+
+
+class ServingSupervisor:
+    def __init__(self, batcher: ContinuousBatcher, *,
+                 injector: Any = None, policy: RestartPolicy | None = None,
+                 ckpt: CheckpointManager | None = None,
+                 snapshot_every: int = 0, max_queue_depth: int = 64,
+                 shed_utilization: float = 1.0,
+                 default_ttl_ticks: int | None = None,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.batcher = batcher
+        if injector is not None:
+            batcher.injector = injector
+        self.injector = batcher.injector
+        self.policy = policy or RestartPolicy()
+        self.ckpt = ckpt
+        self.snapshot_every = snapshot_every
+        self.max_queue_depth = max_queue_depth
+        self.shed_utilization = shed_utilization
+        self.default_ttl_ticks = default_ttl_ticks
+        self.sleep = sleep
+        self.tick = 0                       # global; never rewound
+        self.requests: dict[int, Request] = {}
+        self.deadlines: dict[int, int] = {}
+        self.shed: list[Rejected] = []
+        self.expired: list[int] = []
+        self.recoveries = 0
+        self.snapshots_taken = 0
+        self._restarts = 0                  # consecutive, reset on progress
+        self._mem_snap: tuple[dict, dict] | None = None
+
+    # -- admission ------------------------------------------------------------
+    def utilization(self) -> float:
+        b = self.batcher
+        if b.paged:
+            alloc = b.pool.num_pages - 1
+            return 1.0 - b.pool.available() / alloc if alloc else 1.0
+        return sum(r is not None for r in b.slot_req) / b.b
+
+    def submit(self, req: Request,
+               ttl_ticks: int | None = None) -> Accepted | Rejected:
+        depth = len(self.batcher.queue)
+        util = self.utilization()
+        if depth >= self.max_queue_depth:
+            rej = Rejected(req.rid, "queue_full", queue_depth=depth,
+                           utilization=util,
+                           detail=f"waiting depth {depth} >= "
+                                  f"{self.max_queue_depth}")
+        elif util >= self.shed_utilization and depth > 0:
+            rej = Rejected(req.rid, "overloaded", queue_depth=depth,
+                           utilization=util,
+                           detail=f"utilization {util:.2f} >= "
+                                  f"{self.shed_utilization:.2f}")
+        else:
+            try:
+                self.batcher.submit(req)
+            except ValueError as e:
+                rej = Rejected(req.rid, "unservable", queue_depth=depth,
+                               utilization=util, detail=str(e))
+            else:
+                self.requests[req.rid] = req
+                ttl = (ttl_ticks if ttl_ticks is not None
+                       else self.default_ttl_ticks)
+                deadline = None
+                if ttl is not None:
+                    deadline = self.tick + ttl
+                    self.deadlines[req.rid] = deadline
+                return Accepted(req.rid, deadline)
+        self.shed.append(rej)
+        return rej
+
+    # -- snapshots ------------------------------------------------------------
+    def snapshot(self) -> None:
+        """Capture restore state now: to disk when a checkpoint manager is
+        attached (crash-safe across processes), else in memory (enough for
+        in-process recovery and a lot cheaper)."""
+        if self.ckpt is not None:
+            save_snapshot(self.ckpt, self.batcher)
+        else:
+            host, dev = capture_state(self.batcher)
+            self._mem_snap = (host, jax.tree.map(np.asarray, dev))
+        self.snapshots_taken += 1
+
+    def _recover(self, err: SimulatedFailure) -> None:
+        self._restarts += 1
+        if self._restarts > self.policy.max_restarts:
+            raise err
+        self.sleep(self.policy.backoff(self._restarts))
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            _, dev, host = self.ckpt.restore()
+            apply_state(self.batcher, host, dev, self.requests)
+        elif self._mem_snap is not None:
+            host, dev = self._mem_snap
+            apply_state(self.batcher, host, dev, self.requests)
+        else:
+            raise err                     # nothing to restore from
+        self.recoveries += 1
+
+    # -- the supervised tick --------------------------------------------------
+    def _expire(self) -> None:
+        for rid, deadline in list(self.deadlines.items()):
+            req = self.requests[rid]
+            if req.finished:
+                del self.deadlines[rid]
+                continue
+            if self.tick > deadline:
+                if self.batcher.abort(req, "deadline"):
+                    self.expired.append(rid)
+                del self.deadlines[rid]
+
+    def step(self) -> None:
+        self.tick += 1
+        if self.injector is not None:
+            self.injector.begin_tick()
+            self.injector.pre_tick(
+                self.batcher.pool if self.batcher.paged else None,
+                sleep=self.sleep)
+        self._expire()
+        try:
+            self.batcher.step()
+        except SimulatedFailure as e:
+            self._recover(e)
+            return
+        self._restarts = 0                # a clean tick resets the budget
+        if self.snapshot_every and self.tick % self.snapshot_every == 0:
+            self.snapshot()
+
+    def run(self, max_ticks: int = 10_000) -> ServeReport:
+        b = self.batcher
+        if (self.snapshot_every or self.ckpt is not None) \
+                and self.snapshots_taken == 0:
+            self.snapshot()               # recovery base before tick 1
+        t0 = self.tick
+        while self.tick - t0 < max_ticks:
+            if not b.queue and b._adm is None and not b._active():
+                break
+            self.step()
+        completed = [r.rid for r in self.requests.values() if r.done]
+        failed = {r.rid: r.failed for r in self.requests.values()
+                  if r.failed is not None}
+        return ServeReport(
+            ticks=self.tick - t0, completed=completed, failed=failed,
+            expired=[rid for rid, why in failed.items() if why == "deadline"],
+            pending=b.pending_rids(), shed=len(self.shed),
+            recoveries=self.recoveries, snapshots=self.snapshots_taken,
+            nan_events=b.nan_events)

@@ -1,0 +1,329 @@
+"""Fault-tolerant serving tests.
+
+Coverage map:
+
+* ``FaultInjector`` — seeded storm determinism, one-shot events that never
+  re-fire across crash-recovery replays.
+* ``ContinuousBatcher.run`` — typed :class:`RunReport`, and
+  :class:`IncompleteRunError` when the tick budget runs out (satellite c:
+  unfinished work is never silently dropped).
+* ``ServingSupervisor`` — typed load shedding (queue_full / overloaded /
+  unservable), deadline/TTL expiry reported via ``abort``, bounded crash
+  recovery from in-memory and on-disk snapshots.
+* NaN sentinel — a corrupted decode tick costs the victim one retry tick
+  and nothing else; persistent corruption quarantines ONLY the victim.
+* Snapshot/restore — pool reservations (injected pressure) stay out of
+  snapshots; a cold process rebuilt via ``load_snapshot`` finishes every
+  in-flight stream token-identically.
+* Fault equivalence (satellite d) — a seeded storm (pool-exhaustion spikes
+  + NaN ticks + a mid-tick crash, interleaved with prefix-cache hits)
+  completes every non-expired request bit-identical to the fault-free run,
+  in dense and paged+hybrid modes.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.models import ModelConfig, init_params
+from repro.runtime.fault_tolerance import RestartPolicy
+from repro.serve import (
+    ContinuousBatcher,
+    FaultEvent,
+    FaultInjector,
+    IncompleteRunError,
+    PagePool,
+    Request,
+    ServingSupervisor,
+    SimulatedDeviceFailure,
+    load_snapshot,
+)
+
+CFGS = {
+    "dense": ModelConfig(family="dense", num_layers=2, d_model=32, num_heads=4,
+                         num_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8),
+    "hybrid_mamba": ModelConfig(family="hybrid_mamba", num_layers=4,
+                                d_model=32, num_heads=4, num_kv_heads=4,
+                                head_dim=8, d_ff=64, vocab_size=64,
+                                ssm_state=8, ssm_head_dim=8, ssm_chunk=4,
+                                attn_every=2),
+}
+PARAMS = {k: init_params(v, jax.random.PRNGKey(0)) for k, v in CFGS.items()}
+PREAMBLE = list(range(1, 9))          # 8 shared tokens = 2 full pages
+
+
+def _req(rid, *, extra=None, new=4, prompt=None):
+    if prompt is None:
+        prompt = PREAMBLE + (extra if extra is not None else [10 + rid])
+    return Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                   max_new_tokens=new)
+
+
+def _batcher(family="dense", **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("chunk_tokens", 4)
+    return ContinuousBatcher(PARAMS[family], CFGS[family], **kw)
+
+
+def _supervise(batcher, **kw):
+    kw.setdefault("policy", RestartPolicy(max_restarts=4, backoff_base_s=0.0))
+    kw.setdefault("sleep", lambda s: None)
+    return ServingSupervisor(batcher, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the injector itself
+# ---------------------------------------------------------------------------
+
+def test_storm_schedule_is_seed_deterministic():
+    a = FaultInjector.storm(seed=5, ticks=50, p_spike=0.2, p_nan=0.2,
+                            crash_ticks=(7, 19))
+    b = FaultInjector.storm(seed=5, ticks=50, p_spike=0.2, p_nan=0.2,
+                            crash_ticks=(7, 19))
+    assert a.events == b.events and len(a.events) > 2
+    c = FaultInjector.storm(seed=6, ticks=50, p_spike=0.2, p_nan=0.2,
+                            crash_ticks=(7, 19))
+    assert a.events != c.events
+
+
+def test_injector_events_fire_exactly_once():
+    """One-shot semantics are what keep crash-recovery replay from
+    re-raising the crash that triggered it."""
+    inj = FaultInjector([FaultEvent(tick=0, kind="crash", where="pre"),
+                         FaultEvent(tick=0, kind="nan_logits")])
+    inj.begin_tick()
+    with pytest.raises(SimulatedDeviceFailure):
+        inj.maybe_crash("pre")
+    inj.maybe_crash("pre")                       # replayed tick: no re-fire
+    logits = np.zeros((2, 1, 8), np.float32)
+    out = np.asarray(inj.corrupt_logits(logits, [0, 1]))
+    assert not np.isfinite(out[:, -1]).all()
+    again = np.asarray(inj.corrupt_logits(np.zeros_like(logits), [0, 1]))
+    assert np.isfinite(again).all()              # consumed
+    assert inj.log == [(0, "crash"), (0, "nan_logits")]
+
+
+def test_injector_spike_reserves_and_releases_pool():
+    inj = FaultInjector([FaultEvent(tick=1, kind="pool_spike", duration=2,
+                                    pages=3)])
+    pool = PagePool(num_pages=8, page_size=4)
+    free0 = pool.available()
+    for expect in [free0, free0 - 3, free0 - 3, free0]:
+        inj.begin_tick()
+        inj.pre_tick(pool)
+        assert pool.available() == expect
+    # reservations are ephemeral pressure: snapshots never record them
+    state = pool.state()
+    assert "reserved" not in state
+    fresh = PagePool(num_pages=8, page_size=4)
+    fresh.reserved = 5
+    fresh.load_state(state)
+    assert fresh.reserved == 0
+
+
+def test_injector_slow_tick_uses_injected_sleep():
+    inj = FaultInjector([FaultEvent(tick=0, kind="slow_tick", seconds=2.5)])
+    slept = []
+    inj.begin_tick()
+    inj.pre_tick(None, sleep=slept.append)
+    assert slept == [2.5]
+
+
+# ---------------------------------------------------------------------------
+# run() contract (satellite c)
+# ---------------------------------------------------------------------------
+
+def test_run_returns_report_or_raises_incomplete():
+    b = _batcher(num_slots=1)
+    b.submit(_req(0, new=6))
+    with pytest.raises(IncompleteRunError) as ei:
+        b.run(max_ticks=2)
+    assert ei.value.pending == [0] and ei.value.report.ticks == 2
+    report = b.run()                              # finish the drain
+    assert report.completed == [0] and not report.failed
+    assert b.pending_rids() == []
+
+
+# ---------------------------------------------------------------------------
+# load shedding + deadlines
+# ---------------------------------------------------------------------------
+
+def test_submit_sheds_with_typed_rejections():
+    sup = _supervise(_batcher(num_slots=1), max_queue_depth=8,
+                     shed_utilization=0.9)
+    # unservable: the batcher's own validation, surfaced as a verdict
+    too_long = _req(9, prompt=list(range(40)))
+    v = sup.submit(too_long)
+    assert not v.accepted and v.reason == "unservable"
+    assert sup.submit(_req(0, new=6)).accepted
+    for _ in range(3):                            # r0 into the only slot
+        sup.step()
+    assert sup.utilization() == 1.0
+    assert sup.submit(_req(1)).accepted           # queue empty: no shed
+    v = sup.submit(_req(2))                       # depth 1 + util 1.0
+    assert not v.accepted and v.reason == "overloaded"
+    sup.max_queue_depth = 1
+    v = sup.submit(_req(3))
+    assert v.reason == "queue_full" and v.queue_depth == 1
+    assert len(sup.shed) == 3
+    rep = sup.run()
+    assert sorted(rep.completed) == [0, 1] and rep.shed == 3
+
+
+def test_deadline_expiry_is_reported_not_dropped():
+    sup = _supervise(_batcher(num_slots=1))
+    sup.submit(_req(0, new=6))
+    doomed = _req(1)
+    sup.submit(doomed, ttl_ticks=1)               # expires while queued
+    rep = sup.run()
+    assert rep.expired == [1] and rep.failed == {1: "deadline"}
+    assert doomed.failed == "deadline" and not doomed.done
+    assert rep.completed == [0] and rep.pending == []
+
+
+# ---------------------------------------------------------------------------
+# NaN sentinel + quarantine
+# ---------------------------------------------------------------------------
+
+def _drain(batcher, reqs, injector=None, **sup_kw):
+    sup = _supervise(batcher, injector=injector, **sup_kw)
+    for r in reqs:
+        assert sup.submit(r).accepted
+    rep = sup.run(max_ticks=400)
+    return rep, sup
+
+
+def test_nan_tick_costs_one_retry_and_nothing_else():
+    clean = [_req(i, new=5) for i in range(3)]
+    crep, _ = _drain(_batcher(), clean)
+    inj = FaultInjector([FaultEvent(tick=3, kind="nan_logits")])
+    noisy = [_req(i, new=5) for i in range(3)]
+    nrep, _ = _drain(_batcher(), noisy, injector=inj)
+    assert [r.output for r in noisy] == [r.output for r in clean]
+    assert nrep.nan_events > 0 and not nrep.failed
+    assert nrep.ticks > crep.ticks                # the retry tick is visible
+
+
+def test_persistent_nan_quarantines_only_the_victim():
+    clean = [_req(i, new=6) for i in range(2)]
+    _drain(_batcher(), clean)
+    # r0 lands in slot 0 first; hit that slot on enough consecutive decode
+    # ticks to exhaust nan_retry_limit=3
+    inj = FaultInjector([FaultEvent(tick=t, kind="nan_logits", slots=(0,))
+                         for t in range(3, 10)])
+    noisy = [_req(i, new=6) for i in range(2)]
+    rep, sup = _drain(_batcher(nan_retry_limit=3), noisy, injector=inj)
+    assert noisy[0].failed == "nan" and not noisy[0].done
+    assert rep.failed == {0: "nan"}
+    assert sup.batcher.nan_quarantined == [0]
+    # the co-batched request never saw the corruption
+    assert noisy[1].done and noisy[1].output == clean[1].output
+
+
+# ---------------------------------------------------------------------------
+# crash recovery
+# ---------------------------------------------------------------------------
+
+def test_crash_without_snapshot_propagates():
+    inj = FaultInjector([FaultEvent(tick=2, kind="crash")])
+    sup = _supervise(_batcher(), injector=inj)    # no ckpt, no snapshot_every
+    sup.submit(_req(0))
+    with pytest.raises(SimulatedDeviceFailure):
+        sup.run()
+
+
+def test_restart_budget_bounds_recovery():
+    inj = FaultInjector([FaultEvent(tick=t, kind="crash")
+                         for t in range(2, 6)])
+    sup = _supervise(_batcher(), injector=inj, snapshot_every=1,
+                     policy=RestartPolicy(max_restarts=2, backoff_base_s=0.0))
+    sup.submit(_req(0, new=8))
+    with pytest.raises(SimulatedDeviceFailure):
+        sup.run()                                 # 3rd consecutive crash
+    assert sup.recoveries == 2
+
+
+def test_crash_recovery_in_memory_token_identical():
+    clean = [_req(i, new=5) for i in range(3)]
+    crep, _ = _drain(_batcher(), clean)
+    inj = FaultInjector([FaultEvent(tick=4, kind="crash", where="mid")])
+    noisy = [_req(i, new=5) for i in range(3)]
+    nrep, _ = _drain(_batcher(), noisy, injector=inj, snapshot_every=2)
+    assert [r.output for r in noisy] == [r.output for r in clean]
+    assert nrep.recoveries == 1 and nrep.ticks > crep.ticks
+
+
+def test_disk_snapshot_cold_restore(tmp_path):
+    """Kill-and-restart: a fresh process rebuilds the batcher from disk and
+    every stream that was live at the snapshot finishes token-identically."""
+    clean = [_req(i, new=4) for i in range(4)]
+    b = _batcher(paged=True, page_size=4, num_pages=12, prefix_cache=True)
+    _drain(b, clean)
+    mgr = CheckpointManager(tmp_path, keep=2)
+    b2 = _batcher(paged=True, page_size=4, num_pages=12, prefix_cache=True)
+    sup = _supervise(b2, ckpt=mgr, snapshot_every=3)
+    noisy = [_req(i, new=4) for i in range(4)]
+    for r in noisy:
+        assert sup.submit(r).accepted
+    for _ in range(4):                            # past one periodic snapshot
+        sup.step()
+    assert mgr.latest_step() is not None
+    # "new process": fresh batcher + Request objects from the snapshot alone
+    b3, by_rid = load_snapshot(mgr, PARAMS["dense"], CFGS["dense"])
+    assert by_rid                                 # something was in flight
+    sup3 = _supervise(b3)
+    sup3.requests.update(by_rid)
+    sup3.run(max_ticks=200)
+    for rid, req in by_rid.items():
+        assert req.done and req.output == clean[rid].output, rid
+
+
+# ---------------------------------------------------------------------------
+# fault equivalence under a seeded storm (satellite d)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["dense", "paged_hybrid"])
+def test_storm_fault_equivalence(mode):
+    family = "dense" if mode == "dense" else "hybrid_mamba"
+    kw = {} if mode == "dense" else dict(paged=True, page_size=4,
+                                         num_pages=17, prefix_cache=True)
+
+    def build():
+        # generous retry limit: quarantine has its own test — here every
+        # non-expired request must survive the storm
+        return _batcher(family, nan_retry_limit=10, **kw)
+
+    def submit_all(sup):
+        reqs = [_req(i, new=4) for i in range(4)]  # shared preamble
+        for r in reqs:
+            assert sup.submit(r).accepted
+        doomed = _req(99)
+        assert sup.submit(doomed, ttl_ticks=0).accepted
+        return reqs, doomed
+
+    sup = _supervise(build())
+    clean, cdoomed = submit_all(sup)
+    crep = sup.run(max_ticks=400)
+    assert cdoomed.failed == "deadline"
+    if mode != "dense":
+        assert sup.batcher.prefix.hits > 0        # the storm must interleave
+        # with real prefix-cache traffic, not an idle pool
+    inj = FaultInjector.storm(seed=11, ticks=30, p_spike=0.25, p_nan=0.25,
+                              crash_ticks=(5,), spike_duration=2)
+    sup2 = _supervise(build(), injector=inj, snapshot_every=2)
+    noisy, ndoomed = submit_all(sup2)
+    nrep = sup2.run(max_ticks=400)
+    fired = {k for _, k in inj.log}
+    assert "crash" in fired and "nan_logits" in fired
+    if mode != "dense":
+        assert "pool_spike" in fired          # spikes only bite a real pool
+    # every non-expired request: bit-identical to the fault-free run
+    assert [r.output for r in noisy] == [r.output for r in clean]
+    assert all(r.done for r in noisy)
+    # expiry is reported in BOTH runs, never silently dropped
+    assert ndoomed.failed == "deadline" and nrep.expired == [99]
+    assert crep.expired == [99]
+    assert nrep.recoveries >= 1
+    assert nrep.pending == [] and crep.pending == []

@@ -174,6 +174,46 @@ def test_straggler_monitor_flags_slow_host():
     assert mon.stragglers() == ["h2"]
 
 
+def test_straggler_median_even_count():
+    """Even host counts: the median is the mean of the two middle EMAs —
+    the old upper-middle pick biased the fleet median high and let genuine
+    stragglers hide under the inflated threshold."""
+    mon = StragglerMonitor(threshold=1.5, warmup_steps=1)
+    for h, v in [("h0", 1.0), ("h1", 1.0), ("h2", 10.0), ("h3", 10.0)]:
+        mon.record(h, v)
+    assert mon.median() == pytest.approx(5.5)   # not 10.0 (upper-middle)
+    mon2 = StragglerMonitor(threshold=1.5, warmup_steps=1)
+    for h, v in [("h0", 1.0), ("h1", 1.0), ("h2", 1.0), ("h3", 2.0)]:
+        mon2.record(h, v)
+    # with the biased median (1.0 vs correct 1.0) h3 flags either way, but
+    # a 6-host fleet where the two middles straddle the gap must use both:
+    mon3 = StragglerMonitor(threshold=1.5, warmup_steps=1)
+    for i, v in enumerate([1.0, 1.0, 1.0, 3.0, 3.0, 3.0]):
+        mon3.record(f"h{i}", v)
+    assert mon3.median() == pytest.approx(2.0)
+    assert mon3.stragglers() == []              # 3.0 == 1.5 * 2.0, not >
+    assert mon2.median() == pytest.approx(1.0)
+
+
+def test_restart_backoff_jitter():
+    base = RestartPolicy(backoff_base_s=0.1, backoff_cap_s=10.0)
+    assert base.backoff(3) == pytest.approx(0.8)      # default: exact 2^k
+    jit = RestartPolicy(backoff_base_s=0.1, backoff_cap_s=10.0,
+                        jitter=0.25, seed=7)
+    delays = [jit.backoff(a) for a in range(6)]
+    # deterministic: same (seed, attempt) -> same delay
+    assert delays == [jit.backoff(a) for a in range(6)]
+    # bounded: within +-25% of the un-jittered schedule, never negative
+    for a, d in enumerate(delays):
+        pure = min(0.1 * 2 ** a, 10.0)
+        assert 0.75 * pure - 1e-12 <= d <= 1.25 * pure + 1e-12
+    # distinct seeds de-synchronize (thundering-herd avoidance)
+    other = RestartPolicy(backoff_base_s=0.1, backoff_cap_s=10.0,
+                          jitter=0.25, seed=8)
+    assert any(abs(a - b) > 1e-9 for a, b in
+               zip(delays, (other.backoff(k) for k in range(6))))
+
+
 def test_restart_recovers_through_failures(tmp_path):
     mgr = CheckpointManager(tmp_path)
     mgr.save(0, {"x": jnp.zeros(1)})
