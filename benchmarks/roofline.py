@@ -8,6 +8,8 @@ import json
 from pathlib import Path
 
 DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+TP_JSON = (Path(__file__).resolve().parent.parent / "experiments" / "bench"
+           / "tp_serving.json")
 HBM_PER_CHIP = 16e9   # v5e
 
 
@@ -21,13 +23,40 @@ def load_cells(mesh: str | None = None) -> list[dict]:
     return cells
 
 
+def tp_comms_rows(csv_rows: list | None = None) -> dict:
+    """Surface the tensor-parallel serving comms term next to the roofline:
+    per-tp measured all-reduce bytes of the compiled decode step vs the
+    analytic 2-psum/layer prediction (benchmarks/tp_serving.py)."""
+    if not TP_JSON.exists():
+        return {}
+    d = json.loads(TP_JSON.read_text())
+    out = {}
+    for r in d.get("results", []):
+        key = f"tp_serving|{d['arch']}|tp={r['tp']}"
+        out[key] = {
+            "tokens_per_sec": r["tokens_per_sec"],
+            "bytes_per_token": r["bytes_per_token"],
+            "measured_allreduce_bytes": r["measured_allreduce_bytes"],
+            "predicted_allreduce_bytes": r["predicted_allreduce_bytes"],
+            "predicted_vs_measured_ratio": r["predicted_vs_measured_ratio"],
+        }
+        if csv_rows is not None:
+            ratio = r["predicted_vs_measured_ratio"]
+            csv_rows.append(
+                f"roofline,{key},{r['tokens_per_sec']}tok/s,"
+                f"allreduce_pred/meas="
+                f"{'n/a' if ratio is None else round(ratio, 3)}")
+    return out
+
+
 def run(csv_rows: list | None = None) -> dict:
     cells = load_cells()
+    tp = tp_comms_rows(csv_rows)
     if not cells:
         if csv_rows is not None:
             csv_rows.append("roofline,no-dryrun-artifacts-yet,,")
-        return {}
-    out = {}
+        return tp
+    out = dict(tp)
     for d in cells:
         key = f"{d['arch']}|{d['shape']['name']}|{d['mesh']}"
         mem = d["full"]["memory"]

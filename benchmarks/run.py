@@ -8,6 +8,8 @@
   table8_runtime      Tab. 7/8: init runtime exact vs approx (+sqrtm kernels)
   kernel_bench        Pallas kernels vs refs + HBM accounting
   decode_throughput   decode fast path: tokens/sec + bytes/token (BENCH json)
+  tp_serving          tensor-parallel serving: per-tp tokens/sec +
+                      predicted-vs-measured all-reduce bytes (BENCH json)
   roofline            §Roofline from the dry-run artifacts
 
 Run all:      PYTHONPATH=src python -m benchmarks.run
@@ -23,7 +25,7 @@ import traceback
 
 BENCHES = ["fig1_output_error", "fig3_calib_size", "table1_qpeft",
            "table3_ptq", "table8_runtime", "kernel_bench",
-           "decode_throughput", "roofline"]
+           "decode_throughput", "tp_serving", "roofline"]
 
 
 def main() -> None:

@@ -1,0 +1,143 @@
+"""Tensor-parallel serving benchmark: tokens/sec, bytes/token, and
+predicted-vs-measured all-reduce cost per tp degree.
+
+For each tp in {1, 2, 4} that fits the visible devices (CI forces 8 CPU
+devices via XLA_FLAGS before invoking this):
+
+* **throughput** — tokens/sec of a paged + prefix-cache
+  ``ContinuousBatcher`` run on the serving mesh (the full stack: chunked
+  admission, CoW prefix sharing, fused decode, all shard_map'd at tp > 1);
+* **bytes/token** — XLA cost-analysis bytes of one compiled decode step
+  divided by the slot count;
+* **comms** — the per-device all-reduce bytes the compiled TP decode step
+  actually contains (``collective_bytes`` on its HLO: largest shape per
+  instruction, all-reduce doubled for the ring) against the analytic
+  ``tp_allreduce_model`` prediction of 2 psums/layer x (B, 1, d_model).
+  The acceptance bar is agreement within 2x; the json records the ratio.
+
+Results land in the CSV rows and ``experiments/bench/tp_serving.json``
+(uploaded as a standalone CI artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.dryrun import analyze, tp_allreduce_model
+from repro.launch.mesh import make_serving_mesh
+from repro.models import init_params
+from repro.models.config import reduced
+from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.engine import init_cache, make_decode_step
+from repro.sharding.serving import plan_for
+
+BENCH_JSON = (Path(__file__).resolve().parent.parent / "experiments"
+              / "bench" / "tp_serving.json")
+
+ARCH = "yi-34b"
+NUM_SLOTS = 4
+MAX_LEN = 64
+STEPS = 12
+
+
+def _requests(cfg, n=6):
+    rng = np.random.default_rng(3)
+    pre = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(3, 10))).astype(np.int32)
+        reqs.append(Request(rid=i, max_new_tokens=STEPS,
+                            prompt=np.concatenate([pre, tail])
+                            if i % 2 else tail))
+    return reqs
+
+
+def _throughput(params, cfg, mesh) -> float:
+    def once():
+        b = ContinuousBatcher(params, cfg, num_slots=NUM_SLOTS,
+                              max_len=MAX_LEN, paged=True, page_size=8,
+                              prefix_cache=True, mesh=mesh)
+        reqs = _requests(cfg)
+        for r in reqs:
+            b.submit(r)
+        t0 = time.perf_counter()
+        b.run()
+        toks = sum(len(r.output) for r in reqs)
+        return toks, time.perf_counter() - t0
+
+    once()                              # warm the jit caches
+    toks, dt = once()
+    return toks / dt
+
+
+def _decode_costs(params, cfg, mesh, tp: int) -> dict:
+    """Compile ONE decode step at this tp and read its HLO costs."""
+    cache = init_cache(cfg, NUM_SLOTS, MAX_LEN)
+    toks = {"tokens": jnp.zeros((NUM_SLOTS, 1), jnp.int32)}
+    clen = jnp.zeros((NUM_SLOTS,), jnp.int32)
+    if tp > 1:
+        from jax.sharding import PartitionSpec as P
+        plan = plan_for(cfg, mesh)
+        cspecs = plan.cache_specs(cache)
+        fn = plan.sjit(make_decode_step(plan.local_cfg),
+                       in_specs=(plan.param_specs(params), cspecs,
+                                 P(None, None), P(None)),
+                       out_specs=(P(None, None, None), cspecs))
+    else:
+        fn = jax.jit(make_decode_step(cfg))
+    compiled = fn.lower(params, cache, toks, clen).compile()
+    return analyze(compiled)
+
+
+def run(csv_rows: list | None = None) -> dict:
+    cfg = reduced(get_arch(ARCH), scan_layers=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    have = jax.device_count()
+    tps = [t for t in (1, 2, 4) if t <= have]
+    dtype_bytes = jnp.dtype(cfg.compute_dtype).itemsize
+    results = []
+    for tp in tps:
+        mesh = make_serving_mesh(tp) if tp > 1 else None
+        toks_s = _throughput(params, cfg, mesh)
+        costs = _decode_costs(params, cfg, mesh, tp)
+        measured = costs["collectives"]["all-reduce"]
+        n_ar = costs["collectives"]["counts"]["all-reduce"]
+        pred = tp_allreduce_model(cfg, batch=NUM_SLOTS, seq=1, tp=tp,
+                                  dtype_bytes=dtype_bytes)
+        ratio = (pred["per_device_bytes"] / measured) if measured else None
+        results.append({
+            "tp": tp,
+            "tokens_per_sec": round(toks_s, 2),
+            "bytes_per_token": costs["bytes_accessed"] / NUM_SLOTS,
+            "allreduce_count": n_ar,
+            "measured_allreduce_bytes": measured,
+            "predicted_allreduce_bytes": pred["per_device_bytes"],
+            "predicted_vs_measured_ratio": ratio,
+            "predicted_allreduce_s": pred["predicted_s"],
+        })
+        if csv_rows is not None:
+            csv_rows.append(
+                f"tp_serving,tp={tp},{toks_s:.1f}tok/s,"
+                f"allreduce={measured:.0f}B/pred="
+                f"{pred['per_device_bytes']:.0f}B;n={n_ar}")
+    out = {
+        "arch": ARCH, "device_count": have, "tps": tps,
+        "num_slots": NUM_SLOTS, "steps": STEPS,
+        "dtype_bytes": dtype_bytes, "results": results,
+    }
+    BENCH_JSON.parent.mkdir(parents=True, exist_ok=True)
+    BENCH_JSON.write_text(json.dumps(out, indent=2))
+    print(f"wrote {BENCH_JSON}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -115,7 +115,7 @@ def dequantized_weight(qlin: Mapping[str, jax.Array]) -> jax.Array:
 
 
 def pack_for_serving(qparams: Mapping[str, Any], cfg: PTQConfig,
-                     packed: bool = True) -> dict:
+                     packed: bool = True, mesh=None) -> dict:
     """Convert quantized linears to the PACKED layout the Pallas kernel
     consumes: {"mant" int8, "exp" int8, "bits", "block_size", lora_a/b}.
 
@@ -126,7 +126,13 @@ def pack_for_serving(qparams: Mapping[str, Any], cfg: PTQConfig,
     models.layers.linear dispatches to the fused kernel when
     ``cfg.use_pallas`` is set.  ``packed=False`` keeps the flat
     one-int8-per-mantissa layout (interpret-mode debugging escape hatch).
-    Only MXINT formats pack."""
+    Only MXINT formats pack.
+
+    With ``mesh`` (a 1-D ``('model',)`` serving mesh), every leaf is
+    device_put with its tensor-parallel NamedSharding from
+    ``sharding/serving.py`` — in-projections column-parallel, out-projections
+    row-parallel, everything else replicated — so the packed buffers land
+    pre-sharded and shard_map never reshuffles them."""
     from repro.quant.mxint import MXINT_CONFIGS, mxint_quantize, pack_mantissa
 
     if cfg.quantizer not in MXINT_CONFIGS:
@@ -160,8 +166,16 @@ def pack_for_serving(qparams: Mapping[str, Any], cfg: PTQConfig,
                 grouped[path] = flat[path]
             continue
         leaf = {k: flat[f"{parent}/{k}"] for k in ("w_tilde", "lora_a", "lora_b")}
-        packed = pack(leaf)
-        for k, v in packed.items():
+        group = pack(leaf)
+        for k, v in group.items():
             grouped[f"{parent}/{k}"] = v
         done.add(parent)
-    return unflatten_dict(grouped)
+    out = unflatten_dict(grouped)
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        from repro.sharding.serving import serving_param_specs
+        specs = serving_param_specs(out, int(mesh.shape["model"]))
+        out = jax.tree.map(
+            lambda leaf, s: jax.device_put(leaf, NamedSharding(mesh, s)),
+            out, specs)
+    return out

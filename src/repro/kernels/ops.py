@@ -23,10 +23,11 @@ the skinny-M N-major-grid variant instead of padding M up to prefill tiles.
 from __future__ import annotations
 
 import math
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.prefill_attention import prefill_attention_pallas
@@ -88,19 +89,36 @@ def pick_blocks(m: int, k: int, n: int, *, block_size: int, epb: int = 1,
     sublane rows, so bk prefers multiples of lcm(block_size, 8 * epb) to keep
     the packed mantissa tile 8-sublane-aligned (falling back to plain
     block_size multiples — always correct, whole bytes per tile — when K has
-    no such divisor).  bn: block_n when it divides N, else the largest
-    divisor of N ≤ block_n that keeps 8-lane alignment (whole-N fallback).
+    no such divisor).  A K that cannot hold whole exponent blocks at all
+    (K < block_size or K % block_size != 0 — e.g. an invalid TP row shard)
+    raises a clear ValueError here instead of an XLA shape assert three
+    layers down.  bn: block_n when it divides N, else the largest divisor of
+    N ≤ block_n that keeps 8-lane alignment, else the largest divisor at
+    all; a degenerate narrow result (< 8 lanes — shard-local N = N/tp with
+    no usable divisor) is clamped to one whole-N block rather than a 1-wide
+    tile grid.
     """
     bk = 0
     if epb > 1:
         gran = math.lcm(block_size, 8 * epb)
         bk = _largest_divisor(k, block_k, gran)
     if not bk:
-        bk = _largest_divisor(k, block_k, block_size) or block_size
+        bk = _largest_divisor(k, block_k, block_size)
+    if not bk:
+        if k < block_size or k % block_size:
+            raise ValueError(
+                f"K={k} cannot be tiled by MXINT block_size={block_size}: "
+                f"every K tile must hold whole exponent blocks, so K (and "
+                f"any tensor-parallel shard K/tp) must be a multiple of "
+                f"block_size")
+        bk = block_size                # caller's block_k cap < block_size
     if n % block_n == 0:
         bn = block_n
     else:
-        bn = _largest_divisor(n, block_n, 8) or n
+        bn = (_largest_divisor(n, block_n, 8)
+              or _largest_divisor(n, block_n))
+        if bn < 8:
+            bn = n                     # degenerate narrow tiles: one block
     m_pad = -(-m // 8) * 8
     decode = m_pad <= min(block_m, _DECODE_M_MAX)
     # prefill bm stays 8-sublane-aligned too (Mosaic rejects e.g. bm=33)
@@ -161,6 +179,65 @@ def quantized_matmul_packed(x: jax.Array, packed: PackedMXINT, a: jax.Array,
                             b: jax.Array, **kw) -> jax.Array:
     return quantized_matmul(x, packed.mant, packed.exp, a, b,
                             bits=packed.bits, block_size=packed.block_size, **kw)
+
+
+@lru_cache(maxsize=None)
+def _sharded_qmm(mesh, axis: str, role: str, bits: int, block_size: int,
+                 x_ndim: int):
+    """Cached jit(shard_map(...)) for one (mesh, role, format, rank) combo.
+
+    Each device runs its OWN Pallas launch on its local shard —
+    ``pick_blocks`` sees the local (M, K/tp) or (M, N/tp) shapes because
+    shard_map hands the kernel local array views, so no kernel-body change
+    is needed.  Column-parallel shards N (y stays partitioned, no
+    collective); row-parallel shards K, the per-device launch fuses the
+    local x@A prologue and t@B epilogue (lora_b is replicated on
+    row-parallel layers, so sum_d((x_d @ A_d) @ B) == (sum_d x_d @ A_d) @ B
+    and the partial outputs ``psum`` ONCE after the launch — one all-reduce
+    per layer, none inside the kernel).
+    """
+    from repro.sharding.serving import shard_map_compat
+
+    lead = (None,) * (x_ndim - 1)
+
+    def qmm(x, mant, exp, a, b):
+        return quantized_matmul(x, mant, exp, a, b, bits=bits,
+                                block_size=block_size)
+
+    if role == "column":               # shard N: mant/exp/lora_b columns
+        fn = qmm
+        in_specs = (P(*lead, None), P(None, axis), P(None, axis), P(),
+                    P(None, axis))
+        out_specs = P(*lead, axis)
+    elif role == "row":                # shard K: mant/exp rows, lora_a rows
+        def fn(x, mant, exp, a, b):
+            return jax.lax.psum(qmm(x, mant, exp, a, b), axis)
+
+        in_specs = (P(*lead, axis), P(axis, None), P(axis, None),
+                    P(axis, None), P())
+        out_specs = P(*lead, None)
+    else:
+        raise ValueError(f"role must be 'column' or 'row', got {role!r}")
+    return jax.jit(shard_map_compat(fn, mesh, in_specs, out_specs))
+
+
+def quantized_matmul_sharded(x: jax.Array, mant: jax.Array, exp: jax.Array,
+                             a: jax.Array, b: jax.Array, *, bits: int,
+                             block_size: int, mesh, role: str,
+                             axis: str = "model") -> jax.Array:
+    """Tensor-parallel ``quantized_matmul``: one Pallas launch PER DEVICE.
+
+    ``role`` follows the ``sharding/rules.py`` naming contract: "column" for
+    in-projections (wide axis last — shard N; packed mantissa columns split
+    cleanly, no byte or exponent block is ever divided), "row" for
+    out-projections (wide axis first — shard K; each shard keeps whole
+    packed bytes and exponent blocks, validated by
+    ``quant.mxint.validate_packed_sharding``).  Row-parallel partial outputs
+    are reduced with exactly one ``psum``; column-parallel needs none.
+    Inputs may be unsharded — jit reshards them to the in_specs.
+    """
+    return _sharded_qmm(mesh, axis, role, bits, block_size, x.ndim)(
+        x, mant, exp, a, b)
 
 
 @partial(jax.jit, static_argnames=("bits", "block_size", "packed", "interpret"))

@@ -1,10 +1,17 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# Test hook only — must also run before any jax import; the production
-# default above stays exactly as specified.
+
+from repro.launch.env import set_host_device_count
+
+# Multi-pod dry-run default: 512 forced host devices.  A caller-forced
+# count wins (the CI sharded-serving smoke sets 8 in XLA_FLAGS before this
+# module is imported for its cost model) — only fill the default in when no
+# forced count is present, and preserve unrelated XLA flags either way.
+if ("--xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    set_host_device_count(512)
+# Test hook only — must also run before any jax import; overrides both.
 if os.environ.get("REPRO_DRYRUN_DEVICES"):
-    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
-                               + os.environ["REPRO_DRYRUN_DEVICES"])
+    set_host_device_count(int(os.environ["REPRO_DRYRUN_DEVICES"]))
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
 extract the roofline terms from the compiled artifact.
@@ -86,6 +93,30 @@ def collective_bytes(hlo_text: str) -> dict:
     out["total"] = sum(out[o] for o in _COLL_OPS)
     out["counts"] = counts
     return out
+
+
+def tp_allreduce_model(cfg: ModelConfig, *, batch: int, seq: int, tp: int,
+                       dtype_bytes: int = 4, ici_bw: float | None = None
+                       ) -> dict:
+    """Analytic per-layer all-reduce cost of tensor-parallel serving.
+
+    The shard_map serving path (sharding/serving.py) psums exactly TWO
+    (batch, seq, d_model) partial outputs per dense layer — one after the
+    row-parallel attention out-projection, one after the row-parallel MLP
+    down-projection — and nothing else crosses devices.  A ring all-reduce
+    moves ``2*(tp-1)/tp`` of the payload per device (reduce-scatter +
+    all-gather), which matches how :func:`collective_bytes` accounts the
+    HLO (full shape, doubled), so the two sides are directly comparable.
+    """
+    payload = batch * seq * cfg.d_model * dtype_bytes
+    ring = 2.0 * (tp - 1) / tp if tp > 1 else 0.0
+    per_device = 2 * cfg.num_layers * ring * payload
+    return {
+        "tp": tp, "allreduces_per_layer": 2, "layers": cfg.num_layers,
+        "payload_bytes": payload,
+        "per_device_bytes": per_device,
+        "predicted_s": per_device / (ici_bw or HW["ici_bw"]),
+    }
 
 
 def analyze(compiled) -> dict:

@@ -1,0 +1,48 @@
+"""Computation-environment configuration for the serving entry points.
+
+Backend portability knobs that must be applied BEFORE jax initializes its
+backend: the platform override and the forced host (CPU) device count the
+TP serving mesh shards over.  ``launch/serve.py`` calls :func:`configure`
+at the very top of ``main()`` — jax's backend init is lazy, so setting the
+environment there (before the first array op) is sufficient; on a real
+TPU/GPU host both knobs default to no-ops and the hardware devices are used
+unchanged.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def set_platform(platform: str) -> None:
+    """Pin the jax backend ('cpu' | 'gpu' | 'tpu').
+
+    Only takes effect before jax initializes; an already-initialized
+    conflicting backend surfaces as a clear RuntimeError from jax itself.
+    """
+    os.environ["JAX_PLATFORMS"] = platform
+
+
+def set_host_device_count(n: int) -> None:
+    """Force ``n`` virtual host (CPU) devices for mesh/shard_map testing.
+
+    Appends to any existing ``XLA_FLAGS`` (dropping a previous forced count)
+    so flags like dump directives survive.  CI uses this to run the tp=2/4
+    serving meshes on a single CPU host.
+    """
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"host device count must be >= 1, got {n}")
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={n}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)
+
+
+def configure(platform: str | None = None,
+              host_devices: int | None = None) -> None:
+    """Apply the environment setup the serving CLI exposes as flags."""
+    if platform:
+        set_platform(platform)
+    if host_devices:
+        set_host_device_count(host_devices)

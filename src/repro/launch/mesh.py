@@ -3,17 +3,35 @@ module never touches jax device state."""
 
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 try:  # jax >= 0.5: explicit-sharding API takes per-axis types
     from jax.sharding import AxisType
 
-    def _mk(shape, axes):
+    def _make(shape, axes):
         return jax.make_mesh(shape, axes,
                              axis_types=(AxisType.Auto,) * len(axes))
 except ImportError:  # older jax: every mesh axis is implicitly Auto
-    def _mk(shape, axes):
+    def _make(shape, axes):
         return jax.make_mesh(shape, axes)
+
+
+def _mk(shape, axes):
+    """Build a mesh, failing with an actionable message (not an XLA assert)
+    when the axis product exceeds the visible device count."""
+    need = math.prod(shape)
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {need} devices but only "
+            f"{have} are visible; on CPU force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"(must be set before jax initializes — see launch/env.py)")
+    return _make(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -32,10 +50,34 @@ def make_tiny_mesh(*, multi_pod: bool = False):
     return _mk(shape, axes)
 
 
+def make_serving_mesh(tp: int | None = None) -> Mesh:
+    """1-D ``('model',)`` tensor-parallel serving mesh over the first ``tp``
+    devices (default: every visible device).
+
+    Device-count-adaptive — unlike the hard-coded 16x16 production shapes,
+    the same call works on a laptop CPU (tp=1), a forced-8-device CI host,
+    or a real accelerator slice.  Raises a clear ``ValueError`` (never an
+    XLA assert) when ``tp`` does not fit the visible devices.
+    """
+    have = jax.device_count()
+    if tp is None:
+        tp = have
+    if tp < 1:
+        raise ValueError(f"serving mesh needs tp >= 1, got tp={tp}")
+    if tp > have:
+        raise ValueError(
+            f"serving mesh tp={tp} exceeds the {have} visible device(s); "
+            f"on CPU force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp} "
+            f"(must be set before jax initializes — see launch/env.py)")
+    return Mesh(np.asarray(jax.devices()[:tp]), ("model",))
+
+
 def make_mesh_by_name(name: str):
     return {
         "prod": lambda: make_production_mesh(multi_pod=False),
         "pod": lambda: make_production_mesh(multi_pod=True),
         "tiny": lambda: make_tiny_mesh(multi_pod=False),
         "tiny_pod": lambda: make_tiny_mesh(multi_pod=True),
+        "serving": lambda: make_serving_mesh(),
     }[name]()

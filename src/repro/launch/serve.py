@@ -104,7 +104,27 @@ def main():
     ft.add_argument("--nan-retry-limit", type=int, default=3,
                     help="consecutive non-finite decode ticks before a slot "
                          "is quarantined (request fails with 'nan')")
+    tp = ap.add_argument_group("tensor parallelism")
+    tp.add_argument("--tp", type=int, default=None,
+                    help="shard the model over a 1-D ('model',) serving "
+                         "mesh of this many devices: column-parallel "
+                         "in-projections, row-parallel out-projections, "
+                         "KV heads partitioned per device, one all-reduce "
+                         "per projection pair (sharding/serving.py)")
+    tp.add_argument("--mesh", action="store_true",
+                    help="shorthand for --tp <all visible devices>")
+    tp.add_argument("--platform", default=None,
+                    help="pin the jax backend (cpu|gpu|tpu); applied before "
+                         "jax initializes")
+    tp.add_argument("--host-devices", type=int, default=None,
+                    help="force N virtual CPU devices (XLA host platform "
+                         "device count) — lets --tp run on a single CPU "
+                         "host, e.g. --platform cpu --host-devices 8 --tp 4")
     args = ap.parse_args()
+    # environment knobs must land before jax touches its backend (its init
+    # is lazy, so nothing above has triggered it)
+    from repro.launch.env import configure
+    configure(platform=args.platform, host_devices=args.host_devices)
     if args.prefix_cache:
         args.paged = True
     supervised = (args.inject_faults or args.ttl_ticks is not None
@@ -131,13 +151,22 @@ def main():
         params = quantize_params(params, qcfg, stats_by_path=stats)
         print(f"quantized with {args.quantize}/{args.bits} rank {args.rank}")
 
+    mesh = None
+    if args.mesh or (args.tp is not None and args.tp > 1):
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.tp)
+        print(f"tensor parallel: tp={mesh.shape['model']} over "
+              f"{jax.device_count()} visible {jax.default_backend()} "
+              f"device(s)")
+
     batcher = ContinuousBatcher(params, cfg, num_slots=args.slots,
                                 max_len=args.max_len,
                                 chunk_tokens=args.chunk_tokens,
                                 paged=args.paged, page_size=args.page_size,
                                 num_pages=args.num_pages,
                                 prefix_cache=args.prefix_cache,
-                                nan_retry_limit=args.nan_retry_limit)
+                                nan_retry_limit=args.nan_retry_limit,
+                                mesh=mesh)
     rng = np.random.default_rng(7)
     # shared few-shot preamble on half the requests so --prefix-cache has
     # real hits to report (production traffic is dominated by shared

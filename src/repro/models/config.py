@@ -84,6 +84,13 @@ class ModelConfig:
     mesh_axes: tuple = ()            # ((name, size), ...) for act constraints
     use_pallas: bool = False         # kernels in the serving path (TPU)
 
+    # serving tensor parallelism (sharding/serving.py): > 1 means this config
+    # describes the PER-DEVICE shard of a shard_map'd forward — heads/d_ff are
+    # already divided by tp_size and every row-parallel (out-projection)
+    # partial output is psum'd over ``tp_axis`` in the block residual.
+    tp_size: int = 1
+    tp_axis: str = "model"
+
     @property
     def hd(self) -> int:
         return self.head_dim or self.d_model // self.num_heads

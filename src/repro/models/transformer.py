@@ -180,6 +180,12 @@ def _dense_block(cfg: ModelConfig, p, x, angles, cache=None, cache_len=None,
         python_loop=cfg.chunk_python_loop, cache=cache,
         cache_len=cache_len, page_table=page_table, constrain=constrain,
         taps=taps, prefix=f"{prefix}attn/", use_pallas=cfg.use_pallas)
+    if cfg.tp_size > 1:
+        # tensor-parallel serving (sharding/serving.py): heads are sharded,
+        # so the row-parallel wo output is a partial sum — the ONE attention
+        # all-reduce lives here, covering the quantized and low-rank terms
+        # of the fused kernel together (lora_b is replicated on out-projs).
+        attn_out = jax.lax.psum(attn_out, cfg.tp_axis)
     x = x + cfg.residual_scale * attn_out
     aux = jnp.zeros((), jnp.float32)
 
@@ -192,6 +198,8 @@ def _dense_block(cfg: ModelConfig, p, x, angles, cache=None, cache_len=None,
     else:
         mlp_out = swiglu(p, h, taps=taps, prefix=f"{prefix}mlp/",
                          use_pallas=cfg.use_pallas, constrain=constrain)
+    if cfg.tp_size > 1:
+        mlp_out = jax.lax.psum(mlp_out, cfg.tp_axis)  # row-parallel wd
     x = x + cfg.residual_scale * mlp_out
     return x, new_cache, aux
 

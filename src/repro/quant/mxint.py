@@ -229,3 +229,68 @@ def unpack_mxint(p: PackedMXINT, dtype=jnp.float32) -> jax.Array:
     mant = unpack_mantissa(p.mant, p.bits, m) if p.packed else p.mant
     mant = mant.reshape(*mant.shape[:-2], m // p.block_size, p.block_size, n)
     return mxint_dequantize(mant, p.exp, p.bits, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel shard validity (sharding/serving.py uses these to place the
+# packed buffers on a mesh without ever splitting a byte or exponent block)
+# ---------------------------------------------------------------------------
+
+def packed_shard_granule(bits: int, block_size: int) -> int:
+    """Smallest input-dim (K) granule a row-parallel shard must be a multiple
+    of: lcm(block_size, 8 * epb).
+
+    block_size keeps every shard's exponent blocks whole (an exponent is
+    shared by a block of K rows — splitting one across devices would need a
+    cross-device dequant); 8 * epb keeps whole packed bytes per shard AND
+    leaves the per-shard packed tile (K_local / epb rows) 8-sublane-aligned,
+    so the single-device Pallas layout stays valid verbatim on each shard.
+    Column (N) sharding has no granule beyond lane alignment: packing runs
+    along K, so splitting columns never divides a byte or a block.
+    """
+    import math
+    return math.lcm(block_size, 8 * elems_per_byte(bits))
+
+
+def validate_packed_sharding(k: int, tp: int, bits: int, block_size: int, *,
+                             name: str = "") -> int:
+    """Check a K=``k`` packed buffer can shard row-parallel ``tp`` ways;
+    returns the local K.  Raises a clear ValueError (layer name included)
+    instead of letting an off-granule shard reach the kernel."""
+    what = f" for {name}" if name else ""
+    if k % tp:
+        raise ValueError(
+            f"K={k}{what} does not divide across tp={tp} devices")
+    g = packed_shard_granule(bits, block_size)
+    if (k // tp) % g:
+        raise ValueError(
+            f"row-parallel shard K/tp={k // tp}{what} is not a multiple of "
+            f"the packed granule {g} (= lcm(block_size={block_size}, "
+            f"8*epb={8 * elems_per_byte(bits)})): a shard would split an "
+            f"exponent block or a packed byte, or break 8-sublane alignment")
+    return k // tp
+
+
+def shard_packed(p: PackedMXINT, tp: int, axis: str) -> list[PackedMXINT]:
+    """Split a packed buffer into ``tp`` per-device shards ("row" splits K,
+    "column" splits N), each a valid standalone PackedMXINT the fused kernel
+    consumes unchanged.  Reference implementation for tests and snapshot
+    tooling; the serving path shards lazily via NamedSharding device_put."""
+    k, n = p.shape
+    if axis == "column":
+        if n % tp:
+            raise ValueError(f"N={n} does not divide across tp={tp} devices")
+        step = n // tp
+        return [PackedMXINT(p.mant[..., :, d * step:(d + 1) * step],
+                            p.exp[..., :, d * step:(d + 1) * step],
+                            p.bits, p.block_size, (k, step), p.packed)
+                for d in range(tp)]
+    if axis != "row":
+        raise ValueError(f"axis must be 'row' or 'column', got {axis!r}")
+    k_loc = validate_packed_sharding(k, tp, p.bits, p.block_size)
+    mstep = k_loc // (elems_per_byte(p.bits) if p.packed else 1)
+    estep = k_loc // p.block_size
+    return [PackedMXINT(p.mant[..., d * mstep:(d + 1) * mstep, :],
+                        p.exp[..., d * estep:(d + 1) * estep, :],
+                        p.bits, p.block_size, (k_loc, n), p.packed)
+            for d in range(tp)]

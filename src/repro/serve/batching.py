@@ -187,8 +187,26 @@ class ContinuousBatcher:
                  max_len: int = 256, paged: bool = False, page_size: int = 32,
                  num_pages: int | None = None, chunk_tokens: int = 64,
                  prefix_cache: bool = False, fault_injector: Any = None,
-                 nan_guard: bool = True, nan_retry_limit: int = 3):
+                 nan_guard: bool = True, nan_retry_limit: int = 3,
+                 mesh: Any = None):
         self.params, self.cfg = params, cfg
+        # tensor parallelism: a 1-D ('model',) serving mesh shard_maps every
+        # forward-calling step — decode and chunked prefill — so each device
+        # runs its own Pallas launches on its KV-head/d_ff shard
+        # (sharding/serving.py).  ALL host logic (admission, page tables,
+        # PagePool, PrefixIndex, NaN sentinel) is shard-agnostic and runs
+        # unchanged; the data-movement helpers (place/restore/zero/fork/
+        # get/set rows) never index the sharded heads axis, so they stay
+        # plain jit and GSPMD partitions them communication-free.
+        self.plan = None
+        if mesh is not None:
+            from repro.sharding.serving import plan_for
+            plan = plan_for(cfg, mesh)
+            if plan.tp > 1:
+                self.plan = plan
+                params = plan.shard_params(params)
+                self.params = params
+        step_cfg = self.plan.local_cfg if self.plan is not None else cfg
         self.paged = paged
         self.chunk_tokens = chunk_tokens
         self.prefix: PrefixIndex | None = None
@@ -220,7 +238,6 @@ class ContinuousBatcher:
         self.lengths = np.zeros(num_slots, np.int32)
         self.slot_req: list[Request | None] = [None] * num_slots
         self.last_tok = np.zeros(num_slots, np.int32)
-        self._decode = jax.jit(make_decode_step(cfg))
         # donate the big cache so admission/restore are true in-place writes
         # (no full-cache copy); CPU ignores donation, so only request it on
         # backends that implement it to avoid per-call warnings.
@@ -242,8 +259,19 @@ class ContinuousBatcher:
             self.slot_pages: list[list[int]] = [[] for _ in range(num_slots)]
             self._starved: list[int] = []    # slots paused on the last tick
             self._has_slot_rows = has_slot_rows(self.cache)
-            self._chunk = jax.jit(make_chunk_prefill(cfg, num_slots),
-                                  donate_argnums=(1,) if donate else ())
+            if self.plan is not None:
+                from jax.sharding import PartitionSpec as P
+                cspecs = self.plan.cache_specs(self.cache)
+                self.cache = self.plan.shard_cache(self.cache)
+                self._chunk = self.plan.sjit(
+                    make_chunk_prefill(step_cfg, num_slots),
+                    in_specs=(self.plan.param_specs(params), cspecs,
+                              P(None, None), P(None), P(), P()),
+                    out_specs=(P(), cspecs),
+                    donate_argnums=(1,) if donate else ())
+            else:
+                self._chunk = jax.jit(make_chunk_prefill(cfg, num_slots),
+                                      donate_argnums=(1,) if donate else ())
             self._zero = jax.jit(make_zero_slot(num_slots),
                                  donate_argnums=(0,) if donate else ())
             self._restore = jax.jit(make_restore_slot(num_slots),
@@ -259,8 +287,22 @@ class ContinuousBatcher:
                         donate_argnums=(0,) if donate else ())
         else:
             self.cache = init_cache(cfg, num_slots, max_len)
-            self._chunk = jax.jit(make_chunk_step(cfg),
-                                  donate_argnums=(1,) if donate else ())
+            if self.plan is not None:
+                from jax.sharding import PartitionSpec as P
+                # dense cache and the batch=1 admission scratch share one
+                # structural spec tree (sharding is on the KV-heads axis,
+                # batch extent is irrelevant)
+                cspecs = self.plan.cache_specs(self.cache)
+                self.cache = self.plan.shard_cache(self.cache)
+                self._chunk = self.plan.sjit(
+                    make_chunk_step(step_cfg),
+                    in_specs=(self.plan.param_specs(params), cspecs,
+                              P(None, None), P()),
+                    out_specs=(P(), cspecs),
+                    donate_argnums=(1,) if donate else ())
+            else:
+                self._chunk = jax.jit(make_chunk_step(cfg),
+                                      donate_argnums=(1,) if donate else ())
             self._place = jax.jit(make_place_slot(num_slots),
                                   donate_argnums=(0,) if donate else ())
             # the NaN sentinel rolls a poisoned slot back one token; in
@@ -268,6 +310,18 @@ class ContinuousBatcher:
             # re-written identically on the re-decode)
             self._restore = jax.jit(make_restore_slot(num_slots),
                                     donate_argnums=(0,) if donate else ())
+        if self.plan is not None:
+            from jax.sharding import PartitionSpec as P
+            dspecs = self.plan.cache_specs(self.cache)
+            if paged:
+                dspecs = {**dspecs, "page_table": P(None, None)}
+            self._decode = self.plan.sjit(
+                make_decode_step(step_cfg),
+                in_specs=(self.plan.param_specs(params), dspecs,
+                          P(None, None), P(None)),
+                out_specs=(P(None, None, None), dspecs))
+        else:
+            self._decode = jax.jit(make_decode_step(cfg))
         self.queue: deque[Request] = deque()
         self._adm: _Admission | None = None
         self.admission_rollbacks = 0       # pool ran dry mid-prefill

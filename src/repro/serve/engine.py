@@ -123,11 +123,10 @@ def make_chunk_step(cfg: ModelConfig) -> Callable:
     return chunk_step
 
 
-@partial(jax.jit, static_argnames=("cfg", "steps", "max_len", "has_eos",
-                                   "page_size", "prefill_chunk"))
-def _scan_generate(params, prompt: jax.Array, eos_tok: jax.Array, *,
-                   cfg: ModelConfig, steps: int, max_len: int, has_eos: bool,
-                   page_size: int = 0, prefill_chunk: int = 0):
+def _scan_generate_impl(params, prompt: jax.Array, eos_tok: jax.Array, *,
+                        cfg: ModelConfig, steps: int, max_len: int,
+                        has_eos: bool, page_size: int = 0,
+                        prefill_chunk: int = 0):
     """One-compile greedy rollout: prefill + a ``lax.scan`` over decode steps.
 
     Everything stays on device — argmax, eos masking, cache updates — so an
@@ -186,14 +185,24 @@ def _scan_generate(params, prompt: jax.Array, eos_tok: jax.Array, *,
     return jnp.concatenate([tok0[:, None], toks.T], axis=1)
 
 
+_scan_generate = partial(jax.jit, static_argnames=(
+    "cfg", "steps", "max_len", "has_eos", "page_size", "prefill_chunk",
+))(_scan_generate_impl)
+
+
 def scan_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
                   max_len: int | None = None, eos_id: int | None = None,
-                  page_size: int = 0, prefill_chunk: int = 0):
+                  page_size: int = 0, prefill_chunk: int = 0, mesh=None):
     """Fused greedy decoding: compiles once per (shape, steps), returns the
     (B, steps) token matrix with no per-token host sync.  ``page_size`` > 0
     prefills straight into the paged KV pool (chunked by ``prefill_chunk``;
     0 = one chunk) and routes every decode step through the Pallas
-    decode-attention kernel (see serve/paging.py)."""
+    decode-attention kernel (see serve/paging.py).
+
+    ``mesh`` (a 1-D ``('model',)`` serving mesh, see launch/mesh.py) runs
+    the whole rollout tensor-parallel under shard_map: each device prefills
+    and decodes its own KV-head shard with its own Pallas launches and the
+    per-layer psums are the only collectives (sharding/serving.py)."""
     _, s = prompt.shape
     eos_tok = jnp.asarray(0 if eos_id is None else eos_id, jnp.int32)
     max_len = max_len or (s + steps)
@@ -206,6 +215,12 @@ def scan_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
             f"tokens; raise max_len or lower steps")
     if page_size:
         max_len = -(-max_len // page_size) * page_size
+    if mesh is not None:
+        from repro.sharding.serving import plan_for, tp_scan_generate
+        return tp_scan_generate(
+            plan_for(cfg, mesh), params, prompt, eos_tok, steps=steps,
+            max_len=max_len, has_eos=eos_id is not None,
+            page_size=page_size, prefill_chunk=prefill_chunk)
     return _scan_generate(params, prompt, eos_tok, cfg=cfg, steps=steps,
                           max_len=max_len, has_eos=eos_id is not None,
                           page_size=page_size, prefill_chunk=prefill_chunk)

@@ -119,7 +119,14 @@ def capture_state(batcher: ContinuousBatcher) -> tuple[dict, dict]:
             "prefix_cache": b.prefix is not None,
             "nan_guard": b.nan_guard, "nan_retry_limit": b.nan_retry_limit,
             "family": b.cfg.family,
+            "tp": b.plan.tp if b.plan is not None else 1,
         },
+        # tensor-parallel batchers record the serving-mesh spec and store
+        # every SHARDED cache leaf as a stacked (tp, ...) array of its
+        # per-device shards (see ServingPlan.to_host_shards) — restore
+        # validates shard compatibility instead of silently reassembling
+        # onto a mismatched mesh
+        "mesh": b.plan.mesh_spec() if b.plan is not None else None,
         "tick": b.tick_count,
         "lengths": b.lengths.tolist(),
         "last_tok": b.last_tok.tolist(),
@@ -136,6 +143,9 @@ def capture_state(batcher: ContinuousBatcher) -> tuple[dict, dict]:
         },
     }
     dev: dict[str, Any] = {"cache": b.cache}
+    if b.plan is not None:
+        dev["cache"] = b.plan.to_host_shards(b.cache,
+                                             b.plan.cache_specs(b.cache))
     if b.paged:
         host["page_table"] = b.page_table.tolist()
         host["slot_pages"] = [list(p) for p in b.slot_pages]
@@ -157,6 +167,9 @@ def capture_state(batcher: ContinuousBatcher) -> tuple[dict, dict]:
         }
         if adm.cache1 is not None:
             dev["adm_cache1"] = adm.cache1
+            if b.plan is not None:
+                dev["adm_cache1"] = b.plan.to_host_shards(
+                    adm.cache1, b.plan.cache_specs(adm.cache1))
     else:
         host["adm"] = None
     return host, dev
@@ -174,6 +187,18 @@ def apply_state(batcher: ContinuousBatcher, host: dict, dev: dict,
     g = host["geometry"]
     assert g["num_slots"] == b.b and g["max_len"] == b.max_len \
         and g["paged"] == b.paged, "snapshot/batcher geometry mismatch"
+    # shard compatibility: a snapshot taken at tp=N stores per-shard cache
+    # leaves — restoring into a batcher on a different mesh would misread
+    # the stacked shard axis, so fail loudly with the fix spelled out.
+    # ``.get`` keeps pre-TP snapshots (no "tp" key) restorable at tp=1.
+    snap_tp = g.get("tp", 1)
+    have_tp = b.plan.tp if b.plan is not None else 1
+    if snap_tp != have_tp:
+        raise ValueError(
+            f"snapshot was taken on a tp={snap_tp} serving mesh but this "
+            f"batcher runs tp={have_tp}; rebuild the batcher with "
+            f"mesh=make_serving_mesh(tp={snap_tp}) to restore it "
+            f"(mesh spec in snapshot: {host.get('mesh')})")
     requests = dict(requests or {})
     by_rid: dict[int, Request] = {}
     for rs in host["requests"]:
@@ -213,18 +238,31 @@ def apply_state(batcher: ContinuousBatcher, host: dict, dev: dict,
                                                     "misses": 0,
                                                     "hit_tokens": 0}),
                                 dev.get("prefix_state", {}))
-    b.cache = jax.tree.map(jnp.asarray, dev["cache"])
+    if b.plan is not None:
+        # specs come from the live batcher cache — the snapshot tree has the
+        # extra leading (tp,) shard axis, so it can't describe itself
+        cspecs = b.plan.cache_specs(b.cache)
+        b.cache = b.plan.from_host_shards(dev["cache"], cspecs)
+    else:
+        b.cache = jax.tree.map(jnp.asarray, dev["cache"])
     a = host["adm"]
     if a is None:
         b._adm = None
     else:
+        if a["has_cache1"]:
+            if b.plan is not None:
+                # dense scratch shares the dense cache's structural specs
+                cache1 = b.plan.from_host_shards(dev["adm_cache1"], cspecs)
+            else:
+                cache1 = jax.tree.map(jnp.asarray, dev["adm_cache1"])
+        else:
+            cache1 = None
         b._adm = _Admission(
             req=by_rid[a["rid"]], slot=a["slot"], plan=list(a["plan"]),
             done=a["done"], registered=a["registered"],
             hashes=([bytes.fromhex(h) for h in a["hashes"]]
                     if a["hashes"] is not None else None),
-            cache1=(jax.tree.map(jnp.asarray, dev["adm_cache1"])
-                    if a["has_cache1"] else None))
+            cache1=cache1)
     return by_rid
 
 
@@ -240,11 +278,15 @@ def save_snapshot(manager: CheckpointManager,
 def load_snapshot(manager: CheckpointManager, params: Any, cfg: Any, *,
                   step: int | None = None,
                   requests: dict[int, Request] | None = None,
-                  fault_injector: Any = None
+                  fault_injector: Any = None, mesh: Any = None
                   ) -> tuple[ContinuousBatcher, dict[int, Request]]:
     """Rebuild a batcher (fresh process) from the newest (or given)
     snapshot.  Returns (batcher, rid -> Request) — resuming ``run()`` on the
-    result continues every in-flight stream token-identically."""
+    result continues every in-flight stream token-identically.
+
+    A snapshot taken on a tp>1 serving mesh must be given a compatible
+    ``mesh`` (same tp extent) — ``apply_state`` validates and raises
+    otherwise; a pre-TP snapshot restores with ``mesh=None`` unchanged."""
     _, dev, host = manager.restore(step)
     g = host["geometry"]
     batcher = ContinuousBatcher(
@@ -252,7 +294,8 @@ def load_snapshot(manager: CheckpointManager, params: Any, cfg: Any, *,
         paged=g["paged"], page_size=g["page_size"] or 32,
         num_pages=g["num_pages"] or None, chunk_tokens=g["chunk_tokens"],
         prefix_cache=g["prefix_cache"], fault_injector=fault_injector,
-        nan_guard=g["nan_guard"], nan_retry_limit=g["nan_retry_limit"])
+        nan_guard=g["nan_guard"], nan_retry_limit=g["nan_retry_limit"],
+        mesh=mesh)
     by_rid = apply_state(batcher, host, dev, requests)
     return batcher, by_rid
 

@@ -1,3 +1,17 @@
+"""Sharding: training-time logical-axis rules and serving-time tensor
+parallelism.
+
+- ``rules.py`` — the training scheme (TP x FSDP x DP over 'model' / 'data'
+  / 'pod'), param path -> PartitionSpec via the IN_PROJS/OUT_PROJS naming
+  contract.
+- ``serving.py`` — tensor-parallel *serving* over a 1-D ('model',) mesh:
+  shards the packed MXINT + low-rank serving params, the paged KV pool, and
+  the decode/prefill step functions under ``shard_map`` so every device
+  runs its own fused Pallas launch with exactly one all-reduce per
+  in/out-projection pair.  Entry points: ``plan_for(cfg, mesh)`` ->
+  ``ServingPlan``.
+"""
+
 from repro.sharding.rules import (
     batch_axes,
     batch_spec,
@@ -8,4 +22,14 @@ from repro.sharding.rules import (
     rwkv_cache_specs,
     ssm_cache_specs,
     with_mesh,
+)
+from repro.sharding.serving import (
+    ServingPlan,
+    plan_for,
+    serving_cache_specs,
+    serving_param_specs,
+    shard_map_compat,
+    tp_local_cfg,
+    tp_role,
+    validate_tp,
 )

@@ -8,6 +8,12 @@ moments inherit the param spec -> fully-sharded optimizer states for free.
 Naming contract with models/*: in-projections end in one of IN_PROJS (wide
 axis LAST), out-projections in OUT_PROJS (wide axis FIRST); everything small
 (norms, biases, routers, decay vectors) replicates.
+
+Serving-time tensor parallelism (``sharding/serving.py``) reuses the same
+IN_PROJS/OUT_PROJS contract over a 1-D ('model',) mesh, but shards the
+*packed* serving leaves (mant/exp/lora_a/lora_b) Megatron-style instead:
+column-parallel in-projections, row-parallel out-projections, one psum per
+projection pair.  These rules stay the training/eval scheme.
 """
 
 from __future__ import annotations

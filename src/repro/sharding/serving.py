@@ -1,0 +1,345 @@
+"""Serving-time tensor parallelism: one 1-D ``('model',)`` mesh, shard_map,
+and exactly one all-reduce per projection pair.
+
+Training sharding (``sharding/rules.py``) lets GSPMD place every op from
+logical-axis PartitionSpecs.  Serving cannot: the fused MXINT matmul and the
+paged-attention kernels are single Pallas launches GSPMD will not split, so
+TP serving uses ``shard_map`` instead — every device runs its OWN Pallas
+launch on its local shard, and the only cross-device traffic is an explicit
+``psum``.  This module is the single source of truth for that layout:
+
+Parameters (the ``rules.py`` naming contract, folded onto one axis):
+  * in-projections (``IN_PROJS``: wq/wk/wv/wg/wu/... — wide axis LAST) are
+    **column-parallel**: weight / ``w_tilde`` / packed ``mant`` / ``exp`` /
+    ``lora_b`` shard their LAST axis; ``lora_a`` replicates.  Mantissa
+    packing runs along K, so a column split never divides a packed byte or
+    an exponent block.
+  * out-projections (``OUT_PROJS``: wo/wd/... — wide axis FIRST) are
+    **row-parallel**: weight / ``w_tilde`` / ``mant`` / ``exp`` / ``lora_a``
+    shard their K axis; ``lora_b`` replicates.  Row shards must keep whole
+    exponent blocks, whole packed bytes, and 8-sublane alignment —
+    ``quant.mxint.validate_packed_sharding`` enforces K/tp % lcm(block_size,
+    8*epb) == 0 with a clear error.
+  * everything else (embeddings, lm_head, norms, scalar packed metadata)
+    replicates.
+
+Activations: the residual stream stays replicated.  A column-parallel
+in-projection emits head-sharded q/k/v; attention and the row-parallel
+out-projection then produce a PARTIAL (B, S, D) output whose ``psum`` lives
+in ``models/transformer._dense_block`` — one all-reduce after attention
+(wo) and one after the MLP (wd), two per layer, none inside any kernel.
+Since ``lora_b`` is replicated on row-parallel layers,
+``sum_d((x_d @ A_d) @ B) == (sum_d(x_d @ A_d)) @ B`` — the fused in-kernel
+low-rank epilogue stays valid per shard and the block-level psum covers the
+quantized and low-rank terms together.
+
+KV cache: dense ``k``/``v`` (L, B, KVH, S, hd) and paged ``k_pages``/
+``v_pages`` (L, P, KVH, page_size, hd) shard the KV-HEADS axis (index 2) on
+'model' — each device owns the pages for its heads.  The page table,
+``PagePool`` refcounts, and the ``PrefixIndex`` hash-chain are host-local
+integers describing page IDENTITY, not content, so every CoW/prefix/
+scheduler decision is shard-agnostic and carries over untouched; the slot
+data-movement helpers (place/restore/zero/fork) never index the heads axis
+and partition communication-free under plain jit.
+
+Inside shard_map the model runs with a LOCAL config
+(:func:`tp_local_cfg`): heads, kv-heads and d_ff divided by tp, head_dim
+pinned (it would otherwise re-derive from the unsharded d_model), and
+``tp_size``/``tp_axis`` set so the block residual knows to psum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.quant.mxint import validate_packed_sharding
+from repro.sharding.rules import IN_PROJS, OUT_PROJS
+from repro.utils.trees import flatten_dict, unflatten_dict
+
+TP_AXIS = "model"
+
+# leaf-name suffixes of a quantized / packed linear group
+_QUANT_SUFFIXES = ("w_tilde", "lora_a", "lora_b", "mant", "exp", "bits",
+                   "block_size")
+_KV_LEAVES = ("k", "v", "k_pages", "v_pages")
+
+
+def shard_map_compat(fn, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions, replication checking off (Pallas
+    calls and explicit psums confuse the rep checker)."""
+    try:
+        from jax import shard_map as _sm  # jax >= 0.6
+        try:
+            return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+        except TypeError:
+            return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _sm
+        return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# roles and specs
+# ---------------------------------------------------------------------------
+
+
+def tp_role(path: str) -> str:
+    """'column' | 'row' | 'replicated' for a flattened param path, per the
+    rules.py suffix naming contract (quant suffixes see their parent)."""
+    parts = path.split("/")
+    name = parts[-1]
+    if name in _QUANT_SUFFIXES and len(parts) > 1:
+        name = parts[-2]
+    if name in IN_PROJS:
+        return "column"
+    if name in OUT_PROJS:
+        return "row"
+    return "replicated"
+
+
+def validate_tp(cfg: ModelConfig, tp: int) -> None:
+    """Config-level shardability; raises a clear ValueError, never an XLA
+    assert.  Serving TP covers the dense family (the paper's PTQ targets);
+    other families keep their single-device serving path."""
+    if tp <= 1:
+        return
+    if cfg.family != "dense":
+        raise ValueError(
+            f"tensor-parallel serving supports the dense family only "
+            f"(got family={cfg.family!r}); run {cfg.family!r} configs at "
+            f"tp=1")
+    for what, dim in (("num_heads", cfg.num_heads),
+                      ("num_kv_heads", cfg.num_kv_heads),
+                      ("d_ff", cfg.d_ff)):
+        if dim % tp:
+            raise ValueError(
+                f"{what}={dim} does not divide across tp={tp} devices "
+                f"(config {cfg.name!r})")
+
+
+def tp_local_cfg(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """The PER-DEVICE config the model runs with inside shard_map.
+
+    head_dim must be pinned to the global ``cfg.hd``: the local head count
+    changes, so the ``d_model // num_heads`` fallback would silently give
+    each shard fatter heads.
+    """
+    if tp <= 1:
+        return cfg
+    return dataclasses.replace(
+        cfg, num_heads=cfg.num_heads // tp,
+        num_kv_heads=cfg.num_kv_heads // tp,
+        d_ff=cfg.d_ff // tp, head_dim=cfg.hd,
+        tp_size=tp, tp_axis=TP_AXIS)
+
+
+def serving_param_spec(path: str, leaf: Any) -> P:
+    """PartitionSpec of one param leaf on the 1-D serving mesh."""
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    if ndim == 0:                       # packed metadata scalars (bits, bs)
+        return P()
+    parts = path.split("/")
+    name = parts[-1]
+    stacked = 1 if parts[0] == "blocks" and ndim > 2 else 0
+    role = tp_role(path)
+    if role == "replicated" or name == "lora_a" and role == "column" \
+            or name == "lora_b" and role == "row":
+        return P(*(None,) * ndim)
+    lead = (None,) * stacked
+    if role == "column":                # wide axis LAST: shard N
+        return P(*lead, *(None,) * (ndim - stacked - 1), TP_AXIS)
+    # row-parallel: shard the K axis (second-to-last for 2-D leaves)
+    return P(*lead, *(None,) * (ndim - stacked - 2), TP_AXIS, None)
+
+
+def serving_param_specs(params: Mapping[str, Any], tp: int) -> dict:
+    """Whole-tree specs + per-leaf divisibility validation.
+
+    Checks every sharded axis divides ``tp``; quantized row-parallel groups
+    additionally go through ``validate_packed_sharding`` (whole exponent
+    blocks / packed bytes / 8-sublane alignment per shard).
+    """
+    flat = flatten_dict(dict(params))
+    out: dict[str, P] = {}
+    for path, leaf in flat.items():
+        spec = serving_param_spec(path, leaf)
+        out[path] = spec
+        if tp <= 1:
+            continue
+        for ax, s in enumerate(spec):
+            if s == TP_AXIS and leaf.shape[ax] % tp:
+                raise ValueError(
+                    f"param {path!r} axis {ax} (size {leaf.shape[ax]}) does "
+                    f"not divide across tp={tp} devices")
+        if path.endswith("/mant") and tp_role(path) == "row":
+            parent = path.rsplit("/", 1)[0]
+            bits = int(np.asarray(flat[f"{parent}/bits"]))
+            bs = int(np.asarray(flat[f"{parent}/block_size"]))
+            k = flat[f"{parent}/lora_a"].shape[-2]
+            validate_packed_sharding(k, tp, bits, bs, name=parent)
+    return unflatten_dict(out)
+
+
+def serving_cache_spec(path: str, leaf: Any) -> P:
+    """Cache-leaf spec: K/V (dense rows or page pool) shard the KV-heads
+    axis; the page table and scalar leaves replicate."""
+    name = path.rsplit("/", 1)[-1]
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    if name in _KV_LEAVES:
+        if ndim != 5:
+            raise ValueError(
+                f"cache leaf {path!r} has ndim={ndim}, expected 5 "
+                f"(L, B|P, KVH, S|page_size, hd)")
+        return P(None, None, TP_AXIS, None, None)
+    if name == "page_table":
+        return P(*(None,) * ndim)
+    raise ValueError(
+        f"cache leaf {path!r} has no TP sharding rule — tensor-parallel "
+        f"serving covers dense K/V caches only")
+
+
+def serving_cache_specs(cache: Mapping[str, Any]) -> dict:
+    flat = flatten_dict(dict(cache))
+    return unflatten_dict(
+        {p: serving_cache_spec(p, leaf) for p, leaf in flat.items()})
+
+
+def replicated_specs(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda x: P(*(None,) * (x.ndim if hasattr(x, "ndim") else 0)), tree)
+
+
+def _shard_axis(spec: P) -> int | None:
+    for i, s in enumerate(spec):
+        if s == TP_AXIS:
+            return i
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+
+class ServingPlan:
+    """Everything the batcher/engine/supervisor need to run one config on
+    one serving mesh: local config, spec builders, shard placement, jitted
+    shard_map wrappers, and the snapshot shard codec."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh):
+        if TP_AXIS not in mesh.axis_names:
+            raise ValueError(
+                f"serving mesh must carry a {TP_AXIS!r} axis, got "
+                f"{mesh.axis_names}")
+        self.tp = int(mesh.shape[TP_AXIS])
+        validate_tp(cfg, self.tp)
+        self.cfg = cfg
+        self.mesh = mesh
+        self.local_cfg = tp_local_cfg(cfg, self.tp)
+
+    # -- placement ----------------------------------------------------------
+    def named(self, spec_tree: Any) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def shard(self, tree: Any, spec_tree: Any) -> Any:
+        return jax.tree.map(jax.device_put, tree, self.named(spec_tree))
+
+    def param_specs(self, params: Any) -> Any:
+        return serving_param_specs(params, self.tp)
+
+    def cache_specs(self, cache: Any) -> Any:
+        return serving_cache_specs(cache)
+
+    def shard_params(self, params: Any) -> Any:
+        return self.shard(params, self.param_specs(params))
+
+    def shard_cache(self, cache: Any) -> Any:
+        return self.shard(cache, self.cache_specs(cache))
+
+    # -- compiled steps -----------------------------------------------------
+    def sjit(self, fn, in_specs, out_specs, donate_argnums=()):
+        """jit(shard_map(fn)): each device traces its own Pallas launches on
+        local shapes; unsharded args are resharded to in_specs on entry."""
+        return jax.jit(shard_map_compat(fn, self.mesh, in_specs, out_specs),
+                       donate_argnums=donate_argnums)
+
+    # -- snapshots ----------------------------------------------------------
+    def mesh_spec(self) -> dict:
+        """JSON mesh descriptor recorded in snapshot host state."""
+        return {"axis": TP_AXIS, "tp": self.tp}
+
+    def to_host_shards(self, tree: Any, spec_tree: Any) -> Any:
+        """Device tree -> host numpy tree with each SHARDED leaf stored as a
+        stacked (tp, ...) array of its per-device shards (deterministic
+        split order along the shard axis — no dependence on device
+        enumeration), replicated leaves stored whole."""
+        flat, fspec = flatten_dict(tree), flatten_dict(spec_tree)
+        out: dict[str, Any] = {}
+        for key, leaf in flat.items():
+            arr = np.asarray(leaf)
+            ax = _shard_axis(fspec[key])
+            out[key] = (np.stack(np.split(arr, self.tp, axis=ax))
+                        if ax is not None else arr)
+        return unflatten_dict(out)
+
+    def from_host_shards(self, tree: Any, spec_tree: Any) -> Any:
+        """Inverse of :meth:`to_host_shards`, device_put back onto the mesh
+        with the leaf's NamedSharding."""
+        flat, fspec = flatten_dict(tree), flatten_dict(spec_tree)
+        out: dict[str, Any] = {}
+        for key, leaf in flat.items():
+            arr = np.asarray(leaf)
+            ax = _shard_axis(fspec[key])
+            if ax is not None:
+                arr = np.concatenate(list(arr), axis=ax)
+            out[key] = jax.device_put(arr,
+                                      NamedSharding(self.mesh, fspec[key]))
+        return unflatten_dict(out)
+
+
+@lru_cache(maxsize=None)
+def plan_for(cfg: ModelConfig, mesh: Mesh) -> ServingPlan:
+    """Cached plan per (config, mesh) — plans hold jit caches upstream, so
+    identity matters."""
+    return ServingPlan(cfg, mesh)
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware scan_generate (the whole rollout runs inside ONE shard_map)
+# ---------------------------------------------------------------------------
+
+_TP_SCAN_CACHE: dict = {}
+
+
+def tp_scan_generate(plan: ServingPlan, params, prompt, eos_tok, *,
+                     steps: int, max_len: int, has_eos: bool,
+                     page_size: int = 0, prefill_chunk: int = 0):
+    """Tensor-parallel fused rollout: prefill + lax.scan decode entirely
+    inside shard_map with the plan's local config — the paged pool (when
+    ``page_size`` > 0) is allocated per device with local KV heads, and the
+    2-per-layer psums are the only collectives in the whole executable."""
+    from repro.serve.engine import _scan_generate_impl
+
+    key = (plan.cfg, plan.mesh, steps, max_len, has_eos, page_size,
+           prefill_chunk, jax.tree.structure(params))
+    fn = _TP_SCAN_CACHE.get(key)
+    if fn is None:
+        impl = partial(_scan_generate_impl, cfg=plan.local_cfg, steps=steps,
+                       max_len=max_len, has_eos=has_eos, page_size=page_size,
+                       prefill_chunk=prefill_chunk)
+        fn = plan.sjit(impl,
+                       in_specs=(plan.param_specs(params), P(None, None),
+                                 P()),
+                       out_specs=P(None, None))
+        _TP_SCAN_CACHE[key] = fn
+    return fn(params, prompt, eos_tok)

@@ -1,0 +1,216 @@
+"""Subprocess worker for tensor-parallel serving tests.
+
+Run as ``python tests/_tp_worker.py <mode>`` in its own process so the forced
+8-device host platform never leaks into the main pytest session (the repo's
+XLA-flags isolation rule).  Each mode prints one JSON verdict on stdout.
+"""
+
+import json
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax                                                      # noqa: E402
+import jax.numpy as jnp                                         # noqa: E402
+import numpy as np                                              # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs import get_arch                              # noqa: E402
+from repro.launch.mesh import make_serving_mesh                 # noqa: E402
+from repro.models.config import reduced                         # noqa: E402
+from repro.models.transformer import init_params                # noqa: E402
+from repro.serve.batching import ContinuousBatcher, Request     # noqa: E402
+
+ARCH = "yi-34b"
+
+
+def _cfg(**kw):
+    return reduced(get_arch(ARCH), **kw)
+
+
+def _params(cfg):
+    return init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(3, 12))).astype(np.int32)
+        out.append(np.concatenate([pre, tail]) if i % 2 else tail)
+    return out
+
+
+def _serve(params, cfg, mesh=None, injector=None, supervised=False, **kw):
+    b = ContinuousBatcher(params, cfg, num_slots=3, max_len=64, mesh=mesh,
+                          **kw)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
+            for i, p in enumerate(_prompts(cfg))]
+    if supervised:
+        from repro.serve.supervisor import ServingSupervisor
+        sup = ServingSupervisor(b, injector=injector, snapshot_every=2)
+        for r in reqs:
+            assert sup.submit(r).accepted
+        sup.run(max_ticks=400)
+    else:
+        for r in reqs:
+            b.submit(r)
+        b.run()
+    return {r.rid: list(r.output) for r in reqs}
+
+
+def mode_identity():
+    """tp in {2, 4} token-identical to the single-device batcher, in dense,
+    paged, and paged+prefix-cache modes; plus the fused scan_generate."""
+    from repro.serve.engine import scan_generate
+    cfg = _cfg()
+    params = _params(cfg)
+    out = {}
+    modes = {"dense": {},
+             "paged": {"paged": True, "page_size": 8},
+             "prefix": {"paged": True, "page_size": 8, "prefix_cache": True}}
+    for name, kw in modes.items():
+        ref = _serve(params, cfg, **kw)
+        for tp in (2, 4):
+            got = _serve(params, cfg, mesh=make_serving_mesh(tp), **kw)
+            out[f"{name}_tp{tp}"] = got == ref
+    prompt = jnp.asarray(np.stack([p[:8] for p in _prompts(cfg, 2, seed=3)]))
+    ref = np.asarray(scan_generate(params, cfg, prompt, steps=8))
+    for tp in (2, 4):
+        got = np.asarray(scan_generate(params, cfg, prompt, steps=8,
+                                       mesh=make_serving_mesh(tp)))
+        out[f"scan_tp{tp}"] = bool(np.array_equal(ref, got))
+    gotp = np.asarray(scan_generate(params, cfg, prompt, steps=8,
+                                    page_size=8, prefill_chunk=8,
+                                    mesh=make_serving_mesh(2)))
+    out["scan_paged_tp2"] = bool(np.array_equal(ref, gotp))
+    return out
+
+
+def mode_storm():
+    """The PR 6 fault storm (pool spikes + NaN ticks + a mid-tick crash
+    recovered from snapshots) stays token-identical at tp=2."""
+    from repro.serve.faults import FaultInjector
+    cfg = _cfg()
+    params = _params(cfg)
+    kw = dict(paged=True, page_size=8, num_pages=17, prefix_cache=True,
+              nan_retry_limit=10)
+
+    def injector():
+        return FaultInjector.storm(seed=11, ticks=30, p_spike=0.25,
+                                   p_nan=0.25, crash_ticks=(5,),
+                                   spike_duration=2)
+
+    ref = _serve(params, cfg, injector=injector(), supervised=True, **kw)
+    got = _serve(params, cfg, mesh=make_serving_mesh(2),
+                 injector=injector(), supervised=True, **kw)
+    return {"storm_tp2": got == ref,
+            "nonempty": all(len(v) for v in ref.values())}
+
+
+def mode_snapshot():
+    """Shard-aware snapshot: capture mid-stream at tp=2, restore into a
+    fresh tp=2 batcher (replay must be token-identical), and a tp-mismatched
+    restore must raise a clear ValueError."""
+    from repro.serve.supervisor import apply_state, capture_state
+    cfg = _cfg()
+    params = _params(cfg)
+    mesh = make_serving_mesh(2)
+    kw = dict(num_slots=2, max_len=64, paged=True, page_size=8)
+
+    b = ContinuousBatcher(params, cfg, mesh=mesh, **kw)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(_prompts(cfg, 2))]
+    for r in reqs:
+        b.submit(r)
+    for _ in range(4):
+        b.step()
+    host, dev = capture_state(b)
+    dev = jax.tree.map(np.asarray, dev)
+    for _ in range(40):
+        if all(r.finished for r in reqs):
+            break
+        b.step()
+    full = {r.rid: list(r.output) for r in reqs}
+
+    kv = dev["cache"]["blocks"]["k_pages"]
+    out = {"geometry_tp": host["geometry"]["tp"],
+           "mesh_spec": host["mesh"],
+           "stacked_leading_tp": kv.ndim == 6 and kv.shape[0] == 2}
+    b2 = ContinuousBatcher(params, cfg, mesh=mesh, **kw)
+    by_rid = apply_state(b2, host, dev)
+    for _ in range(40):
+        if all(r.finished for r in by_rid.values()):
+            break
+        b2.step()
+    out["replay_identical"] = {k: list(r.output)
+                               for k, r in by_rid.items()} == full
+    b3 = ContinuousBatcher(params, cfg, **kw)
+    try:
+        apply_state(b3, host, dev)
+        out["mismatch_raises"] = False
+    except ValueError as e:
+        out["mismatch_raises"] = "tp=2" in str(e) and "tp=1" in str(e)
+    return out
+
+
+def mode_psum():
+    """Exactly one all-reduce per projection pair: the TP decode step's
+    jaxpr carries 2 psums with a scanned stack (the scan body traced once)
+    and 2 * num_layers unrolled; and the standalone sharded kernel matches
+    the single-device fused kernel in both roles."""
+    from jax.sharding import PartitionSpec as P
+    from repro.serve.engine import init_cache, make_decode_step
+    from repro.sharding.serving import plan_for
+    out = {}
+    for scan in (True, False):
+        cfg = _cfg(scan_layers=scan)
+        params = _params(cfg)
+        mesh = make_serving_mesh(2)
+        plan = plan_for(cfg, mesh)
+        cache = init_cache(cfg, 2, 64)
+        cspecs = plan.cache_specs(cache)
+        step = plan.sjit(make_decode_step(plan.local_cfg),
+                         in_specs=(plan.param_specs(params), cspecs,
+                                   P(None, None), P(None)),
+                         out_specs=(P(None, None, None), cspecs))
+        jaxpr = str(jax.make_jaxpr(step)(
+            params, cache, {"tokens": jnp.zeros((2, 1), jnp.int32)},
+            jnp.zeros((2,), jnp.int32)))
+        want = 2 if scan else 2 * cfg.num_layers
+        out[f"psums_scan_{scan}"] = [jaxpr.count("psum["), want]
+
+    # sharded fused kernel vs the single-device kernel
+    from repro.kernels.ops import quantized_matmul, quantized_matmul_sharded
+    from repro.quant.mxint import mxint_quantize, pack_mantissa
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    m, k, n, r = 8, 128, 96, 8
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    w = jax.random.normal(k2, (k, n), jnp.float32)
+    a = 0.01 * jax.random.normal(k3, (k, r), jnp.float32)
+    bmat = 0.01 * jax.random.normal(k4, (r, n), jnp.float32)
+    mant, exp = mxint_quantize(w, 4, 32)
+    mant = pack_mantissa(mant.reshape(w.shape), 4)
+    ref = quantized_matmul(x, mant, exp, a, bmat, bits=4, block_size=32,
+                           interpret=True)
+    mesh = make_serving_mesh(2)
+    for role in ("column", "row"):
+        got = quantized_matmul_sharded(x, mant, exp, a, bmat, bits=4,
+                                       block_size=32, mesh=mesh, role=role)
+        out[f"kernel_{role}_close"] = bool(
+            jnp.allclose(ref, got, atol=2e-4, rtol=2e-4))
+    return out
+
+
+MODES = {"identity": mode_identity, "storm": mode_storm,
+         "snapshot": mode_snapshot, "psum": mode_psum}
+
+if __name__ == "__main__":
+    print(json.dumps(MODES[sys.argv[1]]()))

@@ -1,0 +1,279 @@
+"""Tensor-parallel serving tests.
+
+Fast tests run in-process on the single default device (pure spec/role
+logic, pick_blocks shard-shape regression, mesh construction errors,
+pack_for_serving).  Everything that needs a real multi-device mesh runs in
+SUBPROCESSES via ``tests/_tp_worker.py`` with a forced 8-device host
+platform, keeping the main pytest session at 1 device (the repo's XLA-flags
+isolation rule).  The worker modes cover the acceptance bars:
+
+* tp in {2, 4} token-identical to the single-device batcher across dense,
+  paged, paged+prefix-cache, and the fused ``scan_generate`` rollout;
+* the PR 6 fault storm (spikes + NaN ticks + crash recovery) identical at
+  tp=2;
+* shard-aware snapshot round-trip + loud tp-mismatch rejection;
+* exactly one all-reduce per projection pair (2 psums per layer) in the
+  decode jaxpr, and the sharded fused kernel matching the single-device
+  kernel in both parallel roles.
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_arch
+from repro.kernels.ops import pick_blocks
+from repro.quant.mxint import (MXINT_CONFIGS, elems_per_byte,
+                               packed_shard_granule, validate_packed_sharding)
+from repro.sharding.serving import (serving_param_spec, tp_local_cfg, tp_role,
+                                    validate_tp)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# roles and specs (pure logic)
+# ---------------------------------------------------------------------------
+
+class _FakeLeaf:
+    def __init__(self, *shape):
+        self.shape = shape
+        self.ndim = len(shape)
+
+
+def test_tp_role_contract():
+    assert tp_role("blocks/wq") == "column"
+    assert tp_role("blocks/wi") == "column"
+    assert tp_role("blocks/wo") == "row"
+    assert tp_role("blocks/wd") == "row"
+    assert tp_role("blocks/norm_attn") == "replicated"
+    assert tp_role("embed/tok") == "replicated"
+    # quant suffixes see their parent projection
+    assert tp_role("blocks/wq/mant") == "column"
+    assert tp_role("blocks/wo/lora_a") == "row"
+    assert tp_role("blocks/wd/w_tilde") == "row"
+
+
+def test_serving_param_spec_roles():
+    # column: wide axis LAST sharded; lora_a replicated, lora_b sharded
+    assert serving_param_spec("blocks/wq", _FakeLeaf(4, 64, 64)) == \
+        P(None, None, "model")
+    assert serving_param_spec("blocks/wq/mant", _FakeLeaf(4, 32, 64)) == \
+        P(None, None, "model")
+    assert serving_param_spec("blocks/wq/lora_a", _FakeLeaf(4, 64, 8)) == \
+        P(None, None, None)
+    assert serving_param_spec("blocks/wq/lora_b", _FakeLeaf(4, 8, 64)) == \
+        P(None, None, "model")
+    # row: K axis sharded; lora_a sharded, lora_b replicated
+    assert serving_param_spec("blocks/wo", _FakeLeaf(4, 64, 64)) == \
+        P(None, "model", None)
+    assert serving_param_spec("blocks/wo/mant", _FakeLeaf(4, 32, 64)) == \
+        P(None, "model", None)
+    assert serving_param_spec("blocks/wo/lora_a", _FakeLeaf(4, 64, 8)) == \
+        P(None, "model", None)
+    assert serving_param_spec("blocks/wo/lora_b", _FakeLeaf(4, 8, 64)) == \
+        P(None, None, None)
+    # replicated / scalar metadata
+    assert serving_param_spec("blocks/wq/bits", _FakeLeaf()) == P()
+    assert serving_param_spec("embed/tok", _FakeLeaf(128, 64)) == \
+        P(None, None)
+
+
+def test_validate_tp_errors():
+    cfg = get_arch("yi-34b")
+    validate_tp(cfg, 1)
+    validate_tp(cfg, 2)
+    with pytest.raises(ValueError, match="num_heads.*does not divide"):
+        validate_tp(cfg, 3)
+    with pytest.raises(ValueError, match="num_kv_heads"):
+        validate_tp(cfg, 7)               # 56 heads divide, 8 kv heads don't
+    rwkv = get_arch("rwkv6-7b")
+    with pytest.raises(ValueError, match="dense family"):
+        validate_tp(rwkv, 2)
+
+
+def test_tp_local_cfg_pins_head_dim():
+    cfg = get_arch("yi-34b")
+    loc = tp_local_cfg(cfg, 4)
+    assert loc.num_heads == cfg.num_heads // 4
+    assert loc.num_kv_heads == cfg.num_kv_heads // 4
+    assert loc.d_ff == cfg.d_ff // 4
+    assert loc.hd == cfg.hd               # NOT re-derived from d_model
+    assert loc.tp_size == 4 and loc.tp_axis == "model"
+    assert tp_local_cfg(cfg, 1) is cfg
+
+
+def test_validate_packed_sharding():
+    # mxint4: epb=2, granule lcm(32, 16) = 32
+    assert packed_shard_granule(4, 32) == 32
+    assert validate_packed_sharding(128, 2, 4, 32) == 64
+    with pytest.raises(ValueError, match="divide"):
+        validate_packed_sharding(100, 3, 4, 32)
+    with pytest.raises(ValueError, match="granule|multiple"):
+        validate_packed_sharding(48, 2, 4, 32)   # 24 per shard < granule
+
+
+# ---------------------------------------------------------------------------
+# pick_blocks shard-shape regression: every registry config, tp in {2,4,8}
+# ---------------------------------------------------------------------------
+
+def _dense_proj_dims(cfg):
+    """(K, N, sharded_axis) of every TP-sharded projection of a config."""
+    d, hd = cfg.d_model, cfg.hd
+    q, kv, f = cfg.num_heads * hd, cfg.num_kv_heads * hd, cfg.d_ff
+    return [("wq", d, q, "n"), ("wk", d, kv, "n"), ("wv", d, kv, "n"),
+            ("wo", q, d, "k"), ("wi", d, f, "n"), ("wg", d, f, "n"),
+            ("wu", d, f, "n"), ("wd", f, d, "k")]
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED_ARCHS))
+@pytest.mark.parametrize("tp", [2, 4, 8])
+def test_pick_blocks_on_shard_shapes(arch, tp):
+    """Per-shard (M, K/tp or N/tp) shapes of every registry config must get
+    VALID tiles from pick_blocks for every MXINT format — dividing tiles, no
+    degenerate fallbacks, clean ValueError (never an XLA assert) when a
+    shard cannot hold whole exponent blocks."""
+    cfg = get_arch(arch)
+    for spec in MXINT_CONFIGS.values():
+        epb = elems_per_byte(spec.bits)
+        for name, k, n, ax in _dense_proj_dims(cfg):
+            k_loc = k // tp if ax == "k" and k % tp == 0 else k
+            n_loc = n // tp if ax == "n" and n % tp == 0 else n
+            try:
+                bm, bn, bk, decode = pick_blocks(
+                    8, k_loc, n_loc, block_size=spec.block_size, epb=epb)
+            except ValueError as e:
+                # only legitimate for K shards that cannot hold whole blocks
+                assert k_loc % spec.block_size != 0, (arch, name, str(e))
+                continue
+            assert k_loc % bk == 0 and bk % spec.block_size == 0, \
+                (arch, name, spec.bits, k_loc, bk)
+            assert n_loc % bn == 0 and bn >= min(8, n_loc), \
+                (arch, name, spec.bits, n_loc, bn)
+            if epb > 1 and bk % math.lcm(spec.block_size, 8 * epb) == 0:
+                assert (bk // epb) % 8 == 0   # packed tile stays 8-aligned
+
+
+def test_pick_blocks_degenerate_k_raises():
+    with pytest.raises(ValueError, match="block_size"):
+        pick_blocks(8, 40, 64, block_size=32, epb=2)   # 40 % 32 != 0
+
+
+def test_pick_blocks_narrow_n_no_one_wide_tiles():
+    bm, bn, bk, _ = pick_blocks(8, 64, 7, block_size=32)   # prime narrow N
+    assert bn == 7                         # whole-N single block, not bn=1
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+def test_make_serving_mesh_errors():
+    from repro.launch.mesh import make_serving_mesh
+    with pytest.raises(ValueError, match="tp >= 1"):
+        make_serving_mesh(0)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_serving_mesh(64)              # actionable, not an XLA assert
+    mesh = make_serving_mesh(1)
+    assert mesh.axis_names == ("model",) and mesh.shape["model"] == 1
+
+
+def test_env_configure_flags():
+    from repro.launch.env import set_host_device_count
+    old = os.environ.get("XLA_FLAGS")
+    try:
+        os.environ["XLA_FLAGS"] = "--xla_dump_to=/tmp/d " \
+            "--xla_force_host_platform_device_count=2"
+        set_host_device_count(8)
+        flags = os.environ["XLA_FLAGS"].split()
+        assert "--xla_force_host_platform_device_count=8" in flags
+        assert "--xla_dump_to=/tmp/d" in flags
+        assert "--xla_force_host_platform_device_count=2" not in flags
+        with pytest.raises(ValueError):
+            set_host_device_count(0)
+    finally:
+        if old is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = old
+
+
+# ---------------------------------------------------------------------------
+# pack_for_serving
+# ---------------------------------------------------------------------------
+
+def _tiny_qtree():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+
+    def qlin(k, n, r=4):
+        return {"w_tilde": jnp.asarray(rng.normal(size=(k, n)), jnp.float32),
+                "lora_a": jnp.asarray(rng.normal(size=(k, r)), jnp.float32),
+                "lora_b": jnp.asarray(rng.normal(size=(r, n)), jnp.float32)}
+    return {"blocks": {"wq": qlin(64, 64), "wo": qlin(64, 64)},
+            "norm": jnp.ones((64,))}
+
+
+def test_pack_for_serving_packed_false_all_leaves():
+    """Regression: ``packed=False`` must stay in effect for EVERY quantized
+    leaf (a loop variable used to shadow the flag after the first one)."""
+    from repro.core.api import PTQConfig, pack_for_serving
+    cfg = PTQConfig(quantizer="mxint4")
+    out = pack_for_serving(_tiny_qtree(), cfg, packed=False)
+    for name in ("wq", "wo"):
+        g = out["blocks"][name]
+        assert g["mant"].shape == (64, 64), name   # flat, not 32 packed rows
+    packed = pack_for_serving(_tiny_qtree(), cfg, packed=True)
+    for name in ("wq", "wo"):
+        assert packed["blocks"][name]["mant"].shape == (32, 64), name
+
+
+# ---------------------------------------------------------------------------
+# multi-device integration (subprocess, 8 forced devices)
+# ---------------------------------------------------------------------------
+
+def _worker(mode: str) -> dict:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "_tp_worker.py"), mode],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_tp_token_identity():
+    res = _worker("identity")
+    assert res == {k: True for k in res}, res
+
+
+@pytest.mark.slow
+def test_tp_fault_storm_identity():
+    res = _worker("storm")
+    assert res["storm_tp2"] and res["nonempty"], res
+
+
+@pytest.mark.slow
+def test_tp_snapshot_round_trip():
+    res = _worker("snapshot")
+    assert res["geometry_tp"] == 2
+    assert res["mesh_spec"] == {"axis": "model", "tp": 2}
+    assert res["stacked_leading_tp"], res
+    assert res["replay_identical"], res
+    assert res["mismatch_raises"] is True, res
+
+
+@pytest.mark.slow
+def test_tp_one_allreduce_per_projection_pair():
+    res = _worker("psum")
+    assert res["psums_scan_True"][0] == res["psums_scan_True"][1], res
+    assert res["psums_scan_False"][0] == res["psums_scan_False"][1], res
+    assert res["kernel_column_close"] and res["kernel_row_close"], res
