@@ -1,0 +1,89 @@
+"""repro.analysis — trace-time contract checker + custom lint pass.
+
+Three layers, all static (no kernel ever executes):
+
+1. kernel-launch contracts (``contracts``): VMEM footprint, sublane/lane
+   alignment, packed/exponent-block divisibility, grid sanity for every
+   registered Pallas launch (QERA00x);
+2. traced-artifact invariants (``trace_audit``): TP psum count/placement,
+   donation in the compiled artifact, host callbacks in step functions,
+   retrace budgets (QERA01x);
+3. AST lint over the serving hot path (``lint``, QERA02x).
+
+CLI: ``python -m repro.analysis --all`` sweeps the registry x MXINT format
+x tp matrix and emits the JSON report CI consumes; ``launch/serve.py
+--strict`` runs :func:`strict_audit` at startup and refuses a violating
+config.  Error codes are documented in docs/analysis.md.
+
+The divisibility primitives (``validate_packed_sharding``,
+``packed_shard_granule``) live in ``quant.mxint`` and are re-exported here
+— one source of truth for call sites and tests.
+"""
+
+from repro.analysis.errors import CODES, ERROR, WARN, Report, Violation
+from repro.analysis.contracts import (
+    CONTRACTS,
+    audit_arch,
+    audit_decode_attention,
+    audit_flash_attention,
+    audit_matmul_launch,
+    audit_prefill_attention,
+    audit_quantize_weights,
+    audit_quantized_matmul,
+    check_plan,
+)
+from repro.analysis.lint import DEFAULT_LINT_PATHS, lint_paths, lint_source
+from repro.analysis.trace_audit import (
+    audit_admission_donation,
+    audit_serving_retraces,
+    audit_step_callbacks,
+    audit_tp_psums,
+    bucketing_violations,
+    callback_violations,
+    count_psums,
+    donation_violations,
+    psum_violations,
+)
+from repro.quant.mxint import packed_shard_granule, validate_packed_sharding
+
+__all__ = [
+    "CODES", "CONTRACTS", "ERROR", "WARN", "Report", "Violation",
+    "audit_arch", "audit_admission_donation", "audit_decode_attention",
+    "audit_flash_attention", "audit_matmul_launch",
+    "audit_prefill_attention", "audit_quantize_weights",
+    "audit_quantized_matmul", "audit_serving_retraces",
+    "audit_step_callbacks", "audit_tp_psums", "bucketing_violations",
+    "callback_violations", "check_plan", "count_psums",
+    "donation_violations", "lint_paths", "lint_source",
+    "packed_shard_granule", "psum_violations", "strict_audit",
+    "validate_packed_sharding", "DEFAULT_LINT_PATHS",
+]
+
+
+def strict_audit(cfg, *, quantizer: str = "mxint4", tp: int = 1,
+                 backend: str = "tpu") -> Report:
+    """The ``launch/serve.py --strict`` startup gate: static launch audit
+    of the exact serving config at its format and tp degree, plus the
+    retrace-budget check.  Pure shape math — runs before any device, mesh,
+    or parameter is touched, so a mis-sharded config is refused in
+    milliseconds with the offending QERA code."""
+    from repro.quant.mxint import MXINT_CONFIGS
+    spec = MXINT_CONFIGS[quantizer]
+    report = Report()
+    cell = f"{cfg.name} x {quantizer} x tp{tp}"
+    report.cells.append(cell)
+    if tp > 1:
+        from repro.sharding.serving import validate_tp
+        try:
+            validate_tp(cfg, tp)
+        except ValueError as e:
+            report.extend([Violation(
+                "QERA003", ERROR, cell, str(e),
+                "pick a tp degree that divides heads/kv-heads/d_ff")])
+            return report
+    found = audit_arch(cfg, bits=spec.bits, block_size=spec.block_size,
+                       tp=tp, backend=backend)
+    if found is not None:
+        report.extend(found)
+    report.extend(audit_serving_retraces())
+    return report

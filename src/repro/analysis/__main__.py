@@ -1,0 +1,162 @@
+"""CLI: ``python -m repro.analysis`` — run the analyzer, emit JSON for CI.
+
+    # full matrix (CI): registry x {mxint4,3,2} x tp in {1,2,4,8}
+    PYTHONPATH=src python -m repro.analysis --all --json report.json
+
+    # one cell, launch layer only
+    PYTHONPATH=src python -m repro.analysis --arch yi-34b --tp 2 \
+        --layers launch
+
+    # the custom AST lint alone (runs next to ruff in CI)
+    PYTHONPATH=src python -m repro.analysis --lint-only
+
+Exit code is 0 iff no error-severity violation was found (warnings never
+fail the run).  The trace layer re-traces reduced configs per (arch, tp)
+and needs tp virtual devices — the CLI forces the XLA host-platform device
+count itself (before jax initializes), so it is safe to invoke from a
+single-device shell.  Error codes: docs/analysis.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _build_report(args):
+    from repro.analysis import Report, audit_arch, audit_serving_retraces, \
+        lint_paths
+    from repro.configs.registry import get_arch
+    from repro.quant.mxint import MXINT_CONFIGS
+
+    report = Report()
+    layers = set(args.layers.split(","))
+
+    if "lint" in layers:
+        root = args.root
+        report.extend(lint_paths(list(args.lint_paths), root=root))
+
+    if "launch" in layers:
+        for arch in args.arch:
+            cfg = get_arch(arch)
+            for fmt in args.formats:
+                spec = MXINT_CONFIGS[fmt]
+                for tp in args.tp:
+                    cell = f"{arch} x {fmt} x tp{tp}"
+                    found = audit_arch(cfg, bits=spec.bits,
+                                       block_size=spec.block_size, tp=tp,
+                                       backend=args.backend)
+                    if found is None:
+                        report.skip(cell, "unservable: validate_tp refuses "
+                                          "this (family, tp) — clean "
+                                          "refusal, not a violation")
+                        continue
+                    report.cells.append(cell)
+                    report.extend(found)
+        report.extend(audit_serving_retraces())
+
+    if "trace" in layers:
+        from repro.analysis import (audit_admission_donation,
+                                    audit_step_callbacks, audit_tp_psums)
+        from repro.analysis.errors import Violation
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models.config import reduced
+
+        for arch in args.arch:
+            cfg = get_arch(arch)
+            if cfg.family != "dense":
+                continue                 # TP (and its psum contract) is
+                                         # restricted to the dense family
+            rcfg = reduced(cfg)
+            report.extend(audit_admission_donation(rcfg))
+            report.extend(audit_step_callbacks(rcfg))
+            for tp in sorted(set(args.tp) & {1, 2, 4}):
+                if tp == 1:
+                    continue
+                try:
+                    from repro.sharding.serving import validate_tp
+                    validate_tp(rcfg, tp)
+                except ValueError:
+                    report.skip(f"{arch} trace tp{tp}", "reduced config "
+                                "unservable at this tp")
+                    continue
+                res = audit_tp_psums(rcfg, make_serving_mesh(tp))
+                cell = f"{arch} x trace x tp{tp}"
+                report.cells.append(cell)
+                for v in res["violations"]:
+                    # audit_tp_psums stringifies; re-wrap for the report
+                    report.extend([Violation("QERA011", "error", cell, v)])
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="QERA static analysis: kernel-launch contracts, traced-"
+                    "artifact invariants, hot-path AST lint. Error codes "
+                    "are documented in docs/analysis.md.")
+    ap.add_argument("--all", action="store_true",
+                    help="full registry x {mxint4,3,2} x tp {1,2,4,8} "
+                         "matrix, all three layers")
+    ap.add_argument("--arch", nargs="*", default=None,
+                    help="registry arch names (default: all assigned)")
+    ap.add_argument("--formats", nargs="*",
+                    default=["mxint4", "mxint3", "mxint2"])
+    ap.add_argument("--tp", nargs="*", type=int, default=[1, 2, 4, 8])
+    ap.add_argument("--layers", default="launch,trace,lint",
+                    help="comma-set of launch|trace|lint")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="shorthand for --layers lint")
+    ap.add_argument("--lint-paths", nargs="*", default=None,
+                    help="files/dirs for the AST lint (default: serve/, "
+                         "kernels/, models/, benchmarks/)")
+    ap.add_argument("--backend", default="tpu",
+                    help="VMEM budget to audit against (tpu|interpret)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the JSON report here (CI artifact)")
+    ap.add_argument("--root", default=None,
+                    help="repo root for lint paths (default: auto)")
+    args = ap.parse_args(argv)
+
+    if args.lint_only:
+        args.layers = "lint"
+    if args.arch is None or args.all:
+        from repro.configs.registry import ASSIGNED_ARCHS
+        args.arch = list(ASSIGNED_ARCHS)
+    if args.root is None:
+        args.root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+    if args.lint_paths is None:
+        from repro.analysis.lint import DEFAULT_LINT_PATHS
+        args.lint_paths = DEFAULT_LINT_PATHS
+
+    # the trace layer re-traces sharded steps: force enough virtual host
+    # devices BEFORE jax initializes its backend (XLA-flags isolation rule
+    # — this is a standalone process, never the pytest session)
+    if "trace" in args.layers and max(args.tp, default=1) > 1:
+        from repro.launch.env import set_host_device_count
+        set_host_device_count(max(min(t, 4) for t in args.tp) or 1)
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    report = _build_report(args)
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w", encoding="utf-8") as f:
+            f.write(report.to_json())
+    s = report.summary()
+    print(f"repro.analysis: {s['cells']} cells audited, {s['skipped']} "
+          f"skipped (clean refusals), {s['errors']} error(s), "
+          f"{s['warnings']} warning(s)")
+    for v in report.violations:
+        print(f"  {v}")
+    if report.errors:
+        print("FAIL: error-severity violations above (docs/analysis.md)")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,477 @@
+"""Layer 1: kernel-launch contracts for every Pallas wrapper in ``kernels/``.
+
+Each ``pl.pallas_call`` site carries a ``# contract: <name>`` annotation
+naming an entry in :data:`CONTRACTS`; the registry knows, from static shapes
+alone, the exact BlockSpec/scratch geometry of the launch.  From that the
+auditor computes the VMEM footprint (in/out tiles are double-buffered by the
+Pallas pipeline, scratch is resident once), checks sublane/lane tiling
+alignment, packed-container and exponent-block divisibility, and grid
+sanity — all *before* any ``pallas_call``, so a violating config is refused
+at trace/startup time instead of dying in Mosaic three layers down.
+
+The block-plan heuristics are not duplicated here: matmul audits call the
+real ``kernels.ops.pick_blocks`` and divisibility audits call the real
+``quant.mxint.validate_packed_sharding`` — one source of truth, and error
+messages can always print the legal plan ``pick_blocks`` would pick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.analysis.errors import ERROR, WARN, Violation
+
+# -- per-backend VMEM budget (bytes) ---------------------------------------
+# TPU cores have ~16 MiB of VMEM; the compiler reserves some for spills, so
+# anything above the soft fraction is flagged as a warning before the hard
+# budget errors.  ``interpret`` (CPU) has no budget — launches run in plain
+# XLA memory.
+VMEM_BUDGET_BYTES: dict[str, int | None] = {"tpu": 16 * 2 ** 20,
+                                            "interpret": None}
+VMEM_SOFT_FRACTION = 0.75
+
+LANE = 128
+# minimum sublane tile per element byte-width (f32: 8x128, bf16: 16x128,
+# int8: 32x128)
+MIN_SUBLANE = {4: 8, 2: 16, 1: 32}
+ITEMSIZE = {"float32": 4, "int32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
+
+# decode-attention GQA group rows per block: below the f32 sublane tile the
+# TPU pads every (g, d) tile up to (8, d) — correct but wasteful.
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One VMEM-resident tile of a launch: an in/out BlockSpec block or a
+    scratch buffer.  ``strict`` marks dims Mosaic rejects outright when
+    misaligned (vs. merely padding them)."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str
+    kind: str = "in"               # in | out | scratch
+    strict: bool = False
+    # alignment is checked only for blocks whose geometry is config-derived;
+    # inherently-tiny design blocks (the shared-exponent tile) opt out.
+    check: bool = True
+
+    @property
+    def nbytes(self) -> int:
+        n = ITEMSIZE[self.dtype]
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchPlan:
+    """A fully-resolved launch: contract name, grid, and resident blocks."""
+
+    contract: str
+    where: str
+    grid: tuple[int, ...]
+    blocks: tuple[Block, ...]
+
+    def vmem_bytes(self) -> int:
+        return sum(b.nbytes if b.kind == "scratch" else 2 * b.nbytes
+                   for b in self.blocks)
+
+    def describe(self) -> str:
+        blocks = ", ".join(f"{b.name}{b.shape}:{b.dtype}"
+                           for b in self.blocks)
+        return f"{self.contract} grid={self.grid} [{blocks}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    name: str
+    module: str
+    description: str
+
+
+CONTRACTS: dict[str, Contract] = {c.name: c for c in (
+    Contract("mxint_matmul_lowrank", "src/repro/kernels/mxint_matmul.py",
+             "fused MXINT dequant-matmul + low-rank path, prefill 3-D grid "
+             "(M/bm, N/bn, K/bk), K innermost"),
+    Contract("mxint_matmul_lowrank_decode",
+             "src/repro/kernels/mxint_matmul.py",
+             "fused MXINT dequant-matmul, skinny-M decode variant: whole-M "
+             "block, N-major 2-D grid"),
+    Contract("decode_attention", "src/repro/kernels/decode_attention.py",
+             "paged decode attention, grid (B, Hkv, npages), page table via "
+             "scalar prefetch"),
+    Contract("prefill_attention", "src/repro/kernels/prefill_attention.py",
+             "paged chunk-prefill attention, GQA group flattened to G*C "
+             "query rows, offset-causal mask"),
+    Contract("mxint_quantize", "src/repro/kernels/mxint_quant.py",
+             "on-device blockwise MXINT (re)quantization, grid "
+             "(K/block_size, N/bn)"),
+    Contract("flash_attention", "src/repro/kernels/flash_attention.py",
+             "dense flash attention, grid (B, H, Sq/bq, Skv/bkv)"),
+)}
+
+
+# -- generic plan checks ----------------------------------------------------
+
+def check_plan(plan: LaunchPlan, *, backend: str = "tpu",
+               suggestion: str = "") -> list[Violation]:
+    """QERA001 (VMEM), QERA002 (alignment), QERA004 (grid) for one plan."""
+    out = []
+    # QERA004: grid sanity
+    if any(g < 1 for g in plan.grid):
+        out.append(Violation(
+            "QERA004", ERROR, plan.where,
+            f"degenerate grid {plan.grid} in {plan.describe()}: every grid "
+            f"dim must be >= 1 (a zero dim launches nothing and usually "
+            f"means an empty page table or a zero-size operand)",
+            suggestion))
+        return out                  # block shapes are meaningless now
+    nprog = math.prod(plan.grid)
+    if nprog > 2 ** 31:
+        out.append(Violation(
+            "QERA004", ERROR, plan.where,
+            f"grid {plan.grid} launches {nprog} programs (> 2^31); the "
+            f"grid is almost certainly mis-derived", suggestion))
+    # QERA001: VMEM budget
+    budget = VMEM_BUDGET_BYTES.get(backend)
+    if budget is not None:
+        used = plan.vmem_bytes()
+        if used > budget:
+            out.append(Violation(
+                "QERA001", ERROR, plan.where,
+                f"launch needs ~{used / 2**20:.1f} MiB VMEM "
+                f"(> {budget / 2**20:.0f} MiB {backend} budget): "
+                f"{plan.describe()}; in/out tiles are double-buffered, "
+                f"scratch is resident once",
+                suggestion or "shrink block_m/block_n/block_k"))
+        elif used > VMEM_SOFT_FRACTION * budget:
+            out.append(Violation(
+                "QERA001", WARN, plan.where,
+                f"launch needs ~{used / 2**20:.1f} MiB VMEM "
+                f"(> {VMEM_SOFT_FRACTION:.0%} of the "
+                f"{budget / 2**20:.0f} MiB {backend} budget): "
+                f"{plan.describe()}", suggestion))
+    # QERA002: sublane/lane alignment per block
+    for b in plan.blocks:
+        if len(b.shape) < 2 or not b.check:
+            continue
+        sub, lane = b.shape[-2], b.shape[-1]
+        min_sub = MIN_SUBLANE[ITEMSIZE[b.dtype]]
+        if sub % min_sub:
+            sev = ERROR if b.strict else WARN
+            verb = ("Mosaic rejects this block" if b.strict else
+                    "the TPU pads it to the full tile (correct but wasted "
+                    "sublanes)")
+            out.append(Violation(
+                "QERA002", sev, plan.where,
+                f"{plan.contract}: block {b.name}{b.shape} ({b.dtype}) has "
+                f"{sub} sublane rows, not a multiple of {min_sub} — {verb}",
+                suggestion))
+        if lane % LANE and lane >= LANE:
+            out.append(Violation(
+                "QERA002", WARN, plan.where,
+                f"{plan.contract}: block {b.name}{b.shape} ({b.dtype}) has "
+                f"{lane} lanes, not a multiple of {LANE} — partially filled "
+                f"lane tiles", suggestion))
+    return out
+
+
+# -- fused MXINT matmul (both grid variants) --------------------------------
+
+def matmul_plan(m: int, k: int, n: int, r: int, *, bits: int,
+                block_size: int, bm: int, bn: int, bk: int, decode: bool,
+                packed: bool = True, x_dtype: str = "float32",
+                where: str = "") -> LaunchPlan:
+    """Mirror of the BlockSpec/scratch geometry in kernels/mxint_matmul.py
+    for an explicit block plan (see the ``# contract:`` annotations there)."""
+    from repro.quant.mxint import elems_per_byte
+    epb = elems_per_byte(bits) if packed else 1
+    contract = ("mxint_matmul_lowrank_decode" if decode
+                else "mxint_matmul_lowrank")
+    m_pad = -(-m // 8) * 8
+    xm = m_pad if decode else bm
+    grid = ((n // bn, k // bk) if decode
+            else (max(m_pad // bm, 1), n // bn, k // bk))
+    blocks = (
+        Block("x", (xm, bk), x_dtype, strict=True),
+        Block("mant", (bk // epb, bn), "int8"),
+        Block("exp", (bk // block_size, bn), "int8", check=False),
+        Block("a", (bk, r), "float32"),
+        Block("b", (r, bn), "float32"),
+        Block("out", (xm, bn), "float32", kind="out", strict=True),
+        Block("acc", (xm, bn), "float32", kind="scratch"),
+        Block("t", (xm, r), "float32", kind="scratch"),
+    )
+    return LaunchPlan(contract, where, grid, blocks)
+
+
+def audit_matmul_launch(m: int, k: int, n: int, r: int, *, bits: int,
+                        block_size: int, bm: int, bn: int, bk: int,
+                        decode: bool, packed: bool = True,
+                        backend: str = "tpu",
+                        where: str = "") -> list[Violation]:
+    """Audit an EXPLICIT block plan (the asserts in ``_check_shapes`` plus
+    the Mosaic/VMEM constraints), suggesting the ``pick_blocks`` plan when
+    the given one is illegal."""
+    from repro.kernels.ops import pick_blocks
+    from repro.quant.mxint import elems_per_byte
+    epb = elems_per_byte(bits) if packed else 1
+    out = []
+
+    def suggest() -> str:
+        try:
+            sbm, sbn, sbk, sdec = pick_blocks(
+                m, k, n, block_size=block_size, epb=epb)
+        except ValueError:
+            return ""
+        return (f"pick_blocks(m={m}, k={k}, n={n}) -> bm={sbm}, bn={sbn}, "
+                f"bk={sbk}, decode={sdec}")
+
+    # QERA003: divisibility (mirrors _check_shapes / pick_blocks)
+    for label, dim, blk in (("K", k, bk), ("N", n, bn)):
+        if blk < 1 or dim % blk:
+            out.append(Violation(
+                "QERA003", ERROR, where,
+                f"{label}={dim} does not divide block {blk} — the launch "
+                f"would fail the kernel's shape assert", suggest()))
+    if bk >= 1 and bk % block_size:
+        out.append(Violation(
+            "QERA003", ERROR, where,
+            f"bk={bk} is not a multiple of the MXINT block_size="
+            f"{block_size}: every K tile must cover whole exponent blocks",
+            suggest()))
+    if packed and block_size % epb:
+        out.append(Violation(
+            "QERA003", ERROR, where,
+            f"MXINT block_size={block_size} does not cover whole packed "
+            f"bytes (epb={epb})", "use block_size that is a multiple of epb"))
+    if not decode and bm >= 1 and (-(-m // 8) * 8) % bm:
+        out.append(Violation(
+            "QERA003", ERROR, where,
+            f"padded M={-(-m // 8) * 8} does not divide block_m={bm}",
+            suggest()))
+    if out:
+        return out
+    plan = matmul_plan(m, k, n, r, bits=bits, block_size=block_size, bm=bm,
+                       bn=bn, bk=bk, decode=decode, packed=packed,
+                       where=where)
+    return check_plan(plan, backend=backend, suggestion=suggest())
+
+
+def audit_quantized_matmul(m: int, k: int, n: int, r: int, *, bits: int,
+                           block_size: int, packed: bool = True,
+                           block_m: int = 128, block_n: int = 128,
+                           block_k: int = 128, backend: str = "tpu",
+                           where: str = "") -> list[Violation]:
+    """Audit the launch ``kernels.ops.quantized_matmul`` would issue for
+    these shapes — the production path: blocks come from ``pick_blocks``."""
+    from repro.kernels.ops import pick_blocks
+    from repro.quant.mxint import elems_per_byte
+    epb = elems_per_byte(bits) if packed else 1
+    try:
+        bm, bn, bk, decode = pick_blocks(
+            m, k, n, block_size=block_size, epb=epb, block_m=block_m,
+            block_n=block_n, block_k=block_k)
+    except ValueError as e:
+        return [Violation(
+            "QERA003", ERROR, where, str(e),
+            f"pad K or pick a tp degree so the local K is a multiple of "
+            f"block_size={block_size}")]
+    return audit_matmul_launch(m, k, n, r, bits=bits, block_size=block_size,
+                               bm=bm, bn=bn, bk=bk, decode=decode,
+                               packed=packed, backend=backend, where=where)
+
+
+# -- paged attention kernels ------------------------------------------------
+
+def audit_decode_attention(b: int, h: int, hkv: int, d: int, *,
+                           page_size: int, npages: int,
+                           dtype: str = "float32", backend: str = "tpu",
+                           where: str = "") -> list[Violation]:
+    """Mirror of kernels/decode_attention.py: grid (B, Hkv, npages)."""
+    if hkv < 1 or h % hkv:
+        return [Violation(
+            "QERA003", ERROR, where,
+            f"H={h} query heads do not divide Hkv={hkv} kv heads — GQA "
+            f"grouping q.reshape(B, Hkv, G, D) is impossible")]
+    g = h // hkv
+    plan = LaunchPlan("decode_attention", where, (b, hkv, npages), (
+        Block("q", (1, 1, g, d), dtype),
+        Block("k_page", (1, 1, page_size, d), dtype),
+        Block("v_page", (1, 1, page_size, d), dtype),
+        Block("out", (1, 1, g, d), dtype, kind="out"),
+        Block("m", (g, 1), "float32", kind="scratch"),
+        Block("l", (g, 1), "float32", kind="scratch"),
+        Block("acc", (g, d), "float32", kind="scratch"),
+    ))
+    return check_plan(
+        plan, backend=backend,
+        suggestion="" if g % MIN_SUBLANE[ITEMSIZE[dtype]] == 0 else
+        "a GQA group G that is a multiple of 8 fills whole sublane tiles")
+
+
+def audit_prefill_attention(b: int, h: int, hkv: int, d: int, *, chunk: int,
+                            page_size: int, npages: int,
+                            dtype: str = "float32", backend: str = "tpu",
+                            where: str = "") -> list[Violation]:
+    """Mirror of kernels/prefill_attention.py: G*C query rows per block;
+    the ops wrapper pads the chunk to an 8-multiple before launch."""
+    if hkv < 1 or h % hkv:
+        return [Violation(
+            "QERA003", ERROR, where,
+            f"H={h} query heads do not divide Hkv={hkv} kv heads")]
+    g = h // hkv
+    c8 = -(-chunk // 8) * 8
+    rows = g * c8
+    plan = LaunchPlan("prefill_attention", where, (b, hkv, npages), (
+        Block("q", (1, 1, rows, d), dtype),
+        Block("k_page", (1, 1, page_size, d), dtype),
+        Block("v_page", (1, 1, page_size, d), dtype),
+        Block("out", (1, 1, rows, d), dtype, kind="out"),
+        Block("m", (rows, 1), "float32", kind="scratch"),
+        Block("l", (rows, 1), "float32", kind="scratch"),
+        Block("acc", (rows, d), "float32", kind="scratch"),
+    ))
+    return check_plan(plan, backend=backend,
+                      suggestion="shrink the prefill chunk (chunk_tokens)")
+
+
+def audit_flash_attention(b: int, h: int, sq: int, skv: int, d: int, *,
+                          block_q: int = 128, block_kv: int = 128,
+                          dtype: str = "float32", backend: str = "tpu",
+                          where: str = "") -> list[Violation]:
+    """Mirror of kernels/flash_attention.py via the ops wrapper's clamping
+    (bq = min(block_q, sq), inputs padded to block multiples)."""
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    sq_p = -(-sq // bq) * bq
+    skv_p = -(-skv // bkv) * bkv
+    plan = LaunchPlan("flash_attention", where,
+                      (b, h, sq_p // bq, skv_p // bkv), (
+                          Block("q", (1, 1, bq, d), dtype),
+                          Block("k", (1, 1, bkv, d), dtype),
+                          Block("v", (1, 1, bkv, d), dtype),
+                          Block("out", (1, 1, bq, d), dtype, kind="out"),
+                          Block("m", (bq, 1), "float32", kind="scratch"),
+                          Block("l", (bq, 1), "float32", kind="scratch"),
+                          Block("acc", (bq, d), "float32", kind="scratch"),
+                      ))
+    return check_plan(plan, backend=backend,
+                      suggestion="pass 8/128-multiple block_q/block_kv")
+
+
+# -- on-device repack -------------------------------------------------------
+
+def audit_quantize_weights(k: int, n: int, *, bits: int, block_size: int,
+                           packed: bool = True, backend: str = "tpu",
+                           where: str = "") -> list[Violation]:
+    """Mirror of ops.quantize_weights -> kernels/mxint_quant.py, using the
+    wrapper's own ``pick_quant_bn`` so the audited plan IS the launched
+    plan (one source of truth)."""
+    from repro.kernels.ops import pick_quant_bn
+    from repro.quant.mxint import elems_per_byte
+    epb = elems_per_byte(bits) if packed else 1
+    out = []
+    if k % block_size:
+        return [Violation(
+            "QERA003", ERROR, where,
+            f"K={k} is not a multiple of MXINT block_size={block_size} — "
+            f"quantize_weights cannot form whole shared-exponent blocks",
+            "pad K to a block_size multiple before the repack")]
+    if packed and block_size % epb:
+        return [Violation(
+            "QERA003", ERROR, where,
+            f"block_size={block_size} does not cover whole packed bytes "
+            f"(epb={epb})")]
+    bn = pick_quant_bn(n)
+    plan = LaunchPlan("mxint_quantize", where, (k // block_size, n // bn), (
+        Block("w", (block_size, bn), "float32"),
+        # out tiles have <= block_size rows by design: alignment is a
+        # property of the kernel, not of the audited config
+        Block("mant", (block_size // epb, bn), "int8", kind="out",
+              check=False),
+        Block("exp", (1, bn), "int8", kind="out", check=False),
+    ))
+    out += check_plan(
+        plan, backend=backend,
+        suggestion="" if bn == 128 else
+        f"N={n} is not a 128-multiple (pick_quant_bn chose bn={bn}) — pad "
+        f"N to a 128-multiple to restore full lane tiling")
+    return out
+
+
+# -- registry sweep ---------------------------------------------------------
+
+def projection_dims(cfg) -> list[tuple[str, int, int, str]]:
+    """(name, K, N, role) of every quantized serving GEMM of a config:
+    attention + MLP projections (the tensor-parallel contract set from
+    ``sharding/serving.py``) plus the replicated lm_head at the padded
+    vocab."""
+    d, hd = cfg.d_model, cfg.hd
+    q, kv, f = cfg.num_heads * hd, cfg.num_kv_heads * hd, cfg.d_ff
+    dims = [("wq", d, q, "column"), ("wk", d, kv, "column"),
+            ("wv", d, kv, "column"), ("wo", q, d, "row"),
+            ("wi", d, f, "column"), ("wg", d, f, "column"),
+            ("wu", d, f, "column"), ("wd", f, d, "row")]
+    pad = getattr(cfg, "vocab_pad_multiple", 1) or 1
+    vocab = -(-cfg.vocab_size // pad) * pad
+    dims.append(("lm_head", d, vocab, "replicated"))
+    return dims
+
+
+def audit_arch(cfg, *, bits: int, block_size: int, tp: int = 1,
+               rank: int = 16, num_slots: int = 8, prefill_m: int = 256,
+               chunk: int = 64, page_size: int = 32,
+               backend: str = "tpu") -> list[Violation] | None:
+    """Static launch audit of one (arch, format, tp) cell at FULL model
+    shapes: every projection GEMM in both decode and prefill regimes, the
+    paged attention kernels, the dense flash kernel, and the on-device
+    repack.  Returns None when the cell is unservable by design (validate_tp
+    refuses it loudly) — a clean refusal is the contract working, not a
+    violation."""
+    from repro.quant.mxint import validate_packed_sharding
+    cell = f"{cfg.name} x mxint{bits} x tp{tp}"
+    if tp > 1:
+        from repro.sharding.serving import validate_tp
+        try:
+            validate_tp(cfg, tp)
+        except ValueError:
+            return None
+    out: list[Violation] = []
+    for name, k, n, role in projection_dims(cfg):
+        k_loc, n_loc = k, n
+        if tp > 1 and role == "row":
+            try:
+                k_loc = validate_packed_sharding(k, tp, bits, block_size,
+                                                 name=name)
+            except ValueError as e:
+                out.append(Violation(
+                    "QERA003", ERROR, f"{cell} / {name}", str(e),
+                    "choose a tp degree whose K shard is a multiple of "
+                    "lcm(block_size, 8*elems_per_byte)"))
+                continue
+        elif tp > 1 and role == "column":
+            n_loc = n // tp
+        for regime, m in (("decode", num_slots), ("prefill", prefill_m)):
+            out += audit_quantized_matmul(
+                m, k_loc, n_loc, rank, bits=bits, block_size=block_size,
+                backend=backend, where=f"{cell} / {name} ({regime} m={m})")
+        if tp == 1:
+            out += audit_quantize_weights(
+                k, n, bits=bits, block_size=block_size, backend=backend,
+                where=f"{cell} / {name} (repack)")
+    h_loc = cfg.num_heads // tp
+    kv_loc = max(cfg.num_kv_heads // tp, 1)
+    max_len = min(getattr(cfg, "max_seq_len", 4096) or 4096, 32768)
+    npages = max(max_len // page_size, 1)
+    out += audit_decode_attention(
+        num_slots, h_loc, kv_loc, cfg.hd, page_size=page_size,
+        npages=npages, backend=backend, where=f"{cell} / decode_attention")
+    out += audit_prefill_attention(
+        num_slots, h_loc, kv_loc, cfg.hd, chunk=chunk, page_size=page_size,
+        npages=npages, backend=backend, where=f"{cell} / prefill_attention")
+    out += audit_flash_attention(
+        1, h_loc, min(max_len, 2048), min(max_len, 2048), cfg.hd,
+        backend=backend, where=f"{cell} / flash_attention")
+    return out

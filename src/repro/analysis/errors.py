@@ -1,0 +1,113 @@
+"""QERA0xx error codes: the vocabulary of the static-analysis pass.
+
+Codes are ruff-style and stable — tests, CI, and docs/analysis.md key on
+them.  Three families mirror the analyzer's three layers:
+
+  QERA00x  kernel-launch contracts (VMEM, alignment, divisibility, grid)
+  QERA01x  traced-artifact invariants (psum contract, donation, callbacks,
+           retrace budget)
+  QERA02x  AST lint over the serving hot path
+
+Severity is two-level: ``error`` fails CI / refuses ``--strict`` serving;
+``warn`` is surfaced in the report (e.g. a sublane dim the TPU merely pads)
+but never fails the run.  See docs/analysis.md for cause/example/fix per
+code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+ERROR = "error"
+WARN = "warn"
+
+CODES: dict[str, str] = {
+    # -- layer 1: kernel-launch contracts ----------------------------------
+    "QERA001": "kernel launch exceeds the per-backend VMEM budget",
+    "QERA002": "block plan violates sublane/lane tiling alignment",
+    "QERA003": "packed-container / exponent-block divisibility violation",
+    "QERA004": "degenerate or oversized Pallas grid",
+    # -- layer 2: traced-artifact invariants -------------------------------
+    "QERA011": "tensor-parallel psum count/placement breaks the sharding "
+               "contract",
+    "QERA012": "buffer marked for donation is not donated in the compiled "
+               "artifact",
+    "QERA013": "host callback / blocking transfer inside a traced serving "
+               "step",
+    "QERA014": "recompilation storm: trace-cache key set exceeds its budget",
+    # -- layer 3: hot-path AST lint ----------------------------------------
+    "QERA021": "host synchronization on a traced value in a hot-path "
+               "function",
+    "QERA022": "PagePool internal field mutated outside its methods",
+    "QERA023": "pool-page write that bypasses the copy-on-write guard",
+    "QERA024": "unseeded randomness in fault-injection or benchmark code",
+    "QERA025": "pallas_call site without a registered launch-contract "
+               "annotation",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: a stable code, a location, and an actionable message.
+
+    ``where`` is a human-locatable site — ``file:line`` for lint findings,
+    an ``arch x format x tp / kernel`` cell for contract findings.
+    ``suggestion`` is the fix (e.g. the legal block plan ``pick_blocks``
+    would have chosen) and may be empty.
+    """
+
+    code: str
+    severity: str
+    where: str
+    message: str
+    suggestion: str = ""
+
+    def __post_init__(self):
+        assert self.code in CODES, f"unknown code {self.code}"
+        assert self.severity in (ERROR, WARN), self.severity
+
+    def as_dict(self) -> dict[str, str]:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        s = f"{self.code} [{self.severity}] {self.where}: {self.message}"
+        return s + (f"  (fix: {self.suggestion})" if self.suggestion else "")
+
+
+@dataclasses.dataclass
+class Report:
+    """Aggregated analyzer output; ``to_json`` is the CI artifact schema."""
+
+    violations: list[Violation] = dataclasses.field(default_factory=list)
+    cells: list[str] = dataclasses.field(default_factory=list)
+    skipped: list[dict[str, str]] = dataclasses.field(default_factory=list)
+
+    @property
+    def errors(self) -> list[Violation]:
+        return [v for v in self.violations if v.severity == ERROR]
+
+    @property
+    def warnings(self) -> list[Violation]:
+        return [v for v in self.violations if v.severity == WARN]
+
+    def extend(self, violations: list[Violation]) -> None:
+        self.violations.extend(violations)
+
+    def skip(self, cell: str, reason: str) -> None:
+        self.skipped.append({"cell": cell, "reason": reason})
+
+    def ok(self) -> bool:
+        return not self.errors
+
+    def summary(self) -> dict[str, Any]:
+        return {"cells": len(self.cells), "skipped": len(self.skipped),
+                "errors": len(self.errors), "warnings": len(self.warnings)}
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(
+            {"summary": self.summary(),
+             "violations": [v.as_dict() for v in self.violations],
+             "cells": self.cells, "skipped": self.skipped},
+            indent=indent)

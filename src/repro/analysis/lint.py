@@ -1,0 +1,339 @@
+"""Layer 3: AST lint over the serving hot path (QERA02x).
+
+Pure-Python ``ast`` pass over ``serve/``, ``kernels/``, ``models/`` (plus
+``benchmarks/`` for the randomness rule) — no jax import, no tracing:
+
+* **QERA021** — host synchronization inside a *traced* function:
+  ``.item()`` / ``float()`` / ``np.asarray`` / ``jax.device_get`` /
+  ``.block_until_ready()`` on values that are traced there.  "Traced" is
+  detected structurally: jit-decorated functions, functions wrapped by a
+  module-level ``jax.jit(f)`` / ``partial(jax.jit, ...)(f)``, inner
+  functions returned from ``make_*`` factories (the batcher's jitted step
+  helpers), functions handed to ``lax.scan``/``while_loop``/``cond``/
+  ``pallas_call``, and Pallas kernel bodies (``*_kernel``).
+* **QERA022** — ``PagePool`` internals (``_refs``/``_free``/``_cached``/
+  ``_registered``) mutated outside ``PagePool`` methods: refcount laws hold
+  only if every transition goes through acquire/share/release.
+* **QERA023** — pool-page writes outside the CoW guard: ``._fork(...)``
+  called anywhere but ``_cow_fork``, or in-place ``.at[...].set`` scatters
+  on ``*_pages`` leaves outside ``serve/paging.py`` (the sanctioned jitted
+  helpers).
+* **QERA024** — unseeded randomness in fault/bench code: a seedless
+  ``np.random.default_rng()``, the legacy global ``np.random.*`` API, or
+  stdlib ``random.*`` — fault storms and benchmarks must replay bit-
+  identically from their seed.
+* **QERA025** — a ``pl.pallas_call`` site in ``kernels/`` without a
+  ``# contract: <name>`` annotation naming a registered entry in
+  ``analysis/contracts.py`` (keeps the launch-contract registry complete).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from repro.analysis.errors import ERROR, Violation
+
+HOST_SYNC_NP = {"asarray", "array", "copyto", "from_dlpack"}
+HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+LEGACY_NP_RANDOM = {
+    "rand", "randn", "randint", "random", "random_sample", "choice",
+    "shuffle", "permutation", "normal", "uniform", "seed", "standard_normal",
+}
+POOL_PRIVATE_FIELDS = {"_refs", "_free", "_cached", "_registered"}
+MUTATING_METHODS = {"append", "extend", "pop", "popitem", "clear", "add",
+                    "discard", "remove", "update", "insert", "setdefault"}
+_CONTRACT_RE = re.compile(r"#\s*contract:\s*([A-Za-z0-9_]+)")
+
+
+def _name_of(node: ast.AST) -> str:
+    """Dotted name of a Name/Attribute chain ('' when not a plain chain)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """jax.jit / jit / pjit / partial(jax.jit, ...) / functools.partial(...)"""
+    if isinstance(node, ast.Call):
+        fname = _name_of(node.func)
+        if fname.endswith("partial"):
+            return any(_is_jit_expr(a) for a in node.args)
+        return fname.rsplit(".", 1)[-1] in ("jit", "pjit", "sjit")
+    return _name_of(node).rsplit(".", 1)[-1] in ("jit", "pjit")
+
+
+class _TracedCollector(ast.NodeVisitor):
+    """First pass: find the set of function names that run under trace."""
+
+    def __init__(self):
+        self.traced: set[str] = set()
+        self._factory_depth = 0
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        if any(_is_jit_expr(d) for d in node.decorator_list):
+            self.traced.add(node.name)
+        if self._factory_depth or node.name.endswith("_kernel") \
+                or node.name == "kernel":
+            # inner defs of make_* factories are the returned jitted
+            # helpers; *_kernel bodies run inside pallas_call
+            self.traced.add(node.name)
+        is_factory = node.name.startswith("make_")
+        self._factory_depth += is_factory
+        self.generic_visit(node)
+        self._factory_depth -= is_factory
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call):
+        fname = _name_of(node.func).rsplit(".", 1)[-1]
+        if fname in ("scan", "while_loop", "fori_loop", "cond", "switch",
+                     "pallas_call", "checkpoint", "remat", "vmap", "partial"):
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    self.traced.add(a.id)
+        if _is_jit_expr(node):
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    self.traced.add(a.id)
+        self.generic_visit(node)
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, traced: set[str], scopes: dict[str, bool]):
+        self.path = path
+        self.traced = traced
+        self.scopes = scopes          # rule-key -> applies to this file
+        self.violations: list[Violation] = []
+        self._fn_stack: list[str] = []
+        self._class_stack: list[str] = []
+
+    def _flag(self, code: str, node: ast.AST, msg: str, fix: str = ""):
+        where = f"{self.path}:{getattr(node, 'lineno', 0)}"
+        self.violations.append(Violation(code, ERROR, where, msg, fix))
+
+    def _in_traced(self) -> bool:
+        return any(f in self.traced for f in self._fn_stack)
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self._fn_stack.append(node.name)
+        self.generic_visit(node)
+        self._fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- QERA021 + QERA023 + QERA024 hang off calls ------------------------
+    def visit_Call(self, node: ast.Call):
+        fname = _name_of(node.func)
+        tail = fname.rsplit(".", 1)[-1]
+        if self.scopes.get("hot") and self._in_traced():
+            if tail in HOST_SYNC_METHODS and isinstance(node.func,
+                                                        ast.Attribute):
+                self._flag(
+                    "QERA021", node,
+                    f".{tail}() inside traced function "
+                    f"'{self._fn_stack[-1]}': forces a device sync per call",
+                    "keep the value on device; read it outside the step")
+            elif fname.startswith(("np.", "numpy.")) \
+                    and tail in HOST_SYNC_NP:
+                self._flag(
+                    "QERA021", node,
+                    f"{fname}() on a traced value inside "
+                    f"'{self._fn_stack[-1]}': silently pulls the array to "
+                    f"host every tick", "use jnp inside traced code")
+            elif fname in ("jax.device_get", "device_get"):
+                self._flag(
+                    "QERA021", node,
+                    f"jax.device_get inside traced function "
+                    f"'{self._fn_stack[-1]}'",
+                    "move host reads outside the step")
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in ("float", "int") and node.args:
+                src = ast.unparse(node.args[0])
+                if ".shape" not in src and "len(" not in src \
+                        and not isinstance(node.args[0], ast.Constant):
+                    self._flag(
+                        "QERA021", node,
+                        f"{node.func.id}() on a (possibly traced) value "
+                        f"inside '{self._fn_stack[-1]}': concretizes the "
+                        f"tracer (sync or trace error)",
+                        "keep arithmetic in jnp; cast with .astype")
+        if self.scopes.get("cow") and tail == "_fork" \
+                and isinstance(node.func, ast.Attribute) \
+                and "_cow_fork" not in self._fn_stack:
+            self._flag(
+                "QERA023", node,
+                f"page fork called from '{self._fn_stack[-1] or '<module>'}'"
+                f", outside the _cow_fork guard: forking without the "
+                f"refcount/registration check can clone live pages or skip "
+                f"the table re-point",
+                "route every fork through ContinuousBatcher._cow_fork")
+        if self.scopes.get("pool"):
+            # pool._free.append(...) etc. — mutation via method call
+            if isinstance(node.func, ast.Attribute) \
+                    and tail in MUTATING_METHODS:
+                base = node.func.value
+                if isinstance(base, ast.Attribute) \
+                        and base.attr in POOL_PRIVATE_FIELDS \
+                        and "PagePool" not in self._class_stack:
+                    self._flag(
+                        "QERA022", node,
+                        f"PagePool.{base.attr}.{tail}() outside PagePool: "
+                        f"refcount conservation only holds through "
+                        f"acquire/share/release",
+                        "use the PagePool API (or PagePool.accounting() "
+                        "for reads)")
+        if self.scopes.get("rand"):
+            if tail == "default_rng" and not node.args and not node.keywords:
+                self._flag(
+                    "QERA024", node,
+                    "np.random.default_rng() without a seed: fault storms "
+                    "and benchmarks must replay bit-identically",
+                    "pass an explicit seed")
+            elif fname.startswith(("np.random.", "numpy.random.")) \
+                    and tail in LEGACY_NP_RANDOM:
+                self._flag(
+                    "QERA024", node,
+                    f"legacy global-state {fname}(): unseedable per-site "
+                    f"and order-dependent",
+                    "use a seeded np.random.default_rng(seed)")
+            elif fname.startswith("random.") \
+                    and tail in ("random", "randint", "choice", "shuffle",
+                                 "uniform", "gauss", "sample"):
+                self._flag(
+                    "QERA024", node,
+                    f"stdlib {fname}() uses hidden global state",
+                    "use a seeded np.random.default_rng(seed)")
+        self.generic_visit(node)
+
+    # -- QERA022: assignments to pool internals ----------------------------
+    def _check_store(self, target: ast.AST, node: ast.AST):
+        if not self.scopes.get("pool") or "PagePool" in self._class_stack:
+            return
+        t = target
+        if isinstance(t, ast.Subscript):
+            t = t.value
+        if isinstance(t, ast.Attribute) and t.attr in POOL_PRIVATE_FIELDS:
+            self._flag(
+                "QERA022", node,
+                f"assignment to PagePool.{t.attr} outside PagePool: "
+                f"bypasses the refcount laws (page 0 reserved, parked LRU "
+                f"== registered refcount-0 pages)",
+                "use acquire/share/release/set_registered")
+
+    def visit_Assign(self, node: ast.Assign):
+        for t in node.targets:
+            self._check_store(t, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self._check_store(node.target, node)
+        self.generic_visit(node)
+
+    # -- QERA023: in-place scatters on pool leaves -------------------------
+    def visit_Attribute(self, node: ast.Attribute):
+        if self.scopes.get("cow") and node.attr in ("at",):
+            src = ast.unparse(node.value)
+            if src.endswith(("k_pages", "v_pages")) \
+                    or "_pages\"]" in src or "_pages']" in src:
+                self._flag(
+                    "QERA023", node,
+                    f"in-place update on pool leaf `{src}` outside "
+                    f"serve/paging.py: pool writes must go through the "
+                    f"jitted helpers so the CoW guard can intercept them",
+                    "use the make_* helpers in serve/paging.py")
+        self.generic_visit(node)
+
+
+def _scopes_for(path: str) -> dict[str, bool]:
+    """Which rule families apply to a file, from its repo-relative path."""
+    p = path.replace(os.sep, "/")
+    in_serve = "/serve/" in p or p.startswith("serve/")
+    in_bench = "/benchmarks/" in p or p.startswith("benchmarks/")
+    in_kernels = "/kernels/" in p or p.startswith("kernels/")
+    in_models = "/models/" in p or p.startswith("models/")
+    is_paging = p.endswith("/paging.py") or p == "paging.py"
+    return {
+        "hot": in_serve or in_kernels or in_models,
+        "pool": (in_serve or in_models) and not is_paging,
+        "cow": in_serve and not is_paging,
+        "rand": in_serve or in_bench,
+        "contract": in_kernels,
+    }
+
+
+def _check_contract_annotations(path: str, src: str) -> list[Violation]:
+    """QERA025: every pallas_call line needs `# contract: <name>` within the
+    10 preceding lines, naming a registered contract."""
+    from repro.analysis.contracts import CONTRACTS
+    out = []
+    lines = src.splitlines()
+    for i, line in enumerate(lines):
+        if "pallas_call(" not in line or line.lstrip().startswith("#"):
+            continue
+        window = lines[max(0, i - 10):i + 1]
+        m = None
+        for w in window:
+            m = _CONTRACT_RE.search(w) or m
+        if m is None:
+            out.append(Violation(
+                "QERA025", ERROR, f"{path}:{i + 1}",
+                "pallas_call without a `# contract: <name>` annotation: "
+                "the launch is invisible to the kernel-launch audit",
+                "register the launch in analysis/contracts.py and annotate "
+                "the call site"))
+        elif m.group(1) not in CONTRACTS:
+            out.append(Violation(
+                "QERA025", ERROR, f"{path}:{i + 1}",
+                f"pallas_call annotated with unregistered contract "
+                f"'{m.group(1)}' (known: {sorted(CONTRACTS)})",
+                "add the entry to analysis/contracts.py CONTRACTS"))
+    return out
+
+
+def lint_source(src: str, path: str) -> list[Violation]:
+    """Lint one file's source; ``path`` selects which rules apply."""
+    scopes = _scopes_for(path)
+    tree = ast.parse(src)
+    collector = _TracedCollector()
+    collector.visit(tree)
+    linter = _Linter(path, collector.traced, scopes)
+    linter.visit(tree)
+    out = linter.violations
+    if scopes.get("contract"):
+        out += _check_contract_annotations(path, src)
+    return out
+
+
+def lint_paths(paths: list[str], root: str = ".") -> list[Violation]:
+    """Lint every .py file under the given directories/files."""
+    out = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        files = []
+        if os.path.isdir(full):
+            for dirpath, _, names in os.walk(full):
+                files += [os.path.join(dirpath, n) for n in sorted(names)
+                          if n.endswith(".py")]
+        elif full.endswith(".py"):
+            files = [full]
+        for f in files:
+            with open(f, encoding="utf-8") as fh:
+                rel = os.path.relpath(f, root) if not os.path.isabs(p) else f
+                out += lint_source(fh.read(), rel)
+    return out
+
+
+DEFAULT_LINT_PATHS = ("src/repro/serve", "src/repro/kernels",
+                      "src/repro/models", "benchmarks")

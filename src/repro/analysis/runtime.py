@@ -1,0 +1,118 @@
+"""Runtime assertion mode for the paged batcher (``debug_invariants=True``).
+
+Two laws from serve/paging.py, re-checked from scratch after every tick —
+an independent reimplementation, not a re-read of the allocator's own
+bookkeeping paths:
+
+* **refcount conservation** — for every physical page p > 0, the pool's
+  refcount equals the number of slot table references; refcount-0 pages
+  partition exactly into the free list and the LRU-parked (registered)
+  cache; page 0 (garbage) is never owned; the device-bound page table rows
+  mirror ``slot_pages``.
+* **shared-page write protection** — a page that is shared (refcount > 1)
+  or whose content is registered in the prefix index is NEVER written: the
+  checker hashes every protected page's content each tick and compares
+  against the previous tick for pages protected in both (a mismatch means a
+  write bypassed the CoW fork).
+
+Checks are host-side and O(pool size) per tick — meant for tests
+(tests/conftest.py enables them for the serving/prefix-cache/fault suites),
+not production serving.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import Counter
+from typing import Any
+
+import numpy as np
+
+
+def check_page_accounting(pool, slot_pages: list[list[int]],
+                          page_table: np.ndarray) -> list[str]:
+    """Refcount-conservation violations ('' when the law holds)."""
+    acc = pool.accounting()
+    refs, free = acc["refs"], acc["free"]
+    cached, registered = acc["cached"], acc["registered"]
+    errs = []
+    owned = Counter(p for pages in slot_pages for p in pages)
+    if owned.get(0):
+        errs.append("garbage page 0 appears in slot_pages")
+    if refs[0] != 0:
+        errs.append(f"garbage page 0 has refcount {refs[0]}")
+    for p in range(1, pool.num_pages):
+        if refs[p] != owned.get(p, 0):
+            errs.append(
+                f"page {p}: refcount {refs[p]} != {owned.get(p, 0)} slot "
+                f"table reference(s) — a release/share was lost")
+    free_set, cached_set = set(free), set(cached)
+    if len(free_set) != len(free):
+        errs.append("duplicate pages on the free list")
+    if free_set & cached_set:
+        errs.append(f"pages both free and LRU-parked: "
+                    f"{sorted(free_set & cached_set)}")
+    if not cached_set <= registered:
+        errs.append(f"LRU-parked pages without a registration: "
+                    f"{sorted(cached_set - registered)}")
+    for p in range(1, pool.num_pages):
+        idle = refs[p] == 0
+        pooled = p in free_set or p in cached_set
+        if idle and not pooled:
+            errs.append(f"page {p} leaked: refcount 0 but neither free "
+                        f"nor LRU-parked")
+        if not idle and pooled:
+            errs.append(f"page {p} owned (refcount {refs[p]}) but still "
+                        f"on the free/cached list")
+    for slot, pages in enumerate(slot_pages):
+        row = page_table[slot]
+        nz = [int(x) for x in row[row != 0]]
+        if sorted(nz) != sorted(pages):
+            errs.append(
+                f"slot {slot}: page_table row {nz} != slot_pages {pages}")
+    return errs
+
+
+def protected_pages(pool) -> set[int]:
+    """Pages the CoW law forbids writing: shared or content-registered."""
+    acc = pool.accounting()
+    refs = acc["refs"]
+    shared = {p for p in range(1, pool.num_pages) if refs[p] > 1}
+    return shared | acc["registered"]
+
+
+def snapshot_protected_pages(cache: Any, pool) -> dict[int, tuple[int, str]]:
+    """page -> (allocation generation, content digest) for protected pages.
+
+    The generation (bumped by ``PagePool.acquire``) distinguishes the SAME
+    physical page across an LRU evict + reallocation: new owner, new
+    content, legitimately — only same-generation digests may be compared.
+    """
+    prot = protected_pages(pool)
+    if not prot:
+        return {}
+    import jax
+
+    from repro.utils.trees import flatten_dict
+    gen = pool.accounting()["generation"]
+    leaves = {k: np.asarray(jax.device_get(v))
+              for k, v in flatten_dict(cache).items()
+              if k.rsplit("/", 1)[-1] in ("k_pages", "v_pages")}
+    out = {}
+    for p in sorted(prot):
+        h = hashlib.sha256()
+        for k in sorted(leaves):
+            h.update(leaves[k][:, p].tobytes())
+        out[p] = (int(gen[p]), h.hexdigest())
+    return out
+
+
+def check_protected_writes(prev: dict[int, tuple[int, str]],
+                           cur: dict[int, tuple[int, str]]) -> list[str]:
+    """A page protected on BOTH ticks, under the SAME allocation
+    generation, must have identical content — any change means a write
+    bypassed the copy-on-write fork."""
+    return [f"protected page {p} was written in place (refcount > 1 or "
+            f"registered content changed) — a write bypassed _cow_fork"
+            for p in sorted(set(prev) & set(cur))
+            if prev[p][0] == cur[p][0] and prev[p][1] != cur[p][1]]

@@ -1,0 +1,311 @@
+"""Layer 2: jaxpr/HLO invariant audit of the traced serving steps.
+
+Everything here works on traced or lowered artifacts — no kernel executes:
+
+* **psum contract** (QERA011): the tensor-parallel decode step must carry
+  exactly 2 psums per layer (after attention, after MLP — one all-reduce
+  per projection pair, ``sharding/serving.py``), placed INSIDE the layer
+  scan body when layers are scanned (so the body traced once carries 2) and
+  nowhere at the top level.  This is the single implementation the TP test
+  worker calls; ``tests/_tp_worker.py`` no longer string-counts jaxprs.
+* **donation** (QERA012): ``place_slot`` / admission scratch / page forks
+  are jitted with donated caches so admission is an in-place write; the
+  audit lowers them with donation requested and verifies the compiled
+  artifact actually aliases buffers (XLA silently drops donation when an
+  output cannot alias — e.g. a dtype change — which costs a full cache copy
+  per tick).
+* **host callbacks** (QERA013): the decode/chunk steps and the fused scan
+  body must contain no callback/infeed primitives — one host round-trip per
+  token step destroys decode throughput.
+* **retrace budget** (QERA014): the serving loop's trace-cache keys come
+  from bucketing helpers (``page_bucket``, ``pick_prefill_chunk``/
+  ``chunk_plan``); the auditor hashes the key a helper emits over its whole
+  input domain and flags any helper whose distinct-key count exceeds the
+  O(log) budget — the recompilation-storm detector.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Iterable
+
+from repro.analysis.errors import ERROR, Violation
+
+PSUMS_PER_LAYER = 2
+
+FORBIDDEN_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "outside_call", "host_callback_call", "infeed", "outfeed",
+})
+
+
+# -- jaxpr walking ----------------------------------------------------------
+
+def _as_jaxpr(v: Any):
+    # duck-typed: ClosedJaxpr carries .jaxpr, a raw Jaxpr carries .eqns
+    if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+        return v.jaxpr
+    if hasattr(v, "eqns"):
+        return v
+    return None
+
+
+def _subjaxprs(params: dict) -> Iterable[Any]:
+    for v in params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vs:
+            j = _as_jaxpr(x)
+            if j is not None:
+                yield j
+
+
+def count_primitives(jaxpr, names: frozenset[str] | set[str],
+                     _in_scan: bool = False) -> dict[str, dict[str, int]]:
+    """Count primitive occurrences, split by placement: ``in_scan`` vs
+    ``top`` (anywhere outside a scan body, however deeply nested in
+    pjit/shard_map)."""
+    if hasattr(jaxpr, "jaxpr"):       # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    counts = {n: {"in_scan": 0, "top": 0} for n in names}
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim in names:
+            counts[prim]["in_scan" if _in_scan else "top"] += 1
+        inner_scan = _in_scan or prim == "scan"
+        for sub in _subjaxprs(eqn.params):
+            for n, c in count_primitives(sub, names, inner_scan).items():
+                counts[n]["in_scan"] += c["in_scan"]
+                counts[n]["top"] += c["top"]
+    return counts
+
+
+def count_psums(jaxpr) -> dict[str, int]:
+    """{'in_scan': n, 'top': m} psum placement of a (closed) jaxpr."""
+    return count_primitives(jaxpr, frozenset({"psum"}))["psum"]
+
+
+# -- QERA011: psum count + placement ---------------------------------------
+
+def psum_violations(in_scan: int, top: int, *, tp: int, scan: bool,
+                    num_layers: int, where: str = "") -> list[Violation]:
+    """The pure checker (unit-testable without devices): expected placement
+    given the sharding contract."""
+    total = in_scan + top
+    out = []
+    if tp <= 1:
+        if total:
+            out.append(Violation(
+                "QERA011", ERROR, where,
+                f"{total} psum(s) in a tp=1 step: single-device serving "
+                f"must not pay any collective",
+                "gate lax.psum on cfg.tp_size > 1"))
+        return out
+    want = PSUMS_PER_LAYER if scan else PSUMS_PER_LAYER * num_layers
+    if total != want:
+        out.append(Violation(
+            "QERA011", ERROR, where,
+            f"decode step carries {total} psum(s), contract wants {want} "
+            f"({PSUMS_PER_LAYER} per layer pair"
+            f"{', scan body traced once' if scan else ''}): an extra psum "
+            f"is a per-layer latency tax, a missing one silently computes "
+            f"partial sums",
+            "one all-reduce after attention + one after MLP "
+            "(models/transformer.py _dense_block)"))
+    if scan and top:
+        out.append(Violation(
+            "QERA011", ERROR, where,
+            f"{top} psum(s) OUTSIDE the layer scan body: with scanned "
+            f"layers both all-reduces must live inside the body so the "
+            f"trace stays O(1) in depth", ""))
+    return out
+
+
+def audit_tp_psums(cfg, mesh, *, num_slots: int = 2,
+                   max_len: int = 64) -> dict[str, Any]:
+    """Trace the sharded decode step for (cfg, mesh) and check the psum
+    contract.  Returns found/want counts plus violations; the TP worker
+    asserts on this single implementation.  Needs a real multi-device mesh
+    — call from a subprocess under the XLA-flags isolation rule."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.transformer import init_params
+    from repro.serve.engine import init_cache, make_decode_step
+    from repro.sharding.serving import plan_for
+
+    tp = mesh.shape[cfg.tp_axis] if mesh is not None else 1
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    plan = plan_for(cfg, mesh)
+    cache = init_cache(cfg, num_slots, max_len)
+    cspecs = plan.cache_specs(cache)
+    step = plan.sjit(make_decode_step(plan.local_cfg),
+                     in_specs=(plan.param_specs(params), cspecs,
+                               P(None, None), P(None)),
+                     out_specs=(P(None, None, None), cspecs))
+    jaxpr = jax.make_jaxpr(step)(
+        params, cache, {"tokens": jnp.zeros((num_slots, 1), jnp.int32)},
+        jnp.zeros((num_slots,), jnp.int32))
+    counts = count_psums(jaxpr)
+    scan = cfg.scan_layers
+    want = (PSUMS_PER_LAYER if scan else PSUMS_PER_LAYER * cfg.num_layers)
+    where = f"{cfg.name} decode step tp={tp} scan={scan}"
+    viol = psum_violations(counts["in_scan"], counts["top"], tp=tp,
+                           scan=scan, num_layers=cfg.num_layers, where=where)
+    return {"found": counts["in_scan"] + counts["top"],
+            "in_scan": counts["in_scan"], "top": counts["top"],
+            "want": want if tp > 1 else 0,
+            "violations": [str(v) for v in viol]}
+
+
+# -- QERA012: donation ------------------------------------------------------
+
+def donation_violations(fn: Callable, args: tuple, *,
+                        donate_argnums: tuple[int, ...],
+                        where: str = "") -> list[Violation]:
+    """Lower ``fn`` with donation requested and verify the compiled artifact
+    aliases input buffers to outputs (the ``tf.aliasing_output`` attribute
+    in the lowered StableHLO — present even on the CPU backend)."""
+    import jax
+    lowered = jax.jit(fn, donate_argnums=donate_argnums).lower(*args)
+    text = lowered.as_text()
+    aliased = text.count("tf.aliasing_output")
+    ndonated = sum(len(jax.tree.leaves(args[i])) for i in donate_argnums)
+    if aliased == 0:
+        return [Violation(
+            "QERA012", ERROR, where,
+            f"donation requested for {ndonated} buffer(s) but the compiled "
+            f"artifact aliases none: every call pays a full copy of the "
+            f"donated operand (XLA drops donation silently when an output "
+            f"cannot alias, e.g. after a dtype/shape change)",
+            "return updated buffers with the same shape/dtype as the "
+            "donated inputs")]
+    return []
+
+
+def audit_admission_donation(cfg, *, num_slots: int = 2, max_len: int = 32,
+                             page_size: int = 16) -> list[Violation]:
+    """The buffers the batcher donates every admission tick: ``place_slot``
+    (scratch-cache -> slot row) and the CoW ``fork_page`` must stay
+    donation-compatible end to end."""
+    import jax.numpy as jnp
+
+    from repro.serve.batching import make_place_slot
+    from repro.serve.engine import init_cache
+    from repro.serve.paging import init_paged_cache, make_fork_page
+
+    out = []
+    cache = init_cache(cfg, num_slots, max_len)
+    cache1 = init_cache(cfg, 1, max_len)
+    out += donation_violations(
+        make_place_slot(num_slots), (cache, cache1, jnp.int32(0)),
+        donate_argnums=(0,),
+        where=f"{cfg.name} place_slot (admission scratch)")
+    paged = init_paged_cache(cfg, num_slots, max_len, page_size=page_size,
+                             num_pages=5)
+    paged.pop("page_table", None)
+    out += donation_violations(
+        make_fork_page(), (paged, jnp.int32(1), jnp.int32(2)),
+        donate_argnums=(0,), where=f"{cfg.name} fork_page (CoW)")
+    return out
+
+
+# -- QERA013: host callbacks in traced steps --------------------------------
+
+def callback_violations(jaxpr, *, where: str = "") -> list[Violation]:
+    counts = count_primitives(jaxpr, FORBIDDEN_PRIMITIVES)
+    out = []
+    for prim, c in counts.items():
+        n = c["in_scan"] + c["top"]
+        if n:
+            out.append(Violation(
+                "QERA013", ERROR, where,
+                f"{n} `{prim}` primitive(s) in a traced serving step"
+                f"{' (inside the scan body)' if c['in_scan'] else ''}: "
+                f"each is a blocking host round-trip per decode tick",
+                "compute on device; stage host work outside the step"))
+    return out
+
+
+def audit_step_callbacks(cfg, *, num_slots: int = 2,
+                         max_len: int = 32) -> list[Violation]:
+    """Trace the dense decode + chunk steps and flag any host callback."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.transformer import init_params
+    from repro.serve.engine import init_cache, make_chunk_step, \
+        make_decode_step
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(cfg, num_slots, max_len)
+    jaxpr = jax.make_jaxpr(make_decode_step(cfg))(
+        params, cache, {"tokens": jnp.zeros((num_slots, 1), jnp.int32)},
+        jnp.zeros((num_slots,), jnp.int32))
+    out = callback_violations(jaxpr, where=f"{cfg.name} decode step")
+    cache1 = init_cache(cfg, 1, max_len)
+    jaxpr = jax.make_jaxpr(make_chunk_step(cfg))(
+        params, cache1, jnp.zeros((1, 8), jnp.int32), jnp.int32(0))
+    out += callback_violations(jaxpr, where=f"{cfg.name} chunk step")
+    return out
+
+
+# -- QERA014: retrace budget ------------------------------------------------
+
+def retrace_budget(domain_size: int) -> int:
+    """Distinct trace-cache keys a bucketing helper may emit over a domain:
+    O(log) plus slack for the fixed non-pow2 edge widths."""
+    return 2 * max(math.ceil(math.log2(max(domain_size, 2))), 1) + 4
+
+
+def bucketing_violations(fn: Callable[[int], Any], domain: Iterable[int], *,
+                         name: str, budget: int | None = None,
+                         where: str = "") -> list[Violation]:
+    """Hash the trace-cache key ``fn`` emits for every input in ``domain``;
+    flag a recompilation storm when the distinct-key count exceeds the
+    O(log) budget."""
+    dom = list(domain)
+    keys = {fn(x) for x in dom}
+    cap = budget if budget is not None else retrace_budget(len(dom))
+    if len(keys) > cap:
+        return [Violation(
+            "QERA014", ERROR, where,
+            f"{name} emits {len(keys)} distinct trace-cache keys over "
+            f"{len(dom)} inputs (budget {cap}): every distinct key is a "
+            f"full jit retrace of the serving step",
+            "bucket to powers of two (serve/paging.py page_bucket, "
+            "kernels/ops.py pick_prefill_chunk)")]
+    return []
+
+
+def audit_serving_retraces(*, max_len: int = 4096, page_size: int = 32,
+                           chunk_tokens: int = 64,
+                           where: str = "serving loop") -> list[Violation]:
+    """The shipped bucketing helpers must hold the retrace budget over the
+    full domain a serving session can visit."""
+    from repro.kernels.ops import chunk_plan, pick_prefill_chunk
+    from repro.serve.paging import page_bucket
+
+    max_pages = max(max_len // page_size, 2)
+    out = bucketing_violations(
+        lambda p: page_bucket(p, max_pages), range(1, max_pages + 1),
+        name="page_bucket", where=f"{where} / decode table width")
+    out += bucketing_violations(
+        lambda n: pick_prefill_chunk(n, page_size=page_size,
+                                     max_chunk=chunk_tokens),
+        range(1, max_len + 1),
+        name="pick_prefill_chunk", where=f"{where} / prefill chunk width")
+    # chunk_plan: each WIDTH in a plan is one trace of the chunk step, so
+    # the key set is the union of widths across all prompt lengths
+    widths: set[int] = set()
+    for n in range(1, max_len + 1):
+        widths.update(chunk_plan(n, chunk_tokens))
+    cap = retrace_budget(chunk_tokens)
+    if len(widths) > cap:
+        out.append(Violation(
+            "QERA014", ERROR, f"{where} / chunk plan",
+            f"chunk_plan emits {len(widths)} distinct chunk widths over "
+            f"prompts up to {max_len} tokens (budget {cap}): every width "
+            f"is a jit retrace of the chunk step",
+            "binary tail decomposition must stay pow2"))
+    return out

@@ -113,6 +113,7 @@ def decode_attention_pallas(
     )
     kernel = functools.partial(_kernel, sm_scale=sm_scale,
                                page_size=page_size)
+    # contract: decode_attention
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

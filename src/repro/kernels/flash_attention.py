@@ -93,6 +93,7 @@ def flash_attention_pallas(
     kernel = functools.partial(
         _kernel, sm_scale=sm_scale, causal=causal, block_q=block_q,
         block_kv=block_kv, kv_len=kv_len)
+    # contract: flash_attention
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -157,6 +157,7 @@ def mxint_matmul_lowrank_pallas(
     grid = (m // block_m, n // block_n, k // block_k)
     kernel = functools.partial(_kernel, bits=bits, block_size=block_size,
                                epb=epb, out_dtype=out_dtype, n_axis=1, k_axis=2)
+    # contract: mxint_matmul_lowrank
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -200,6 +201,7 @@ def mxint_matmul_lowrank_decode_pallas(
     grid = (n // block_n, k // block_k)
     kernel = functools.partial(_kernel, bits=bits, block_size=block_size,
                                epb=epb, out_dtype=out_dtype, n_axis=0, k_axis=1)
+    # contract: mxint_matmul_lowrank_decode
     return pl.pallas_call(
         kernel,
         grid=grid,

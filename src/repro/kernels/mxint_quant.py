@@ -55,6 +55,7 @@ def mxint_quantize_pallas(w: jax.Array, *, bits: int, block_size: int,
         f"MXINT block {block_size} must cover whole packed bytes (epb={epb})")
     grid = (k // block_size, n // block_n)
     kernel = functools.partial(_kernel, bits=bits, epb=epb)
+    # contract: mxint_quantize
     return pl.pallas_call(
         kernel,
         grid=grid,

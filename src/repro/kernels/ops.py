@@ -121,9 +121,26 @@ def pick_blocks(m: int, k: int, n: int, *, block_size: int, epb: int = 1,
             bn = n                     # degenerate narrow tiles: one block
     m_pad = -(-m // 8) * 8
     decode = m_pad <= min(block_m, _DECODE_M_MAX)
-    # prefill bm stays 8-sublane-aligned too (Mosaic rejects e.g. bm=33)
-    bm = m_pad if decode else min(block_m, m_pad)
+    # prefill bm stays 8-sublane-aligned too (Mosaic rejects e.g. bm=33),
+    # so round a non-aligned block_m cap DOWN to the 8-sublane grid
+    cap8 = max(8, block_m - block_m % 8)
+    bm = m_pad if decode else min(cap8, m_pad)
     return bm, bn, bk, decode
+
+
+def pick_quant_bn(n: int, cap: int = 2048) -> int:
+    """Lane-block width for the on-device repack (``quantize_weights``).
+
+    128 when N is lane-aligned; otherwise the largest divisor of N up to
+    ``cap``.  A vocab-sized N that is not a 128-multiple (llama4-maverick:
+    202048) must never collapse into a single whole-row block — that is a
+    tens-of-MiB VMEM launch (QERA001).
+    """
+    if n % 128 == 0:
+        return 128
+    if n <= cap:
+        return n
+    return _largest_divisor(n, cap, 8) or _largest_divisor(n, cap) or n
 
 
 @partial(jax.jit, static_argnames=("bits", "block_size", "block_m", "block_n",
@@ -249,7 +266,7 @@ def quantize_weights(w: jax.Array, *, bits: int, block_size: int,
     if interpret is None:
         interpret = not _on_tpu()
     k, n = w.shape
-    bn = 128 if n % 128 == 0 else n
+    bn = pick_quant_bn(n)
     return mxint_quantize_pallas(w, bits=bits, block_size=block_size,
                                  block_n=bn, packed=packed,
                                  interpret=interpret)

@@ -128,6 +128,7 @@ def prefill_attention_pallas(
     )
     kernel = functools.partial(_kernel, sm_scale=sm_scale,
                                page_size=page_size, chunk=c)
+    # contract: prefill_attention
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

@@ -48,6 +48,12 @@ failure semantics (supervised mode):
   --inject-faults runs a seeded storm (pool-exhaustion spikes + NaN ticks +
               one mid-tick crash) to demonstrate the above; outputs must be
               token-identical to the fault-free run.
+
+static preflight:
+  --strict    runs the repro.analysis contract checker on THIS config at
+              its MXINT format and tp degree before any device, mesh, or
+              weight is touched, and refuses to serve on any error-severity
+              violation.  QERA0xx codes are documented in docs/analysis.md.
 """
 
 
@@ -116,6 +122,12 @@ def main():
     tp.add_argument("--platform", default=None,
                     help="pin the jax backend (cpu|gpu|tpu); applied before "
                          "jax initializes")
+    ap.add_argument("--strict", action="store_true",
+                    help="static preflight via repro.analysis: audit kernel-"
+                         "launch contracts, sharding divisibility, and "
+                         "retrace budgets for this (arch, bits, tp) cell; "
+                         "exit 2 on any error-severity violation (codes: "
+                         "docs/analysis.md)")
     tp.add_argument("--host-devices", type=int, default=None,
                     help="force N virtual CPU devices (XLA host platform "
                          "device count) — lets --tp run on a single CPU "
@@ -134,6 +146,23 @@ def main():
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg, scan_layers=False)
+
+    if args.strict:
+        # pure shape math — refuses a mis-sharded config in milliseconds,
+        # before any device, mesh, or parameter exists
+        from repro.analysis import strict_audit
+        tp_degree = args.tp if args.tp and args.tp > 1 else 1
+        rep = strict_audit(cfg, quantizer=args.bits, tp=tp_degree)
+        for v in rep.violations:
+            print(f"  {v}")
+        if rep.errors:
+            print(f"--strict: refusing to serve {cfg.name} x {args.bits} x "
+                  f"tp{tp_degree}: {len(rep.errors)} error-severity "
+                  f"violation(s) above (codes: docs/analysis.md)")
+            raise SystemExit(2)
+        print(f"--strict: {cfg.name} x {args.bits} x tp{tp_degree} passes "
+              f"the static audit ({len(rep.warnings)} warning(s))")
+
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     if args.quantize:

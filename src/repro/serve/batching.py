@@ -188,7 +188,7 @@ class ContinuousBatcher:
                  num_pages: int | None = None, chunk_tokens: int = 64,
                  prefix_cache: bool = False, fault_injector: Any = None,
                  nan_guard: bool = True, nan_retry_limit: int = 3,
-                 mesh: Any = None):
+                 mesh: Any = None, debug_invariants: bool = False):
         self.params, self.cfg = params, cfg
         # tensor parallelism: a 1-D ('model',) serving mesh shard_maps every
         # forward-calling step — decode and chunked prefill — so each device
@@ -219,6 +219,12 @@ class ContinuousBatcher:
         # the prefix index) so one poisoned stream never stalls co-batched
         # slots.
         self.injector = fault_injector
+        # debug_invariants: re-check the paged-pool laws (refcount
+        # conservation, shared-page write protection) from scratch after
+        # every tick (analysis/runtime.py).  O(pool) host work per tick —
+        # for tests, not production.
+        self.debug_invariants = debug_invariants
+        self._protected_digests: dict[int, str] = {}
         self.nan_guard = nan_guard
         self.nan_retry_limit = nan_retry_limit
         self._nan_strikes = np.zeros(num_slots, np.int32)
@@ -631,6 +637,27 @@ class ContinuousBatcher:
         self.lengths[slot] = 0
 
     def step(self) -> None:
+        self._step()
+        if self.debug_invariants and self.paged:
+            self._assert_invariants()
+
+    def _assert_invariants(self) -> None:
+        """Runtime assertion mode: refcount conservation + shared-page
+        write protection, re-derived from scratch after the tick."""
+        from repro.analysis.runtime import (check_page_accounting,
+                                            check_protected_writes,
+                                            snapshot_protected_pages)
+        errs = check_page_accounting(self.pool, self.slot_pages,
+                                     self.page_table)
+        cur = snapshot_protected_pages(self.cache, self.pool)
+        errs += check_protected_writes(self._protected_digests, cur)
+        self._protected_digests = cur
+        if errs:
+            raise AssertionError(
+                f"debug_invariants after tick {self.tick_count}: "
+                + "; ".join(errs))
+
+    def _step(self) -> None:
         self.tick_count += 1
         if self.injector is not None:
             self.injector.maybe_crash("pre")

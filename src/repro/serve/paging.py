@@ -99,6 +99,9 @@ class PagePool:
         self.page_size = page_size
         self._free = list(range(num_pages - 1, 0, -1))   # pop() -> low first
         self._refs = np.zeros(num_pages, np.int32)
+        # bumped each time a page is handed out: the write-protection
+        # checker must not compare content across an evict + realloc
+        self._gen = np.zeros(num_pages, np.int64)
         self._registered: set[int] = set()
         self._cached: OrderedDict[int, None] = OrderedDict()  # refcount-0 LRU
         self.on_reclaim: Callable[[int], None] | None = None
@@ -139,6 +142,7 @@ class PagePool:
                 self.reclaimed_cached += 1
                 self._drop_registration(p)
             self._refs[p] = 1
+            self._gen[p] += 1
             pages.append(p)
         self.acquired_total += n
         return pages
@@ -165,6 +169,14 @@ class PagePool:
                     self._cached[p] = None
                 else:
                     self._free.append(p)
+
+    def accounting(self) -> dict:
+        """Read-only snapshot of the allocator's books for the invariant
+        checkers (analysis/runtime.py) — the sanctioned way to observe the
+        private fields without mutating them."""
+        return {"refs": self._refs.copy(), "free": list(self._free),
+                "cached": list(self._cached), "registered":
+                set(self._registered), "generation": self._gen.copy()}
 
     def set_registered(self, page: int, flag: bool) -> None:
         """Prefix-index hook: mark a page's content as cached (survives
@@ -195,6 +207,7 @@ class PagePool:
             "cached": list(self._cached),           # LRU order preserved
             "acquired_total": self.acquired_total,
             "reclaimed_cached": self.reclaimed_cached,
+            "generation": [int(g) for g in self._gen],
         }
 
     def load_state(self, state: dict) -> None:
@@ -206,6 +219,8 @@ class PagePool:
         self._cached = OrderedDict((p, None) for p in state["cached"])
         self.acquired_total = state["acquired_total"]
         self.reclaimed_cached = state["reclaimed_cached"]
+        self._gen = np.asarray(
+            state.get("generation", np.zeros(self.num_pages)), np.int64)
         self.reserved = 0
 
     # legacy exclusive-ownership names, kept for external callers

@@ -161,30 +161,19 @@ def mode_snapshot():
 
 
 def mode_psum():
-    """Exactly one all-reduce per projection pair: the TP decode step's
-    jaxpr carries 2 psums with a scanned stack (the scan body traced once)
-    and 2 * num_layers unrolled; and the standalone sharded kernel matches
-    the single-device fused kernel in both roles."""
-    from jax.sharding import PartitionSpec as P
-    from repro.serve.engine import init_cache, make_decode_step
-    from repro.sharding.serving import plan_for
+    """Exactly one all-reduce per projection pair: the psum count AND
+    placement contract now lives in ``repro.analysis.audit_tp_psums`` (one
+    implementation — unit-tested at 1 device via ``psum_violations``,
+    integration-tested here on a real 2-device mesh); the standalone
+    sharded kernel must also match the single-device fused kernel in both
+    roles."""
+    from repro.analysis import audit_tp_psums
     out = {}
     for scan in (True, False):
         cfg = _cfg(scan_layers=scan)
-        params = _params(cfg)
-        mesh = make_serving_mesh(2)
-        plan = plan_for(cfg, mesh)
-        cache = init_cache(cfg, 2, 64)
-        cspecs = plan.cache_specs(cache)
-        step = plan.sjit(make_decode_step(plan.local_cfg),
-                         in_specs=(plan.param_specs(params), cspecs,
-                                   P(None, None), P(None)),
-                         out_specs=(P(None, None, None), cspecs))
-        jaxpr = str(jax.make_jaxpr(step)(
-            params, cache, {"tokens": jnp.zeros((2, 1), jnp.int32)},
-            jnp.zeros((2,), jnp.int32)))
-        want = 2 if scan else 2 * cfg.num_layers
-        out[f"psums_scan_{scan}"] = [jaxpr.count("psum["), want]
+        res = audit_tp_psums(cfg, make_serving_mesh(2))
+        out[f"psums_scan_{scan}"] = [res["found"], res["want"],
+                                     res["violations"]]
 
     # sharded fused kernel vs the single-device kernel
     from repro.kernels.ops import quantized_matmul, quantized_matmul_sharded

@@ -1,0 +1,38 @@
+"""Shared test config: runtime invariant checking for the serving suites.
+
+Every ``ContinuousBatcher`` constructed from the serving, paging,
+prefix-cache, chunked-prefill, fault-tolerance, and TP suites runs with
+``debug_invariants=True``: after every tick the batcher re-derives page
+refcount conservation from the slot tables and hashes every protected
+(shared or prefix-registered) page to prove no write bypassed the
+copy-on-write fork (repro.analysis.runtime).  Tests that pass the flag
+explicitly keep their value — the fixture only fills the default.
+"""
+
+import pytest
+
+_INVARIANT_SUITES = (
+    "test_serving",
+    "test_serving_kernel_path",
+    "test_paged_kv",
+    "test_prefix_cache",
+    "test_chunked_prefill",
+    "test_fault_tolerance_serving",
+    "test_tp_serving",
+)
+
+
+@pytest.fixture(autouse=True)
+def _debug_invariants(request, monkeypatch):
+    if request.module.__name__ not in _INVARIANT_SUITES:
+        yield
+        return
+    from repro.serve.batching import ContinuousBatcher
+    orig = ContinuousBatcher.__init__
+
+    def init(self, *args, **kwargs):
+        kwargs.setdefault("debug_invariants", True)
+        orig(self, *args, **kwargs)
+
+    monkeypatch.setattr(ContinuousBatcher, "__init__", init)
+    yield

@@ -1,0 +1,388 @@
+"""repro.analysis: every documented QERA code demonstrated by a failing
+fixture AND a fixed twin, plus the analyzer-clean sweep over the registry,
+the latent-finding regressions the auditor surfaced, and the runtime
+(debug_invariants) checkers.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis import (CODES, audit_arch, audit_decode_attention,
+                            audit_matmul_launch, audit_quantize_weights,
+                            audit_quantized_matmul, bucketing_violations,
+                            callback_violations, donation_violations,
+                            lint_paths, lint_source, psum_violations,
+                            strict_audit)
+from repro.analysis.lint import DEFAULT_LINT_PATHS
+from repro.analysis.runtime import (check_page_accounting,
+                                    check_protected_writes)
+from repro.configs import ASSIGNED_ARCHS, get_arch
+from repro.quant.mxint import MXINT_CONFIGS
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def codes(violations, severity=None):
+    return {v.code for v in violations
+            if severity is None or v.severity == severity}
+
+
+# -- QERA001: VMEM budget ---------------------------------------------------
+
+def test_vmem_overflow_flagged_and_fixed():
+    kw = dict(bits=4, block_size=32, decode=False)
+    bad = audit_matmul_launch(4096, 8192, 8192, 64, bm=2048, bn=2048,
+                              bk=128, **kw)
+    assert "QERA001" in codes(bad, "error")
+    assert any("pick_blocks" in v.suggestion for v in bad)
+    good = audit_matmul_launch(4096, 8192, 8192, 64, bm=128, bn=128,
+                               bk=128, **kw)
+    assert "QERA001" not in codes(good)
+
+
+def test_vmem_interpret_backend_has_no_budget():
+    out = audit_matmul_launch(4096, 8192, 8192, 64, bits=4, block_size=32,
+                              bm=2048, bn=2048, bk=128, decode=False,
+                              backend="interpret")
+    assert "QERA001" not in codes(out)
+
+
+# -- QERA002: sublane/lane alignment ---------------------------------------
+
+def test_misaligned_bm_flagged_and_fixed():
+    kw = dict(bits=4, block_size=32, bn=128, bk=128, decode=False)
+    bad = audit_matmul_launch(288, 256, 256, 8, bm=36, **kw)
+    assert "QERA002" in codes(bad, "error")  # Mosaic rejects bm=36
+    good = audit_matmul_launch(288, 256, 256, 8, bm=32, **kw)
+    assert "QERA002" not in codes(good, "error")
+
+
+# -- QERA003: packed/exponent divisibility ----------------------------------
+
+def test_untileable_k_flagged_and_fixed():
+    bad = audit_quantized_matmul(8, 40, 128, 8, bits=4, block_size=32)
+    assert "QERA003" in codes(bad, "error")
+    good = audit_quantized_matmul(8, 64, 128, 8, bits=4, block_size=32)
+    assert "QERA003" not in codes(good)
+
+
+def test_gqa_indivisible_heads_flagged():
+    bad = audit_decode_attention(4, 12, 5, 64, page_size=32, npages=8)
+    assert "QERA003" in codes(bad, "error")
+    good = audit_decode_attention(4, 12, 4, 64, page_size=32, npages=8)
+    assert "QERA003" not in codes(good)
+
+
+# -- QERA004: grid sanity ----------------------------------------------------
+
+def test_empty_grid_flagged_and_fixed():
+    bad = audit_decode_attention(4, 8, 8, 64, page_size=32, npages=0)
+    assert "QERA004" in codes(bad, "error")
+    good = audit_decode_attention(4, 8, 8, 64, page_size=32, npages=4)
+    assert "QERA004" not in codes(good)
+
+
+# -- QERA011: psum count/placement ------------------------------------------
+
+def test_psum_contract_pure_checker():
+    kw = dict(num_layers=4, where="t")
+    # missing both all-reduces at tp=2
+    assert "QERA011" in codes(psum_violations(0, 0, tp=2, scan=True, **kw))
+    # contract met: 2 in the scan body, none outside
+    assert not psum_violations(2, 0, tp=2, scan=True, **kw)
+    # right count, wrong placement (outside the scan body)
+    assert "QERA011" in codes(psum_violations(0, 2, tp=2, scan=True, **kw))
+    # unrolled wants 2 * num_layers
+    assert not psum_violations(0, 8, tp=2, scan=False, **kw)
+    assert "QERA011" in codes(psum_violations(0, 2, tp=2, scan=False, **kw))
+    # tp=1 must not pay any collective
+    assert "QERA011" in codes(psum_violations(2, 0, tp=1, scan=True, **kw))
+    assert not psum_violations(0, 0, tp=1, scan=True, **kw)
+
+
+# -- QERA012: donation -------------------------------------------------------
+
+def test_donation_flagged_and_fixed():
+    import jax.numpy as jnp
+    x = jnp.zeros((8, 128), jnp.float32)
+
+    def not_donatable(a):           # dtype changes: XLA drops the alias
+        return a.astype(jnp.bfloat16)
+
+    def donatable(a):
+        return a + 1
+
+    with pytest.warns(UserWarning, match="donated"):
+        bad = donation_violations(not_donatable, (x,), donate_argnums=(0,),
+                                  where="t")
+    assert "QERA012" in codes(bad, "error")
+    assert not donation_violations(donatable, (x,), donate_argnums=(0,),
+                                   where="t")
+
+
+# -- QERA013: host callbacks in a traced step --------------------------------
+
+def test_callback_flagged_and_fixed():
+    import jax
+    import jax.numpy as jnp
+
+    def with_cb(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v), jax.ShapeDtypeStruct(x.shape, x.dtype),
+            x) + 1
+
+    def clean(x):
+        return x + 1
+
+    x = jnp.zeros((4,), jnp.float32)
+    assert "QERA013" in codes(
+        callback_violations(jax.make_jaxpr(with_cb)(x), where="t"))
+    assert not callback_violations(jax.make_jaxpr(clean)(x), where="t")
+
+
+# -- QERA014: recompilation storms -------------------------------------------
+
+def test_bucketing_flagged_and_fixed():
+    from repro.serve.paging import page_bucket
+    bad = bucketing_violations(lambda n: n, range(1, 257), name="identity",
+                               where="t")
+    assert "QERA014" in codes(bad, "error")
+    good = bucketing_violations(lambda n: page_bucket(n, 256),
+                                range(1, 257), name="page_bucket", where="t")
+    assert not good
+
+
+# -- QERA021-025: the AST lint ----------------------------------------------
+
+SERVE = "src/repro/serve/x.py"
+KERNELS = "src/repro/kernels/x.py"
+
+
+def test_lint_host_sync_in_hot_path():
+    bad = ("import jax\n"
+           "@jax.jit\n"
+           "def step(x):\n"
+           "    return float(x.sum())\n")
+    assert "QERA021" in codes(lint_source(bad, SERVE))
+    good = ("import jax\n"
+            "@jax.jit\n"
+            "def step(x):\n"
+            "    return x.sum()\n")
+    assert not lint_source(good, SERVE)
+
+
+def test_lint_item_on_traced_value():
+    bad = ("import jax\n"
+           "def make_step():\n"
+           "    def step(x):\n"
+           "        return x.item()\n"
+           "    return jax.jit(step)\n")
+    assert "QERA021" in codes(lint_source(bad, SERVE))
+
+
+def test_lint_pool_internals_mutated_outside_pool():
+    bad = ("def steal(pool):\n"
+           "    pool._refs[3] = 0\n"
+           "    pool._free.append(3)\n")
+    assert "QERA022" in codes(lint_source(bad, SERVE))
+    good = ("class PagePool:\n"
+            "    def release(self):\n"
+            "        self._refs[3] = 0\n"
+            "        self._free.append(3)\n")
+    assert not lint_source(good, SERVE)
+
+
+def test_lint_cow_bypass():
+    # pool-leaf writes are allowed ONLY inside serve/paging.py (where the
+    # jitted helpers + CoW guard live); anywhere else in serve/ they bypass
+    # the fork
+    src = ("def write(cache, x):\n"
+           "    k_pages = cache\n"
+           "    return k_pages.at[0].set(x)\n")
+    assert "QERA023" in codes(
+        lint_source(src, "src/repro/serve/batching.py"))
+    assert not lint_source(src, "src/repro/serve/paging.py")
+    fork = ("def admit(self, page):\n"
+            "    return self._fork(page)\n")
+    assert "QERA023" in codes(
+        lint_source(fork, "src/repro/serve/batching.py"))
+    guarded = ("def _cow_fork(self, page):\n"
+               "    return self._fork(page)\n")
+    assert not lint_source(guarded, "src/repro/serve/batching.py")
+
+
+def test_lint_unseeded_randomness():
+    bad = "import numpy as np\nRNG = np.random.default_rng()\n"
+    assert "QERA024" in codes(lint_source(bad, SERVE))
+    good = "import numpy as np\nRNG = np.random.default_rng(11)\n"
+    assert not lint_source(good, SERVE)
+
+
+def test_lint_unannotated_pallas_call():
+    bad = ("import jax.experimental.pallas as pl\n"
+           "def launch(k, grid):\n"
+           "    return pl.pallas_call(k, grid=grid)\n")
+    assert "QERA025" in codes(lint_source(bad, KERNELS))
+    good = ("import jax.experimental.pallas as pl\n"
+            "def launch(k, grid):\n"
+            "    # contract: flash_attention\n"
+            "    return pl.pallas_call(k, grid=grid)\n")
+    assert not lint_source(good, KERNELS)
+
+
+def test_repo_hot_path_is_lint_clean():
+    assert lint_paths(list(DEFAULT_LINT_PATHS), root=ROOT) == []
+
+
+# -- the registry sweep ------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["mxint4", "mxint3", "mxint2"])
+def test_registry_sweep_error_free(fmt):
+    """CI acceptance: no error-severity violation anywhere in the
+    serviceable registry x format x tp matrix."""
+    spec = MXINT_CONFIGS[fmt]
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_arch(arch)
+        for tp in (1, 2, 4):
+            found = audit_arch(cfg, bits=spec.bits,
+                               block_size=spec.block_size, tp=tp)
+            if found is None:
+                continue                  # clean refusal (validate_tp)
+            errs = [v for v in found if v.severity == "error"]
+            assert not errs, (arch, fmt, tp, [str(v) for v in errs])
+
+
+@pytest.mark.parametrize(
+    "arch", ["command-r-plus-104b", "phi3.5-moe-42b-a6.6b",
+             "llama4-maverick-400b-a17b"])
+def test_never_swept_archs_latent_findings(arch):
+    """The archs PR 7 never exercised: the auditor must surface their GQA
+    sublane waste as warnings (G not a multiple of 8) while remaining
+    error-free — these are exactly the latent findings this PR fixed or
+    documented."""
+    cfg = get_arch(arch)
+    found = audit_arch(cfg, bits=4, block_size=32, tp=1)
+    assert found is not None
+    assert not [v for v in found if v.severity == "error"]
+    warns = [v for v in found
+             if v.code == "QERA002" and "decode_attention" in v.where]
+    assert warns, f"{arch}: expected GQA sublane warnings"
+
+
+# -- the latent bugs the auditor caught --------------------------------------
+
+def test_pick_blocks_rounds_prefill_bm_to_sublane_grid():
+    from repro.kernels.ops import pick_blocks
+    bm, bn, bk, decode = pick_blocks(288, 256, 256, block_size=32,
+                                     block_m=36)
+    assert not decode and bm % 8 == 0 and bm == 32
+    # decode regime is untouched by the cap rounding
+    bm, _, _, decode = pick_blocks(8, 256, 256, block_size=32, block_m=36)
+    assert decode and bm == 8
+
+
+def test_quantize_vocab_not_lane_aligned_stays_in_budget():
+    from repro.kernels.ops import pick_quant_bn
+    n = 202048                      # llama4-maverick vocab: % 128 == 64
+    bn = pick_quant_bn(n)
+    assert n % bn == 0 and bn <= 2048 and bn % 8 == 0
+    out = audit_quantize_weights(4096, n, bits=4, block_size=32)
+    assert "QERA001" not in codes(out)
+
+
+# -- the strict startup gate -------------------------------------------------
+
+def test_strict_audit_refuses_mis_sharded_config():
+    rep = strict_audit(get_arch("yi-34b"), tp=3)
+    assert rep.errors and {v.code for v in rep.errors} == {"QERA003"}
+    rep = strict_audit(get_arch("yi-34b"), tp=2)
+    assert not rep.errors
+
+
+def test_every_code_is_documented():
+    doc = open(os.path.join(ROOT, "docs", "analysis.md")).read()
+    for code in CODES:
+        assert code in doc, f"{code} missing from docs/analysis.md"
+    assert len(CODES) >= 8
+
+
+# -- runtime (debug_invariants) checkers -------------------------------------
+
+def test_page_accounting_detects_tampering():
+    from repro.serve.paging import PagePool
+    pool = PagePool(8, 4)
+    pages = pool.acquire(2)
+    slot_pages = [list(pages)]
+    table = np.zeros((1, 4), np.int32)
+    table[0, :2] = pages
+    assert check_page_accounting(pool, slot_pages, table) == []
+    # a page reference the pool never granted
+    slot_pages[0].append(7)
+    errs = check_page_accounting(pool, slot_pages, table)
+    assert errs and any("refcount" in e for e in errs)
+
+
+def test_protected_write_detection_respects_generation():
+    prev = {1: (0, "aa"), 2: (0, "bb")}
+    # page 1 rewritten under the SAME allocation generation: a CoW bypass
+    assert check_protected_writes(prev, {1: (0, "XX"), 2: (0, "bb")})
+    # page 1 evicted + reallocated (generation bumped): legitimate rewrite
+    assert not check_protected_writes(prev, {1: (1, "XX"), 2: (0, "bb")})
+
+
+def test_debug_invariants_catches_live_corruption():
+    """End-to-end: a batcher with debug_invariants=True must refuse a tick
+    after its page accounting is corrupted under it."""
+    import jax
+    from repro.models import init_params
+    from repro.models.config import reduced
+    from repro.serve.batching import ContinuousBatcher, Request
+    cfg = reduced(get_arch("minicpm-2b"), scan_layers=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = ContinuousBatcher(params, cfg, num_slots=2, max_len=32, paged=True,
+                          page_size=8, debug_invariants=True)
+    b.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                     max_new_tokens=4))
+    b.step()
+    b.step()
+    assert b.slot_pages[0], "expected slot 0 to own pages"
+    b.slot_pages[0].append(b.pool.num_pages - 1)   # never granted
+    with pytest.raises(AssertionError, match="debug_invariants"):
+        b.step()
+
+
+# -- CLI + serve --strict (subprocess) ---------------------------------------
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    return env
+
+
+@pytest.mark.slow
+def test_cli_smoke_json_report(tmp_path):
+    out = tmp_path / "report.json"
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--arch", "minicpm-2b",
+         "--tp", "1", "2", "--layers", "launch,lint", "--json", str(out)],
+        capture_output=True, text=True, env=_env(), cwd=ROOT, timeout=560)
+    assert p.returncode == 0, p.stdout + p.stderr
+    rep = json.loads(out.read_text())
+    assert rep["summary"]["errors"] == 0
+    assert rep["cells"]
+
+
+@pytest.mark.slow
+def test_serve_strict_refuses_bad_tp():
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--strict", "--arch",
+         "yi-34b", "--tp", "3", "--platform", "cpu"],
+        capture_output=True, text=True, env=_env(), cwd=ROOT, timeout=560)
+    assert p.returncode == 2
+    assert "QERA003" in p.stdout and "refusing to serve" in p.stdout

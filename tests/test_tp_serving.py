@@ -29,8 +29,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED_ARCHS, get_arch
 from repro.kernels.ops import pick_blocks
-from repro.quant.mxint import (MXINT_CONFIGS, elems_per_byte,
-                               packed_shard_granule, validate_packed_sharding)
+# the divisibility checkers are re-exported by the analyzer — import them
+# from there so the test exercises the same entry point CI audits with
+from repro.analysis import packed_shard_granule, validate_packed_sharding
+from repro.quant.mxint import MXINT_CONFIGS, elems_per_byte
 from repro.sharding.serving import (serving_param_spec, tp_local_cfg, tp_role,
                                     validate_tp)
 
@@ -274,6 +276,7 @@ def test_tp_snapshot_round_trip():
 @pytest.mark.slow
 def test_tp_one_allreduce_per_projection_pair():
     res = _worker("psum")
-    assert res["psums_scan_True"][0] == res["psums_scan_True"][1], res
-    assert res["psums_scan_False"][0] == res["psums_scan_False"][1], res
+    for scan in ("True", "False"):
+        found, want, violations = res[f"psums_scan_{scan}"]
+        assert found == want and not violations, res
     assert res["kernel_column_close"] and res["kernel_row_close"], res
