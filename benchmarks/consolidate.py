@@ -1,0 +1,124 @@
+"""Consolidate per-section bench JSONs into ONE ``bench.json`` + trend.
+
+Every bench module writes its own ``experiments/bench/<name>.json``; CI
+used to upload them as separate artifacts, which made cross-PR comparison
+a manual scavenger hunt.  This module (run LAST by ``benchmarks.run``):
+
+* merges every ``experiments/bench/*.json`` present into
+  ``experiments/bench/bench.json`` under a ``sections`` key (so the
+  ``speculative`` section sits next to ``decode_throughput``,
+  ``tp_serving`` and ``fault_tolerance`` in one artifact);
+* computes a ``trend`` block against the PREVIOUS PR's consolidated
+  artifact, committed at ``benchmarks/baseline/bench.json``
+  (``experiments/`` is gitignored, so the baseline must live in-tree):
+  for each curated headline metric, ``{previous, current, ratio}``.
+  A missing baseline or section yields ``null`` entries, never a crash —
+  new sections simply start their history this PR.
+
+Refreshing the baseline is a deliberate, committed act:
+
+    cp experiments/bench/bench.json benchmarks/baseline/bench.json
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+BENCH_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+BENCH_JSON = BENCH_DIR / "bench.json"
+BASELINE_JSON = (Path(__file__).resolve().parent / "baseline"
+                 / "bench.json")
+
+# headline metrics: (section, path-within-section) -> short name
+HEADLINES = {
+    "decode_tokens_per_sec":
+        ("decode_throughput", ("engine", "tokens_per_sec_scan")),
+    "decode_hbm_reduction":
+        ("decode_throughput", ("kernel", "hbm_reduction_measured")),
+    "prefix_ttft_speedup":
+        ("decode_throughput", ("prefix_cache", "ttft_speedup_warm")),
+    "fault_goodput_storm":
+        ("fault_tolerance", ("goodput_tokens_per_tick_storm",)),
+    "spec_launch_reduction":
+        ("speculative", ("best", "launch_reduction")),
+    "spec_acceptance":
+        ("speculative", ("best", "acceptance_rate")),
+    "spec_batcher_speedup":
+        ("speculative", ("batcher", "wallclock_speedup")),
+}
+
+
+def _dig(tree, path):
+    for p in path:
+        if not isinstance(tree, dict) or p not in tree:
+            return None
+        tree = tree[p]
+    return tree if isinstance(tree, (int, float)) else None
+
+
+def _tp_headlines(sections: dict) -> dict:
+    out = {}
+    for row in (sections.get("tp_serving") or {}).get("results", []):
+        out[f"tp{row['tp']}_tokens_per_sec"] = row.get("tokens_per_sec")
+        if row.get("predicted_vs_measured_ratio") is not None:
+            out[f"tp{row['tp']}_allreduce_model_ratio"] = \
+                row["predicted_vs_measured_ratio"]
+    return out
+
+
+def headline_metrics(consolidated: dict) -> dict:
+    sections = consolidated.get("sections", {})
+    out = {name: _dig(sections.get(sec, {}), path)
+           for name, (sec, path) in HEADLINES.items()}
+    out.update(_tp_headlines(sections))
+    return {k: v for k, v in out.items() if v is not None}
+
+
+def run(csv_rows: list | None = None) -> dict:
+    sections = {}
+    for fn in sorted(BENCH_DIR.glob("*.json")):
+        if fn.name == "bench.json":
+            continue
+        try:
+            sections[fn.stem] = json.loads(fn.read_text())
+        except (json.JSONDecodeError, OSError) as e:  # partial CI runs
+            sections[fn.stem] = {"error": str(e)}
+
+    consolidated: dict = {"sections": sections}
+    now = headline_metrics(consolidated)
+
+    baseline = None
+    if BASELINE_JSON.exists():
+        baseline = headline_metrics(json.loads(BASELINE_JSON.read_text()))
+    trend = {}
+    for name in sorted(set(now) | set(baseline or {})):
+        prev, cur = (baseline or {}).get(name), now.get(name)
+        trend[name] = {
+            "previous": prev, "current": cur,
+            "ratio": (cur / prev) if prev and cur is not None else None,
+        }
+    consolidated["headlines"] = now
+    consolidated["trend"] = trend
+    consolidated["baseline_present"] = baseline is not None
+
+    BENCH_DIR.mkdir(parents=True, exist_ok=True)
+    BENCH_JSON.write_text(json.dumps(consolidated, indent=2))
+    print(f"wrote {BENCH_JSON} ({len(sections)} sections, "
+          f"{len(now)} headline metrics, baseline "
+          f"{'present' if baseline is not None else 'absent'})")
+    if csv_rows is not None:
+        for name, t in trend.items():
+            if t["ratio"] is not None:
+                csv_rows.append(
+                    f"trend,{name},0,"
+                    f"previous={t['previous']:.3g}"
+                    f";current={t['current']:.3g}"
+                    f";ratio={t['ratio']:.2f}x")
+    return consolidated
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("\n".join(rows))

@@ -10,7 +10,11 @@
   decode_throughput   decode fast path: tokens/sec + bytes/token (BENCH json)
   tp_serving          tensor-parallel serving: per-tp tokens/sec +
                       predicted-vs-measured all-reduce bytes (BENCH json)
+  speculative         self-speculative decoding: acceptance, launches per
+                      token, wall-clock model (BENCH json)
   roofline            §Roofline from the dry-run artifacts
+  consolidate         merge per-section jsons -> bench.json + trend vs
+                      the committed benchmarks/baseline artifact
 
 Run all:      PYTHONPATH=src python -m benchmarks.run
 Run one:      PYTHONPATH=src python -m benchmarks.run --only table3_ptq
@@ -25,7 +29,8 @@ import traceback
 
 BENCHES = ["fig1_output_error", "fig3_calib_size", "table1_qpeft",
            "table3_ptq", "table8_runtime", "kernel_bench",
-           "decode_throughput", "tp_serving", "roofline"]
+           "decode_throughput", "tp_serving", "speculative", "roofline",
+           "consolidate"]
 
 
 def main() -> None:

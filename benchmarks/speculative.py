@@ -1,0 +1,227 @@
+"""Self-speculative decoding benchmark: the MXINT draft plane as a free
+draft model (ISSUE 9 / ROADMAP "speculative decoding from the quantization
+hierarchy").
+
+All numbers come from the SAME packed weights — the draft path reads the
+``draft_bits`` high-order mantissa plane of the HBM-resident buffers
+(``serve/speculative.py``), the verifier is the full fused MXINT+low-rank
+kernel scoring all k drafts in ONE (B, k+1) chunk launch.  Sections:
+
+* **engine** — ``scan_generate`` at spec_k in {0, 2, 4} x draft_bits in
+  {2, 4}: acceptance rate, rounds, and the headline *full-precision
+  launches per emitted token* (spec_k=0 pays one fused launch per token;
+  speculation pays one verify launch per ROUND).  Outputs are asserted
+  bit-identical to spec_k=0 for every cell.  On CPU the per-launch
+  dispatch dominates, so launches/token is the hardware-independent
+  speedup signal; the run fails if the best cell does not clear 1.5x.
+* **cost model** — per-launch wall times of the three step kinds (full
+  decode, draft decode, (k+1)-token verify) feed the analytic model
+  ``speedup = E[tokens/round] * c_full / (k*c_draft + c_verify)``; the
+  json records predicted vs measured wall-clock speedup per cell so a
+  regression in either the kernel or the model is visible.  (On CPU
+  host emulation the draft launch is NOT cheaper — no HBM bandwidth to
+  save — so the cost ratio is recorded, not asserted.)
+* **batcher** — wall-clock tokens/sec of a ``ContinuousBatcher`` run at
+  spec_k=0 vs spec_k=4 on the serving path (paged + prefix cache),
+  outputs compared bit-for-bit.
+
+Results land in the CSV rows and ``experiments/bench/speculative.json``
+(consolidated into ``experiments/bench/bench.json`` by
+``benchmarks.consolidate``).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import LM_CFG, calib_batches, calibrate, pretrained_lm
+from benchmarks.kernel_bench import timed_us
+from repro.core import PTQConfig, quantize_params
+from repro.core.api import pack_for_serving
+from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.engine import init_cache, make_decode_step, scan_generate
+from repro.serve.speculative import make_draft_params
+
+BENCH_JSON = (Path(__file__).resolve().parent.parent / "experiments"
+              / "bench" / "speculative.json")
+
+B, PROMPT_LEN, STEPS = 4, 8, 32
+SPEC_KS = (2, 4)
+DRAFT_BITS = (2, 4)
+MIN_LAUNCH_REDUCTION = 1.5
+
+
+def _packed_model():
+    params = pretrained_lm()
+    stats = calibrate(params, LM_CFG, calib_batches(8))
+    qcfg = PTQConfig(method="qera_approx", rank=8, quantizer="mxint4")
+    return pack_for_serving(
+        quantize_params(params, qcfg, stats_by_path=stats), qcfg)
+
+
+def _step_costs(packed, cfg, spec_ks, draft_bits) -> dict:
+    """Per-launch wall times of the three step kinds on a warm jit."""
+    max_len = PROMPT_LEN + STEPS + max(spec_ks) + 1
+    cache = init_cache(cfg, B, max_len)
+    clen = jnp.full((B,), PROMPT_LEN, jnp.int32)
+    step = jax.jit(make_decode_step(cfg))
+
+    def one(params, width):
+        toks = {"tokens": jnp.zeros((B, width), jnp.int32)}
+        return timed_us(lambda: step(params, cache, toks, clen))
+
+    costs = {"c_full_us": one(packed, 1)}
+    for db in draft_bits:
+        dp = make_draft_params(packed, draft_bits=db, skip_lowrank=True)
+        costs[f"c_draft_us_bits{db}"] = one(dp, 1)
+    for k in spec_ks:
+        costs[f"c_verify_us_k{k}"] = one(packed, k + 1)
+    return costs
+
+
+def run(csv_rows: list | None = None) -> dict:
+    cfg = LM_CFG
+    packed = _packed_model()
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, PROMPT_LEN), 0,
+                                cfg.vocab_size)
+
+    results: dict = {"arch": cfg.name, "batch": B, "steps": STEPS}
+
+    # ---- engine: acceptance + launches/token, bit-identity per cell --------
+    ref = np.asarray(scan_generate(packed, cfg, prompt, STEPS))
+    t_ref = timed_us(lambda: scan_generate(packed, cfg, prompt, STEPS)) / 1e6
+    emitted = B * STEPS
+    results["baseline"] = {"tokens_per_sec": emitted / t_ref,
+                           "launches_per_token": 1.0}
+
+    costs = _step_costs(packed, cfg, SPEC_KS, DRAFT_BITS)
+    results["step_costs_us"] = costs
+    # <1 on real accelerators (draft skips the low-rank bytes+FLOPs and
+    # unpacks a narrower plane); on CPU host emulation there is no HBM
+    # bandwidth to save and the plane extraction costs extra integer ops,
+    # so the ratio is >1 — recorded, not asserted, and fed into the
+    # wall-clock model below so predictions stay honest per backend.
+    results["draft_cost_ratio"] = {
+        f"bits{db}": costs[f"c_draft_us_bits{db}"] / costs["c_full_us"]
+        for db in DRAFT_BITS}
+
+    cells = []
+    for k in SPEC_KS:
+        for db in DRAFT_BITS:
+            def spec():
+                return scan_generate(packed, cfg, prompt, STEPS, spec_k=k,
+                                     draft_bits=db, return_spec_stats=True)
+
+            toks, stats = spec()
+            assert np.array_equal(ref, np.asarray(toks)), (
+                f"spec_k={k} draft_bits={db}: output diverged from spec_k=0")
+            t_spec = timed_us(lambda: spec()[0]) / 1e6
+            rounds = int(stats["rounds"])
+            acc = int(stats["accepted"]) / max(int(stats["drafted"]), 1)
+            # one full-precision (verify) launch per round vs one per token
+            tokens_per_round = STEPS / rounds      # per sequence, greedy
+            c_d = costs[f"c_draft_us_bits{db}"]
+            c_v = costs[f"c_verify_us_k{k}"]
+            predicted = (tokens_per_round * costs["c_full_us"]
+                         / (k * c_d + c_v))
+            measured = t_ref / t_spec
+            cells.append({
+                "spec_k": k, "draft_bits": db,
+                "acceptance_rate": acc,
+                "rounds": rounds,
+                "drafted": int(stats["drafted"]),
+                "accepted": int(stats["accepted"]),
+                "launches_per_token": rounds / STEPS,
+                "launch_reduction": tokens_per_round,
+                "tokens_per_sec": emitted / t_spec,
+                "wallclock_speedup_measured": measured,
+                "wallclock_speedup_predicted": predicted,
+                "model_error": predicted / measured if measured else None,
+            })
+            if csv_rows is not None:
+                csv_rows.append(
+                    f"speculative,k{k}_bits{db},"
+                    f"{t_spec / emitted * 1e6:.0f},"
+                    f"acceptance={acc:.2f}"
+                    f";launch_reduction={tokens_per_round:.2f}x"
+                    f";speedup_measured={measured:.2f}x"
+                    f";predicted={predicted:.2f}x")
+    results["cells"] = cells
+
+    best = max(cells, key=lambda c: c["launch_reduction"])
+    results["best"] = {k: best[k] for k in
+                       ("spec_k", "draft_bits", "launch_reduction",
+                        "acceptance_rate", "wallclock_speedup_measured",
+                        "wallclock_speedup_predicted")}
+    assert best["launch_reduction"] >= MIN_LAUNCH_REDUCTION, (
+        f"best cell (spec_k={best['spec_k']}, draft_bits="
+        f"{best['draft_bits']}) reduces full-precision launches only "
+        f"{best['launch_reduction']:.2f}x / token — below the "
+        f"{MIN_LAUNCH_REDUCTION}x bar")
+
+    # ---- batcher: serving-path tokens/sec, spec_k=0 vs spec_k=4 ------------
+    def _requests(n=6):
+        rng = np.random.default_rng(9)
+        pre = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+        return [Request(rid=i, max_new_tokens=12,
+                        prompt=np.concatenate(
+                            [pre, rng.integers(0, cfg.vocab_size,
+                                               size=int(rng.integers(3, 10))
+                                               ).astype(np.int32)])
+                        if i % 2 else
+                        rng.integers(0, cfg.vocab_size, size=6
+                                     ).astype(np.int32))
+                for i in range(n)]
+
+    def serve(spec_k):
+        def once():
+            b = ContinuousBatcher(packed, cfg, num_slots=4, max_len=64,
+                                  paged=True, page_size=8, prefix_cache=True,
+                                  spec_k=spec_k, draft_bits=4)
+            reqs = _requests()
+            for r in reqs:
+                b.submit(r)
+            t0 = time.perf_counter()
+            b.run()
+            toks = sum(len(r.output) for r in reqs)
+            return {r.rid: list(r.output) for r in reqs}, toks, \
+                time.perf_counter() - t0, b
+
+        once()                               # warm the jit caches
+        return once()
+
+    out0, toks0, dt0, _ = serve(0)
+    out4, toks4, dt4, b4 = serve(4)
+    assert out0 == out4, "batcher spec_k=4 output diverged from spec_k=0"
+    results["batcher"] = {
+        "tokens_per_sec_spec0": toks0 / dt0,
+        "tokens_per_sec_spec4": toks4 / dt4,
+        "wallclock_speedup": (toks4 / dt4) / (toks0 / dt0),
+        "spec_rounds": b4.spec_rounds,
+        "spec_acceptance": b4.spec_accepted / max(b4.spec_drafted, 1),
+        "launches_per_committed_token":
+            b4.spec_rounds / max(b4.spec_committed, 1),
+    }
+    if csv_rows is not None:
+        csv_rows.append(
+            f"speculative,batcher_spec4,{dt4 / max(toks4, 1) * 1e6:.0f},"
+            f"tokens_per_sec={toks4 / dt4:.1f}"
+            f";speedup={(toks4 / dt4) / (toks0 / dt0):.2f}x"
+            f";acceptance={results['batcher']['spec_acceptance']:.2f}")
+
+    BENCH_JSON.parent.mkdir(parents=True, exist_ok=True)
+    BENCH_JSON.write_text(json.dumps(results, indent=2))
+    print(f"wrote {BENCH_JSON}")
+    return results
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("\n".join(rows))

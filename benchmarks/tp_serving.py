@@ -12,8 +12,12 @@ devices via XLA_FLAGS before invoking this):
 * **comms** — the per-device all-reduce bytes the compiled TP decode step
   actually contains (``collective_bytes`` on its HLO: largest shape per
   instruction, all-reduce doubled for the ring) against the analytic
-  ``tp_allreduce_model`` prediction of 2 psums/layer x (B, 1, d_model).
-  The acceptance bar is agreement within 2x; the json records the ratio.
+  ``tp_allreduce_model`` prediction of 2 psums/layer x (B, 1, d_model) in
+  the SAME accounting convention (``per_device_bytes``).  Since the model
+  fix the bar is tight: predicted/measured must sit within [0.8, 1.25]
+  and the all-reduce instruction count must match exactly — the run
+  raises otherwise, so CI catches a drifting psum contract or a
+  re-broken byte model.  The json records the ratio.
 
 Results land in the CSV rows and ``experiments/bench/tp_serving.json``
 (uploaded as a standalone CI artifact).
@@ -113,6 +117,18 @@ def run(csv_rows: list | None = None) -> dict:
         pred = tp_allreduce_model(cfg, batch=NUM_SLOTS, seq=1, tp=tp,
                                   dtype_bytes=dtype_bytes)
         ratio = (pred["per_device_bytes"] / measured) if measured else None
+        if tp > 1:
+            if not (measured and 0.8 <= ratio <= 1.25):
+                raise AssertionError(
+                    f"tp={tp}: tp_allreduce_model predicts "
+                    f"{pred['per_device_bytes']:.0f} B but the compiled "
+                    f"decode HLO measures {measured:.0f} B (ratio {ratio}) "
+                    f"— outside the [0.8, 1.25] bar")
+            if n_ar != pred["allreduce_count"]:
+                raise AssertionError(
+                    f"tp={tp}: {n_ar} all-reduce instructions in the decode "
+                    f"HLO, model expects {pred['allreduce_count']} "
+                    f"(2 psums/layer x {cfg.num_layers} layers)")
         results.append({
             "tp": tp,
             "tokens_per_sec": round(toks_s, 2),

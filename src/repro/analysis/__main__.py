@@ -1,6 +1,6 @@
 """CLI: ``python -m repro.analysis`` — run the analyzer, emit JSON for CI.
 
-    # full matrix (CI): registry x {mxint4,3,2} x tp in {1,2,4,8}
+    # full matrix (CI): registry x {mxint4,3,2} x tp {1,2,4,8} x k {0,2,4}
     PYTHONPATH=src python -m repro.analysis --all --json report.json
 
     # one cell, launch layer only
@@ -43,17 +43,20 @@ def _build_report(args):
             for fmt in args.formats:
                 spec = MXINT_CONFIGS[fmt]
                 for tp in args.tp:
-                    cell = f"{arch} x {fmt} x tp{tp}"
-                    found = audit_arch(cfg, bits=spec.bits,
-                                       block_size=spec.block_size, tp=tp,
-                                       backend=args.backend)
-                    if found is None:
-                        report.skip(cell, "unservable: validate_tp refuses "
-                                          "this (family, tp) — clean "
-                                          "refusal, not a violation")
-                        continue
-                    report.cells.append(cell)
-                    report.extend(found)
+                    for sk in args.spec_k:
+                        cell = (f"{arch} x {fmt} x tp{tp}"
+                                + (f" x k{sk}" if sk else ""))
+                        found = audit_arch(cfg, bits=spec.bits,
+                                           block_size=spec.block_size, tp=tp,
+                                           backend=args.backend, spec_k=sk)
+                        if found is None:
+                            report.skip(cell, "unservable: validate_tp "
+                                              "refuses this (family, tp) — "
+                                              "clean refusal, not a "
+                                              "violation")
+                            continue
+                        report.cells.append(cell)
+                        report.extend(found)
         report.extend(audit_serving_retraces())
 
     if "trace" in layers:
@@ -97,13 +100,18 @@ def main(argv=None) -> int:
                     "artifact invariants, hot-path AST lint. Error codes "
                     "are documented in docs/analysis.md.")
     ap.add_argument("--all", action="store_true",
-                    help="full registry x {mxint4,3,2} x tp {1,2,4,8} "
-                         "matrix, all three layers")
+                    help="full registry x {mxint4,3,2} x tp {1,2,4,8} x "
+                         "spec_k {0,2,4} matrix, all three layers")
     ap.add_argument("--arch", nargs="*", default=None,
                     help="registry arch names (default: all assigned)")
     ap.add_argument("--formats", nargs="*",
                     default=["mxint4", "mxint3", "mxint2"])
     ap.add_argument("--tp", nargs="*", type=int, default=[1, 2, 4, 8])
+    ap.add_argument("--spec-k", nargs="*", type=int, default=[0, 2, 4],
+                    dest="spec_k",
+                    help="speculative draft lengths to audit (0 = plain "
+                         "decode; k>0 adds the draft-plane GEMMs and the "
+                         "batched (k+1)-token verify launch)")
     ap.add_argument("--layers", default="launch,trace,lint",
                     help="comma-set of launch|trace|lint")
     ap.add_argument("--lint-only", action="store_true",

@@ -98,6 +98,13 @@ CONTRACTS: dict[str, Contract] = {c.name: c for c in (
              "src/repro/kernels/mxint_matmul.py",
              "fused MXINT dequant-matmul, skinny-M decode variant: whole-M "
              "block, N-major 2-D grid"),
+    Contract("mxint_matmul_draft", "src/repro/kernels/mxint_matmul.py",
+             "draft-plane MXINT dequant-matmul (top draft_bits of each "
+             "mantissa container, no low-rank blocks), prefill 3-D grid "
+             "(M/bm, N/bn, K/bk)"),
+    Contract("mxint_matmul_draft_decode", "src/repro/kernels/mxint_matmul.py",
+             "draft-plane MXINT dequant-matmul, skinny-M decode variant: "
+             "whole-M block, N-major 2-D grid"),
     Contract("decode_attention", "src/repro/kernels/decode_attention.py",
              "paged decode attention, grid (B, Hkv, npages), page table via "
              "scalar prefetch"),
@@ -257,6 +264,57 @@ def audit_matmul_launch(m: int, k: int, n: int, r: int, *, bits: int,
                        bn=bn, bk=bk, decode=decode, packed=packed,
                        where=where)
     return check_plan(plan, backend=backend, suggestion=suggest())
+
+
+def draft_matmul_plan(m: int, k: int, n: int, *, bits: int, block_size: int,
+                      bm: int, bn: int, bk: int, decode: bool,
+                      packed: bool = True, x_dtype: str = "float32",
+                      where: str = "") -> LaunchPlan:
+    """Mirror of the DRAFT kernels in kernels/mxint_matmul.py: same tiling
+    as the fused lowrank launch but no a/b input blocks and no (bm, r)
+    prologue scratch — the speculative draft pass drops the low-rank term
+    entirely, which is exactly its VMEM/FLOP advantage."""
+    from repro.quant.mxint import elems_per_byte
+    epb = elems_per_byte(bits) if packed else 1
+    contract = ("mxint_matmul_draft_decode" if decode
+                else "mxint_matmul_draft")
+    m_pad = -(-m // 8) * 8
+    xm = m_pad if decode else bm
+    grid = ((n // bn, k // bk) if decode
+            else (max(m_pad // bm, 1), n // bn, k // bk))
+    blocks = (
+        Block("x", (xm, bk), x_dtype, strict=True),
+        Block("mant", (bk // epb, bn), "int8"),
+        Block("exp", (bk // block_size, bn), "int8", check=False),
+        Block("out", (xm, bn), "float32", kind="out", strict=True),
+        Block("acc", (xm, bn), "float32", kind="scratch"),
+    )
+    return LaunchPlan(contract, where, grid, blocks)
+
+
+def audit_quantized_matmul_draft(m: int, k: int, n: int, *, bits: int,
+                                 block_size: int, packed: bool = True,
+                                 backend: str = "tpu",
+                                 where: str = "") -> list[Violation]:
+    """Audit the launch ``kernels.ops.quantized_matmul_draft`` would issue —
+    blocks come from the same ``pick_blocks`` the wrapper uses, and the
+    divisibility rules are identical to the fused launch (the draft reads
+    the SAME packed buffers)."""
+    from repro.kernels.ops import pick_blocks
+    from repro.quant.mxint import elems_per_byte
+    epb = elems_per_byte(bits) if packed else 1
+    try:
+        bm, bn, bk, decode = pick_blocks(m, k, n, block_size=block_size,
+                                         epb=epb)
+    except ValueError as e:
+        return [Violation(
+            "QERA003", ERROR, where, str(e),
+            f"pad K or pick a tp degree so the local K is a multiple of "
+            f"block_size={block_size}")]
+    plan = draft_matmul_plan(m, k, n, bits=bits, block_size=block_size,
+                             bm=bm, bn=bn, bk=bk, decode=decode,
+                             packed=packed, where=where)
+    return check_plan(plan, backend=backend)
 
 
 def audit_quantized_matmul(m: int, k: int, n: int, r: int, *, bits: int,
@@ -422,14 +480,17 @@ def projection_dims(cfg) -> list[tuple[str, int, int, str]]:
 
 def audit_arch(cfg, *, bits: int, block_size: int, tp: int = 1,
                rank: int = 16, num_slots: int = 8, prefill_m: int = 256,
-               chunk: int = 64, page_size: int = 32,
+               chunk: int = 64, page_size: int = 32, spec_k: int = 0,
                backend: str = "tpu") -> list[Violation] | None:
-    """Static launch audit of one (arch, format, tp) cell at FULL model
-    shapes: every projection GEMM in both decode and prefill regimes, the
-    paged attention kernels, the dense flash kernel, and the on-device
-    repack.  Returns None when the cell is unservable by design (validate_tp
-    refuses it loudly) — a clean refusal is the contract working, not a
-    violation."""
+    """Static launch audit of one (arch, format, tp[, spec_k]) cell at FULL
+    model shapes: every projection GEMM in both decode and prefill regimes,
+    the paged attention kernels, the dense flash kernel, and the on-device
+    repack.  ``spec_k`` > 0 additionally audits the speculative-decode
+    launches: the draft-plane GEMM at decode M (no low-rank blocks) and the
+    k+1-token verify — the fused GEMM at M = num_slots*(spec_k+1) rows plus
+    the chunk-prefill attention kernel at chunk = spec_k+1.  Returns None
+    when the cell is unservable by design (validate_tp refuses it loudly) —
+    a clean refusal is the contract working, not a violation."""
     from repro.quant.mxint import validate_packed_sharding
     cell = f"{cfg.name} x mxint{bits} x tp{tp}"
     if tp > 1:
@@ -457,6 +518,16 @@ def audit_arch(cfg, *, bits: int, block_size: int, tp: int = 1,
             out += audit_quantized_matmul(
                 m, k_loc, n_loc, rank, bits=bits, block_size=block_size,
                 backend=backend, where=f"{cell} / {name} ({regime} m={m})")
+        if spec_k > 0:
+            out += audit_quantized_matmul_draft(
+                num_slots, k_loc, n_loc, bits=bits, block_size=block_size,
+                backend=backend,
+                where=f"{cell} / {name} (draft m={num_slots})")
+            m_v = num_slots * (spec_k + 1)
+            out += audit_quantized_matmul(
+                m_v, k_loc, n_loc, rank, bits=bits, block_size=block_size,
+                backend=backend,
+                where=f"{cell} / {name} (verify k={spec_k} m={m_v})")
         if tp == 1:
             out += audit_quantize_weights(
                 k, n, bits=bits, block_size=block_size, backend=backend,
@@ -471,6 +542,13 @@ def audit_arch(cfg, *, bits: int, block_size: int, tp: int = 1,
     out += audit_prefill_attention(
         num_slots, h_loc, kv_loc, cfg.hd, chunk=chunk, page_size=page_size,
         npages=npages, backend=backend, where=f"{cell} / prefill_attention")
+    if spec_k > 0:
+        # the verify step attends spec_k+1 fresh positions per slot through
+        # the same chunk-prefill kernel path
+        out += audit_prefill_attention(
+            num_slots, h_loc, kv_loc, cfg.hd, chunk=spec_k + 1,
+            page_size=page_size, npages=npages, backend=backend,
+            where=f"{cell} / verify_attention (k={spec_k})")
     out += audit_flash_attention(
         1, h_loc, min(max_len, 2048), min(max_len, 2048), cfg.hd,
         backend=backend, where=f"{cell} / flash_attention")

@@ -48,7 +48,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.quant.mxint import elems_per_byte
+from repro.quant.mxint import container_bits, elems_per_byte
 
 
 def _unpack_tile(packed: jax.Array, epb: int) -> jax.Array:
@@ -65,6 +65,61 @@ def _unpack_tile(packed: jax.Array, epb: int) -> jax.Array:
     v = (p32 >> (field * w)) & ((1 << w) - 1)
     half = 1 << (w - 1)
     return (v ^ half) - half
+
+
+def _unpack_tile_plane(packed: jax.Array, epb: int,
+                       draft_bits: int) -> jax.Array:
+    """(bk // epb, bn) packed bytes -> (bk, bn) int32 DRAFT mantissas: the
+    top ``draft_bits`` of each container field, sign-extended.
+
+    Same replicate + variable-shift scheme as ``_unpack_tile`` but the field
+    mask keeps only the high plane: equals the full unpack followed by an
+    arithmetic shift right by (w - draft_bits), without ever materializing
+    the low bits.
+    """
+    w = 8 // epb
+    s = w - draft_bits
+    p32 = jnp.repeat(packed.astype(jnp.int32), epb, axis=0)   # (bk, bn)
+    bk, bn = p32.shape
+    field = jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 0) % epb
+    v = (p32 >> (field * w + s)) & ((1 << draft_bits) - 1)
+    half = 1 << (draft_bits - 1)
+    return (v ^ half) - half
+
+
+def _draft_kernel(x_ref, mant_ref, exp_ref, o_ref, acc_ref, *, bits: int,
+                  draft_bits: int, block_size: int, epb: int, out_dtype,
+                  k_axis: int):
+    """Draft-plane matmul body: y = x @ dq_draft(Wq) — no low-rank refs, no
+    t scratch.  The dequant reads the top ``draft_bits`` of each mantissa
+    container (shift s = container - draft_bits) and compensates the scale
+    by 2^s, so the draft weight is a coarser rounding of the SAME packed
+    bytes."""
+    k_step = pl.program_id(k_axis)
+    shift = container_bits(bits) - draft_bits
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mant = mant_ref[...]                          # (bk // epb, bn) int8
+    if epb > 1:
+        mant = _unpack_tile_plane(mant, epb, draft_bits)   # (bk, bn) int32
+    else:
+        mant = mant.astype(jnp.int32) >> shift
+    exp = exp_ref[...]                            # (bk//bs, bn) int8
+    scale = jnp.exp2(exp.astype(jnp.float32) - (bits - 2 - shift))
+    bk, bn = mant.shape
+    nblk = bk // block_size
+    scale_full = jnp.broadcast_to(
+        scale[:, None, :], (nblk, block_size, bn)).reshape(bk, bn)
+    w = mant.astype(jnp.float32) * scale_full
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == pl.num_programs(k_axis) - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
 
 
 def _kernel(x_ref, mant_ref, exp_ref, a_ref, b_ref, o_ref, acc_ref, t_ref, *,
@@ -218,3 +273,108 @@ def mxint_matmul_lowrank_decode_pallas(
                         pltpu.VMEM((m, r), jnp.float32)],
         interpret=interpret,
     )(x, mant, exp, a, b)
+
+
+def _check_shapes_draft(x, mant, exp, bits, draft_bits, block_size, block_n,
+                        block_k, epb):
+    m, k = x.shape
+    kn, n = mant.shape
+    assert kn * epb == k and exp.shape == (k // block_size, n), (
+        f"quantized shapes {mant.shape}/{exp.shape} mismatch x {x.shape} "
+        f"(elems_per_byte={epb})")
+    assert 1 <= draft_bits <= container_bits(bits), (
+        f"draft_bits={draft_bits} outside the {container_bits(bits)}-bit "
+        f"container of the {bits}-bit format")
+    assert n % block_n == 0 and k % block_k == 0, (
+        f"shapes ({m},{k},{n}) must divide blocks ({block_k},{block_n}) "
+        "— use kernels.ops wrapper for padding/heuristics")
+    assert block_k % block_size == 0, "block_k must cover whole MXINT blocks"
+    assert block_size % epb == 0, (
+        f"MXINT block {block_size} must cover whole packed bytes (epb={epb})")
+    return m, k, n
+
+
+def mxint_matmul_draft_pallas(
+    x: jax.Array,        # (M, K)
+    mant: jax.Array,     # (K, N) int8, or (K // epb, N) when packed
+    exp: jax.Array,      # (K // block_size, N) int8
+    *,
+    bits: int,
+    draft_bits: int,
+    block_size: int,
+    packed: bool = False,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Prefill-shaped draft launch (the k-token verify chunk also uses this
+    shape at M = batch * (k+1)): 3D grid, K innermost, no low-rank blocks."""
+    epb = elems_per_byte(bits) if packed else 1
+    m, k, n = _check_shapes_draft(x, mant, exp, bits, draft_bits, block_size,
+                                  block_n, block_k, epb)
+    assert m % block_m == 0, (
+        f"M={m} must divide block_m={block_m} — use kernels.ops wrapper")
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    kernel = functools.partial(_draft_kernel, bits=bits,
+                               draft_bits=draft_bits, block_size=block_size,
+                               epb=epb, out_dtype=out_dtype, k_axis=2)
+    # contract: mxint_matmul_draft
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k // epb, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((block_k // block_size, block_n),
+                         lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, mant, exp)
+
+
+def mxint_matmul_draft_decode_pallas(
+    x: jax.Array,        # (M, K) — M tiny (decode slot count), whole-M block
+    mant: jax.Array,     # (K, N) int8, or (K // epb, N) when packed
+    exp: jax.Array,      # (K // block_size, N) int8
+    *,
+    bits: int,
+    draft_bits: int,
+    block_size: int,
+    packed: bool = False,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Skinny-M draft decode launch: whole-M block, N-major 2D grid — the
+    cheap forward of self-speculative decoding, streaming the SAME packed
+    buffers as the full path but skipping the low-rank prologue/epilogue."""
+    epb = elems_per_byte(bits) if packed else 1
+    m, k, n = _check_shapes_draft(x, mant, exp, bits, draft_bits, block_size,
+                                  block_n, block_k, epb)
+
+    grid = (n // block_n, k // block_k)
+    kernel = functools.partial(_draft_kernel, bits=bits,
+                               draft_bits=draft_bits, block_size=block_size,
+                               epb=epb, out_dtype=out_dtype, k_axis=1)
+    # contract: mxint_matmul_draft_decode
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda j, s: (0, s)),
+            pl.BlockSpec((block_k // epb, block_n), lambda j, s: (s, j)),
+            pl.BlockSpec((block_k // block_size, block_n),
+                         lambda j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j, s: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, mant, exp)

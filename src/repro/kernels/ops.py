@@ -32,6 +32,8 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.prefill_attention import prefill_attention_pallas
 from repro.kernels.mxint_matmul import (
+    mxint_matmul_draft_decode_pallas,
+    mxint_matmul_draft_pallas,
     mxint_matmul_lowrank_decode_pallas,
     mxint_matmul_lowrank_pallas,
 )
@@ -189,6 +191,54 @@ def quantized_matmul(x: jax.Array, mant: jax.Array, exp: jax.Array,
     else:
         y = mxint_matmul_lowrank_pallas(x2p, mant, exp, a, b, block_m=bm,
                                         **common)
+    return y[:m].reshape(*lead, n)
+
+
+@partial(jax.jit, static_argnames=("bits", "block_size", "draft_bits",
+                                   "block_m", "block_n", "block_k",
+                                   "interpret"))
+def quantized_matmul_draft(x: jax.Array, mant: jax.Array, exp: jax.Array, *,
+                           bits: int, block_size: int, draft_bits: int = 2,
+                           block_m: int = 128, block_n: int = 128,
+                           block_k: int = 128,
+                           interpret: bool | None = None) -> jax.Array:
+    """y = x @ dq_draft(mant, exp): the self-speculative DRAFT forward.
+
+    Reads the SAME packed (or flat) mantissa/exponent buffers as
+    ``quantized_matmul`` but dequantizes only the top ``draft_bits`` of each
+    mantissa container (scale compensated by 2^shift) and skips the low-rank
+    prologue/epilogue entirely — a strictly cheaper launch over the same HBM
+    bytes.  Block heuristics and decode/prefill routing match the full path.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = mant.shape[1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    epb = elems_per_byte(bits)
+    if mant.shape[0] == k:
+        packed = False
+    elif epb > 1 and mant.shape[0] * epb == k:
+        packed = True
+    else:
+        raise ValueError(
+            f"mantissa rows {mant.shape[0]} match neither flat K={k} nor "
+            f"packed K/epb={k // epb} (bits={bits})")
+
+    bm, bn, bk, decode = pick_blocks(m, k, n, block_size=block_size,
+                                     epb=epb if packed else 1,
+                                     block_m=block_m, block_n=block_n,
+                                     block_k=block_k)
+    x2p = _pad_to(x2, 0, bm)
+    common = dict(bits=bits, draft_bits=draft_bits, block_size=block_size,
+                  packed=packed, block_n=bn, block_k=bk, interpret=interpret)
+    if decode:
+        y = mxint_matmul_draft_decode_pallas(x2p, mant, exp, **common)
+    else:
+        y = mxint_matmul_draft_pallas(x2p, mant, exp, block_m=bm, **common)
     return y[:m].reshape(*lead, n)
 
 

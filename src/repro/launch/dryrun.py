@@ -103,19 +103,32 @@ def tp_allreduce_model(cfg: ModelConfig, *, batch: int, seq: int, tp: int,
     The shard_map serving path (sharding/serving.py) psums exactly TWO
     (batch, seq, d_model) partial outputs per dense layer — one after the
     row-parallel attention out-projection, one after the row-parallel MLP
-    down-projection — and nothing else crosses devices.  A ring all-reduce
-    moves ``2*(tp-1)/tp`` of the payload per device (reduce-scatter +
-    all-gather), which matches how :func:`collective_bytes` accounts the
-    HLO (full shape, doubled), so the two sides are directly comparable.
+    down-projection — and nothing else crosses devices.  Each psum operates
+    on the FULL (batch, seq, d_model) partial in the layer's compute dtype.
+
+    Two byte counts come out of that, and they are NOT the same number:
+
+    * ``per_device_bytes`` — the :func:`collective_bytes` accounting
+      convention (full payload, doubled for the ring reduce-scatter +
+      all-gather phases; tp-independent because the HLO text never
+      reveals tp).  Compare THIS against the measured HLO bytes; the
+      ratio must be ~1.0.  An earlier revision applied the ring fraction
+      here too, predicting half the measured bytes at tp=2 (ratio 0.5).
+    * ``ring_bytes`` — the physical per-device wire traffic of a ring
+      all-reduce, ``2*(tp-1)/tp`` of each payload.  This is what actually
+      crosses ICI links, so ``predicted_s`` is built from it.
     """
     payload = batch * seq * cfg.d_model * dtype_bytes
-    ring = 2.0 * (tp - 1) / tp if tp > 1 else 0.0
-    per_device = 2 * cfg.num_layers * ring * payload
+    n_ar = 2 * cfg.num_layers
+    hlo = n_ar * 2.0 * payload if tp > 1 else 0.0
+    ring = n_ar * 2.0 * (tp - 1) / tp * payload if tp > 1 else 0.0
     return {
         "tp": tp, "allreduces_per_layer": 2, "layers": cfg.num_layers,
+        "allreduce_count": n_ar if tp > 1 else 0,
         "payload_bytes": payload,
-        "per_device_bytes": per_device,
-        "predicted_s": per_device / (ici_bw or HW["ici_bw"]),
+        "per_device_bytes": hlo,
+        "ring_bytes": ring,
+        "predicted_s": ring / (ici_bw or HW["ici_bw"]),
     }
 
 

@@ -67,11 +67,27 @@ def linear(p: Any, x: jax.Array, *, taps: Taps | None = None,
         taps.record(name, x)
     if isinstance(p, Mapping):
         if "mant" in p:
+            # "draft_bits" marks a DRAFT view of the same packed buffers
+            # (serve/speculative.make_draft_params): dequantize only the top
+            # plane of each mantissa container, scale compensated by
+            # 2^draft_shift, and skip the low-rank term unless the view kept
+            # it.  Key presence is pytree structure — static under jit.
+            draft = "draft_bits" in p
             if use_pallas:
-                from repro.kernels.ops import quantized_matmul
-                return quantized_matmul(
-                    x, p["mant"], p["exp"], p["lora_a"], p["lora_b"],
-                    bits=int(p["bits"]), block_size=int(p["block_size"]))
+                from repro.kernels.ops import (quantized_matmul,
+                                               quantized_matmul_draft)
+                if not draft:
+                    return quantized_matmul(
+                        x, p["mant"], p["exp"], p["lora_a"], p["lora_b"],
+                        bits=int(p["bits"]), block_size=int(p["block_size"]))
+                y = quantized_matmul_draft(
+                    x, p["mant"], p["exp"], bits=int(p["bits"]),
+                    block_size=int(p["block_size"]),
+                    draft_bits=int(p["draft_bits"]))
+                if "lora_a" in p:
+                    t = x @ p["lora_a"].astype(x.dtype)
+                    y = y + t @ p["lora_b"].astype(x.dtype)
+                return y
             mant, exp = p["mant"], p["exp"]
             k = x.shape[-1]
             bs = k // exp.shape[-2]                   # static from shapes
@@ -79,11 +95,23 @@ def linear(p: Any, x: jax.Array, *, taps: Taps | None = None,
             if epb > 1:
                 from repro.quant.mxint import unpack_fields
                 mant = unpack_fields(mant, epb, k)
-            scale = jnp.exp2(exp.astype(jnp.float32)
-                             - (p["bits"].astype(jnp.float32) - 2))
+            exp_f = exp.astype(jnp.float32)
+            bits_f = p["bits"].astype(jnp.float32)
+            if draft:
+                # arithmetic shift keeps the plane identical to the packed
+                # extract; draft_shift is a concrete 0-dim leaf, so the
+                # shift amount is traced but the branch is structural
+                shift = p["draft_shift"].astype(jnp.int32)
+                mant = jnp.right_shift(mant.astype(jnp.int32), shift)
+                scale = jnp.exp2(exp_f - (bits_f - 2)
+                                 + shift.astype(jnp.float32))
+            else:
+                scale = jnp.exp2(exp_f - (bits_f - 2))
             w = (mant.astype(jnp.float32)
                  * jnp.repeat(scale, bs, axis=-2)).astype(x.dtype)
             y = x @ w
+            if draft and "lora_a" not in p:
+                return y
             t = x @ p["lora_a"].astype(x.dtype)
             return y + t @ p["lora_b"].astype(x.dtype)
         w = p["w_tilde"]

@@ -201,6 +201,76 @@ def unpack_mantissa(packed: jax.Array, bits: int,
     return unpack_fields(packed, elems_per_byte(bits), k)
 
 
+# ---------------------------------------------------------------------------
+# draft mantissa plane (self-speculative decoding's cheap forward pass)
+# ---------------------------------------------------------------------------
+#
+# The packed layout stores every mantissa in a ``container_bits(bits)``-wide
+# two's-complement field, so the HIGH-order ``d`` bits of each field are
+# themselves a valid signed d-bit mantissa for the SAME block exponent — a
+# coarser quantization of the same weight, readable from the same HBM bytes.
+# With shift s = container_bits(bits) - d:
+#
+#     mant_draft = mant >> s            (arithmetic shift = floor(mant / 2^s))
+#     scale_draft = 2^(e - (bits - 2) + s) = scale * 2^s
+#
+# so mant_draft * scale_draft approximates mant * scale with the low s bits
+# of the container dropped.  The shift is defined against the CONTAINER
+# width, not ``bits``: the 3-bit format stores 4-bit containers, and plane
+# extraction straight from packed bytes naturally yields the container-top
+# bits, keeping packed, flat, and kernel paths bit-identical.
+
+def draft_shift(bits: int, draft_bits: int) -> int:
+    """Arithmetic right-shift extracting the ``draft_bits`` high-order plane
+    from a ``bits``-bit mantissa container."""
+    c = container_bits(bits)
+    if not 1 <= draft_bits <= c:
+        raise ValueError(
+            f"draft_bits={draft_bits} outside [1, container={c}] for "
+            f"{bits}-bit mantissas")
+    return c - draft_bits
+
+
+def unpack_fields_plane(packed: jax.Array, epb: int, draft_bits: int,
+                        k: int | None = None) -> jax.Array:
+    """Top-``draft_bits`` plane of each packed field, sign-extended to int8.
+
+    Bit-identical to ``unpack_fields(packed, epb, k) >> (w - draft_bits)``
+    (w = 8 // epb, arithmetic shift) but extracted in one shift per field:
+    left-align the field so its sign bit lands at bit 31, then
+    arithmetic-shift down keeping only ``draft_bits`` of it.  ``epb == 1``
+    means an 8-bit container (mxint8); the flat int8 escape hatch for
+    narrower formats should shift by ``draft_shift(bits, draft_bits)``
+    directly instead.
+    """
+    w = 8 // epb
+    if not 1 <= draft_bits <= w:
+        raise ValueError(f"draft_bits={draft_bits} outside [1, {w}]")
+    p32 = packed.astype(jnp.int32)
+    if epb == 1:
+        return (p32 >> (8 - draft_bits)).astype(jnp.int8)
+    parts = [(p32 << (32 - w * (j + 1))) >> (32 - draft_bits)
+             for j in range(epb)]
+    st = jnp.stack(parts, axis=-2)                # (..., Kp, epb, N)
+    *lead, kp, _, n = st.shape
+    out = st.reshape(*lead, kp * epb, n).astype(jnp.int8)
+    return out if k is None else out[..., :k, :]
+
+
+def mxint_draft_dequantize(mant: jax.Array, exp: jax.Array, bits: int,
+                           draft_bits: int, dtype=jnp.float32) -> jax.Array:
+    """Host reference: dequantize the draft plane from FLAT (K, N) int8
+    mantissas + (K/bs, N) exponents.  The oracle the packed/kernel draft
+    paths must match bit-for-bit."""
+    s = draft_shift(bits, draft_bits)
+    k = mant.shape[-2]
+    bs = k // exp.shape[-2]
+    md = jnp.right_shift(mant.astype(jnp.int32), s)
+    scale = jnp.exp2(exp.astype(jnp.float32) - (bits - 2) + s)
+    w = md.astype(jnp.float32) * jnp.repeat(scale, bs, axis=-2)
+    return w.astype(dtype)
+
+
 class PackedMXINT(NamedTuple):
     """Storage layout the Pallas kernel consumes: int8 mantissa bytes —
     sub-byte packed along the input axis when ``packed`` (the HBM layout the

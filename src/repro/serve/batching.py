@@ -153,6 +153,14 @@ class RunReport:
     ticks: int
     completed: list[int]               # rids that emitted their full output
     failed: dict[int, str]             # rid -> terminal failure reason
+    # speculative-decode counters (all 0 when spec_k == 0): acceptance rate
+    # is spec_accepted / spec_drafted; full-precision launches per emitted
+    # token is spec_rounds / spec_committed (the perf headline — 1.0 means
+    # speculation bought nothing, 1/(k+1) is the upper bound)
+    spec_rounds: int = 0               # verify launches run
+    spec_drafted: int = 0              # draft tokens proposed
+    spec_accepted: int = 0             # draft tokens committed
+    spec_committed: int = 0            # tokens committed by verify launches
 
 
 class IncompleteRunError(RuntimeError):
@@ -188,8 +196,22 @@ class ContinuousBatcher:
                  num_pages: int | None = None, chunk_tokens: int = 64,
                  prefix_cache: bool = False, fault_injector: Any = None,
                  nan_guard: bool = True, nan_retry_limit: int = 3,
-                 mesh: Any = None, debug_invariants: bool = False):
+                 mesh: Any = None, debug_invariants: bool = False,
+                 spec_k: int = 0, draft_bits: int = 2,
+                 skip_lowrank: bool = True):
         self.params, self.cfg = params, cfg
+        # self-speculative decoding (serve/speculative.py): each decode tick
+        # drafts spec_k greedy tokens with the reduced-precision view of the
+        # SAME packed weights, then scores all k+1 positions in one
+        # full-precision chunk-shaped launch and commits the longest
+        # matching prefix — the verifier IS the normal decode path, so
+        # committed token streams are bit-identical to spec_k=0.
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        self.spec_k = spec_k
+        # recurrent families integrate per-token state for every chunk
+        # position; partial accepts restore-and-replay (``_replay_slot``)
+        self._recurrent = cfg.family in ("hybrid_mamba", "rwkv")
         # tensor parallelism: a 1-D ('model',) serving mesh shard_maps every
         # forward-calling step — decode and chunked prefill — so each device
         # runs its own Pallas launches on its KV-head/d_ff shard
@@ -238,8 +260,12 @@ class ContinuousBatcher:
                              "page-table indirection over the page pool)")
         # page geometry needs a page-multiple length; the request done-check
         # keeps the CALLER's max_len so paged stays token-identical to dense
-        # even when max_len % page_size != 0.
-        alloc_len = -(-max_len // page_size) * page_size if paged else max_len
+        # even when max_len % page_size != 0.  Speculation appends k extra
+        # slack positions: the verify chunk writes (but never commits) up to
+        # lengths+k, so the cache rows / page-table width cover max_len+k.
+        alloc_len = max_len + spec_k
+        if paged:
+            alloc_len = -(-alloc_len // page_size) * page_size
         self.b, self.max_len = num_slots, max_len
         self.lengths = np.zeros(num_slots, np.int32)
         self.slot_req: list[Request | None] = [None] * num_slots
@@ -328,6 +354,32 @@ class ContinuousBatcher:
                 out_specs=(P(None, None, None), dspecs))
         else:
             self._decode = jax.jit(make_decode_step(cfg))
+        if spec_k:
+            from repro.serve.speculative import make_draft_params
+            # zero-copy: the draft tree SHARES self.params' mant/exp buffers
+            # (and their shards under tp) — only the 0-dim draft markers are
+            # new, so speculation adds no weight memory and no collectives
+            self.draft_params = make_draft_params(
+                self.params, draft_bits=draft_bits, skip_lowrank=skip_lowrank)
+            if self.plan is not None:
+                from jax.sharding import PartitionSpec as P
+                self._draft_decode = self.plan.sjit(
+                    make_decode_step(step_cfg),
+                    in_specs=(self.plan.param_specs(self.draft_params),
+                              dspecs, P(None, None), P(None)),
+                    out_specs=(P(None, None, None), dspecs))
+            else:
+                # same jitted wrapper: jit re-traces per params structure
+                self._draft_decode = self._decode
+            if self._recurrent and not paged:
+                from repro.serve.paging import make_slot_chunk
+                self._slot_chunk = jax.jit(
+                    make_slot_chunk(cfg, num_slots),
+                    donate_argnums=(1,) if donate else ())
+        self.spec_rounds = 0               # verify launches run
+        self.spec_drafted = 0              # draft tokens proposed
+        self.spec_accepted = 0             # draft tokens committed
+        self.spec_committed = 0            # total tokens committed by verify
         self.queue: deque[Request] = deque()
         self._adm: _Admission | None = None
         self.admission_rollbacks = 0       # pool ran dry mid-prefill
@@ -348,8 +400,9 @@ class ContinuousBatcher:
         if self.paged:
             # +1: the first decode append needs a page slot too — a
             # page-aligned prompt that exactly fills the pool can prefill
-            # but never take its first decode step
-            need = self.pool.pages_for(n + 1)
+            # but never take its first decode step (+spec_k: a speculative
+            # tick needs the whole k+1 verify span allocated)
+            need = self.pool.pages_for(n + 1 + self.spec_k)
             if need > self.pool.num_pages - 1:
                 # reject up front: queued it would stall admission forever
                 raise ValueError(
@@ -578,30 +631,36 @@ class ContinuousBatcher:
         return [i for i, r in enumerate(self.slot_req)
                 if r is not None and i != adm_slot]
 
-    def _grow_pages(self, active: list[int]
+    def _grow_pages(self, active: list[int], span: int = 1
                     ) -> tuple[list[int], list[tuple[int, int]]]:
-        """Lazily allocate the page each active slot's next token lands in.
-        Returns the slots that must pause this tick (pool empty): their
-        append hits the garbage page and their token is discarded — greedy
-        decode recomputes the identical token once a page frees.  A slot
-        whose append page is shared must fork it first (copy-on-write); if
-        the fork page cannot be acquired the slot pauses too, and its table
-        entry is shielded (shipped zeroed) so the decode append cannot
-        touch the shared page."""
+        """Lazily allocate the page(s) each active slot's next ``span``
+        positions land in (span = 1 + spec_k: a speculative tick appends the
+        whole verify chunk).  Returns the slots that must pause this tick
+        (pool empty): their appends hit the garbage page and their tokens
+        are discarded — greedy decode recomputes the identical tokens once a
+        page frees.  A slot whose span covers a shared page must fork it
+        first (copy-on-write); if the fork page cannot be acquired the slot
+        pauses too, and its table entry is shielded (shipped zeroed) so the
+        appends cannot touch the shared page.  Pages acquired before a
+        mid-span stall stay owned by the slot (refcounts conserved; they are
+        exactly the pages the retry needs)."""
         paused: list[int] = []
         shield: list[tuple[int, int]] = []
         for i in active:
-            lp = self.lengths[i] // self.page_size
-            if self.page_table[i, lp] == 0:
-                pg = self.pool.acquire(1)
-                if pg is None:
+            lp0 = self.lengths[i] // self.page_size
+            lp1 = (self.lengths[i] + span - 1) // self.page_size
+            for lp in range(lp0, lp1 + 1):
+                if self.page_table[i, lp] == 0:
+                    pg = self.pool.acquire(1)
+                    if pg is None:
+                        paused.append(i)
+                        break
+                    self.page_table[i, lp] = pg[0]
+                    self.slot_pages[i].append(pg[0])
+                elif self.prefix is not None and not self._cow_fork(i, lp):
                     paused.append(i)
-                    continue
-                self.page_table[i, lp] = pg[0]
-                self.slot_pages[i].append(pg[0])
-            elif self.prefix is not None and not self._cow_fork(i, lp):
-                paused.append(i)
-                shield.append((i, lp))
+                    shield.append((i, lp))
+                    break
         return paused, shield
 
     def _evict(self, slot: int) -> None:
@@ -669,54 +728,68 @@ class ContinuousBatcher:
         active = self._active()
         if not active:
             return
-        # single fused decode for all slots (inactive rows are don't-care);
-        # per-slot cache lengths keep each request's positions independent
-        paused: list[int] = []
+        if self.spec_k:
+            self._spec_decode_tick(active)
+        else:
+            self._decode_tick(active)
+
+    def _paged_decode_setup(self, active: list[int], span: int):
+        """Page growth + all-paused recovery + the shielded/bucketed table,
+        shared by the plain and speculative decode ticks.  Returns ``None``
+        when the tick must end here (recovery took an action instead of
+        decoding); otherwise ``(cache, paused, prev, roll_adm)`` where
+        ``cache`` carries the shipped page_table leaf."""
         adm = self._adm
-        toks = jnp.asarray(self.last_tok[:, None])
-        clen = jnp.asarray(self.lengths, jnp.int32)          # (B,)
-        if self.paged:
-            paused, shield = self._grow_pages(active)
-            self._starved = list(paused)
-            if paused and len(paused) == len(active):
-                if self.pool.reserved:
-                    # fault-injected exhaustion spike: the pressure is
-                    # transient by construction, so pause-and-wait IS the
-                    # recovery — evicting or raising here would turn a
-                    # simulated blip into real lost work
-                    return
-                # every decoding slot stalled on allocation: no tick can
-                # ever free a page, so reclaim some to restore progress —
-                # rolling back an in-flight admission is cheaper than
-                # evicting a decoded prefix
-                if adm is not None:
-                    self._rollback_admission()
-                    return
-                if len(active) == 1:
-                    raise RuntimeError(
-                        f"page pool ({self.pool.num_pages} pages, page_size="
-                        f"{self.page_size}) too small for request "
-                        f"{self.slot_req[active[0]].rid} alone")
-                self._evict(paused.pop())
-                return
-            # paused slots' appends land in the garbage page and their
-            # tokens are discarded, but per-slot recurrent state (mamba
-            # conv/ssm rows) would still advance on the discarded token —
-            # keep the pre-tick cache to roll those rows back below.  The
-            # PREFILLING slot is treated the same way: its table row ships
-            # zeroed (append -> garbage page) and its rows roll back, so
-            # the decode stream cannot touch the half-built prefix.
-            roll_adm = adm is not None and self._has_slot_rows
-            prev = (self.cache if (paused or roll_adm or self.nan_guard)
-                    else None)
-            live = max(-(-int(self.lengths[i] + 1) // self.page_size)
-                       for i in active)
-            bucket = page_bucket(live, self.max_pages_per_slot)
-            tbl = self.page_table[:, :bucket]
-            if adm is not None or shield:
-                tbl = tbl.copy()
-                if adm is not None:
-                    tbl[adm.slot] = 0
+        paused, shield = self._grow_pages(active, span=span)
+        self._starved = list(paused)
+        if paused and len(paused) == len(active):
+            if self.pool.reserved:
+                # fault-injected exhaustion spike: the pressure is
+                # transient by construction, so pause-and-wait IS the
+                # recovery — evicting or raising here would turn a
+                # simulated blip into real lost work
+                return None
+            # every decoding slot stalled on allocation: no tick can
+            # ever free a page, so reclaim some to restore progress —
+            # rolling back an in-flight admission is cheaper than
+            # evicting a decoded prefix
+            if adm is not None:
+                self._rollback_admission()
+                return None
+            if len(active) == 1:
+                raise RuntimeError(
+                    f"page pool ({self.pool.num_pages} pages, page_size="
+                    f"{self.page_size}) too small for request "
+                    f"{self.slot_req[active[0]].rid} alone")
+            self._evict(paused.pop())
+            return None
+        # paused slots' appends land in the garbage page and their
+        # tokens are discarded, but per-slot recurrent state (mamba
+        # conv/ssm rows) would still advance on the discarded token —
+        # keep the pre-tick cache to roll those rows back afterwards.  The
+        # PREFILLING slot is treated the same way: its table row ships
+        # zeroed (append -> garbage page) and its rows roll back, so
+        # the decode stream cannot touch the half-built prefix.
+        roll_adm = adm is not None and self._has_slot_rows
+        prev = (self.cache
+                if (paused or roll_adm or self.nan_guard or span > 1)
+                else None)
+        live = max(-(-int(self.lengths[i] + span) // self.page_size)
+                   for i in active)
+        bucket = page_bucket(live, self.max_pages_per_slot)
+        tbl = self.page_table[:, :bucket]
+        if adm is not None or shield or (span > 1 and paused):
+            tbl = tbl.copy()
+            if adm is not None:
+                tbl[adm.slot] = 0
+            if span > 1:
+                # a speculative span may cross into pages the stalled slot
+                # never allocated or forked — ship the whole row zeroed
+                # (every append -> garbage page; the tokens are discarded
+                # and the recurrent rows restored, so nothing is lost)
+                for i in paused:
+                    tbl[i] = 0
+            else:
                 for i, lp in shield:
                     # fork-starved slot: its append must not reach the
                     # shared page — route it to the garbage page instead
@@ -724,7 +797,21 @@ class ContinuousBatcher:
                     # position is hidden from attention)
                     if lp < bucket:
                         tbl[i, lp] = 0
-            cache = {**self.cache, "page_table": jnp.asarray(tbl)}
+        cache = {**self.cache, "page_table": jnp.asarray(tbl)}
+        return cache, paused, prev, roll_adm
+
+    def _decode_tick(self, active: list[int]) -> None:
+        # single fused decode for all slots (inactive rows are don't-care);
+        # per-slot cache lengths keep each request's positions independent
+        paused: list[int] = []
+        adm = self._adm
+        toks = jnp.asarray(self.last_tok[:, None])
+        clen = jnp.asarray(self.lengths, jnp.int32)          # (B,)
+        if self.paged:
+            setup = self._paged_decode_setup(active, 1)
+            if setup is None:
+                return
+            cache, paused, prev, roll_adm = setup
             logits, cache = self._decode(self.params, cache,
                                          {"tokens": toks}, clen)
             cache.pop("page_table")
@@ -759,19 +846,7 @@ class ContinuousBatcher:
             # re-written identically on the re-decode), and retry next tick.
             # Rows are independent through the batched forward, so
             # co-batched slots commit their tokens normally below.
-            self.nan_events += 1
-            self._nan_strikes[i] += 1
-            req = self.slot_req[i]
-            if self._nan_strikes[i] >= self.nan_retry_limit:
-                # persistent blowup: fail THIS request, not the batch; its
-                # pages never enter the prefix index (K/V may be poisoned)
-                req.failed = "nan"
-                self.failed_rids[req.rid] = "nan"
-                self.nan_quarantined.append(req.rid)
-                self._release_slot(i, register=False)
-            else:
-                self.cache = self._restore(self.cache, prev,
-                                           jnp.asarray(i, jnp.int32))
+            self._nan_strike(i, prev)
         for i in live:
             if i in bad:
                 continue
@@ -790,6 +865,146 @@ class ContinuousBatcher:
                 # for continuation prompts) before the refs drop; the freed
                 # paged row attends 1 garbage token until re-admitted
                 self._release_slot(i, register=True)
+
+    def _nan_strike(self, i: int, prev: Any) -> None:
+        """One non-finite-logits strike against slot ``i``: discard the
+        tick's token(s), restore the slot's rows from ``prev`` and retry
+        next tick, or quarantine the request (failed="nan", pages never
+        registered — its K/V may be poisoned) after ``nan_retry_limit``
+        consecutive strikes."""
+        self.nan_events += 1
+        self._nan_strikes[i] += 1
+        req = self.slot_req[i]
+        if self._nan_strikes[i] >= self.nan_retry_limit:
+            # persistent blowup: fail THIS request, not the batch
+            req.failed = "nan"
+            self.failed_rids[req.rid] = "nan"
+            self.nan_quarantined.append(req.rid)
+            self._release_slot(i, register=False)
+        else:
+            self.cache = self._restore(self.cache, prev,
+                                       jnp.asarray(i, jnp.int32))
+
+    def _spec_decode_tick(self, active: list[int]) -> None:
+        """Draft spec_k greedy tokens with the reduced-precision param view,
+        then score all k+1 positions in ONE full-precision chunk-shaped
+        launch and commit the longest matching prefix (always >= 1 token:
+        position 0 is the normal decode of last_tok).
+
+        Bit-identity with ``_decode_tick``: the verify launch recomputes
+        every chunk position with the SAME params, cache and positions the
+        plain tick would use, commits apply the exact same done conditions
+        token by token, and rejected suffixes leave no trace — draft K/V
+        appends are overwritten by the verify, stale verify K/V beyond the
+        committed length sits above kv_len (masked; rewritten before read
+        next round), and recurrent rows restore-and-replay through
+        ``_replay_slot``.  The drafts run on a throwaway functional fork of
+        the cache, so "rollback" of the draft pass is simply not keeping
+        it."""
+        k = self.spec_k
+        paused: list[int] = []
+        roll_adm = False
+        adm = self._adm
+        clen = jnp.asarray(self.lengths, jnp.int32)          # (B,)
+        if self.paged:
+            setup = self._paged_decode_setup(active, k + 1)
+            if setup is None:
+                return
+            cache, paused, prev, roll_adm = setup
+        else:
+            cache = self.cache
+            # always held in spec mode: NaN strikes and recurrent partial
+            # accepts both roll whole slot rows back to the pre-round state
+            prev = self.cache
+        cur = jnp.asarray(self.last_tok[:, None])
+        drafts = []
+        dcache = cache
+        for j in range(k):
+            dlogits, dcache = self._draft_decode(
+                self.draft_params, dcache, {"tokens": cur}, clen + j)
+            cur = jnp.argmax(dlogits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            drafts.append(cur)
+        dv = jnp.concatenate(drafts, axis=1)                  # (B, k)
+        chunk = jnp.concatenate(
+            [jnp.asarray(self.last_tok[:, None]), dv], axis=1)
+        # ONE batched launch scores all k+1 positions through the Sq=k+1
+        # chunk kernel path and overwrites the draft's K/V appends
+        logits, cache = self._decode(self.params, cache,
+                                     {"tokens": chunk}, clen)
+        if self.paged:
+            cache.pop("page_table")
+        self.cache = cache
+        for i in paused:
+            self.cache = self._restore(self.cache, prev,
+                                       jnp.asarray(i, jnp.int32))
+        if roll_adm:
+            self.cache = self._restore(self.cache, prev,
+                                       jnp.asarray(adm.slot, jnp.int32))
+        live = [i for i in active if i not in paused]
+        if self.injector is not None:
+            logits = self.injector.corrupt_logits(logits, live)
+        bad: list[int] = []
+        if self.nan_guard:
+            # any poisoned position invalidates the whole chunk for that
+            # row: acceptance depends on every verify argmax
+            finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=(1, 2)))
+            bad = [i for i in live if not finite[i]]
+        yv = np.asarray(jnp.argmax(logits, axis=-1), np.int32)   # (B, k+1)
+        dv_h = np.asarray(dv, np.int32)                          # (B, k)
+        chunk_h = np.asarray(chunk, np.int32)                    # (B, k+1)
+        for i in bad:
+            self._nan_strike(i, prev)
+        self.spec_rounds += 1
+        for i in live:
+            if i in bad:
+                continue
+            self._nan_strikes[i] = 0
+            req = self.slot_req[i]
+            committed = 0
+            for j in range(k + 1):
+                if j > 0 and dv_h[i, j - 1] != yv[i, j - 1]:
+                    break                  # first rejected draft ends the run
+                tok = int(yv[i, j])
+                req.output.append(tok)
+                self.lengths[i] += 1
+                self.last_tok[i] = tok
+                committed += 1
+                hit_eos = req.eos_id is not None and tok == req.eos_id
+                if (len(req.output) >= req.max_new_tokens or hit_eos
+                        or self.lengths[i] + 1 >= self.max_len):
+                    req.done = True
+                    break
+            self.spec_drafted += k
+            self.spec_accepted += committed - 1
+            self.spec_committed += committed
+            if req.done:
+                self.completed_rids.append(req.rid)
+                self._release_slot(i, register=True)
+            elif self._recurrent and committed < k + 1:
+                self._replay_slot(i, chunk_h[i, :committed], prev)
+
+    def _replay_slot(self, i: int, toks: np.ndarray, prev: Any) -> None:
+        """Recurrent rollback for a partial accept: the verify launch
+        integrated all k+1 chunk tokens into slot ``i``'s conv/ssm/rwkv
+        rows.  Restore the pre-round rows and replay only the committed
+        tokens with the full model — state (and, in dense mode, the
+        restored K/V rows) ends bit-identical to token-by-token decoding."""
+        committed = len(toks)
+        pos = int(self.lengths[i]) - committed
+        self.cache = self._restore(self.cache, prev,
+                                   jnp.asarray(i, jnp.int32))
+        chunk = jnp.asarray(toks[None, :])
+        if self.paged:
+            width = page_bucket(-(-(pos + committed) // self.page_size),
+                                self.max_pages_per_slot)
+            _, self.cache = self._chunk(
+                self.params, self.cache, chunk,
+                jnp.asarray(self.page_table[i, :width]),
+                jnp.asarray(i, jnp.int32), jnp.asarray(pos, jnp.int32))
+        else:
+            self.cache = self._slot_chunk(
+                self.params, self.cache, chunk,
+                jnp.asarray(i, jnp.int32), jnp.asarray(pos, jnp.int32))
 
     # -- abort / drain --------------------------------------------------------
     def abort(self, req: Request, reason: str) -> bool:
@@ -840,7 +1055,11 @@ class ContinuousBatcher:
             self.step()
         report = RunReport(ticks=self.tick_count - t0,
                            completed=list(self.completed_rids),
-                           failed=dict(self.failed_rids))
+                           failed=dict(self.failed_rids),
+                           spec_rounds=self.spec_rounds,
+                           spec_drafted=self.spec_drafted,
+                           spec_accepted=self.spec_accepted,
+                           spec_committed=self.spec_committed)
         pending = self.pending_rids()
         if pending:
             raise IncompleteRunError(pending, report)

@@ -190,14 +190,152 @@ _scan_generate = partial(jax.jit, static_argnames=(
 ))(_scan_generate_impl)
 
 
+def _spec_generate_impl(params, draft_params, prompt: jax.Array,
+                        eos_tok: jax.Array, *, cfg: ModelConfig, steps: int,
+                        max_len: int, has_eos: bool, spec_k: int,
+                        page_size: int = 0, prefill_chunk: int = 0):
+    """Self-speculative greedy rollout: draft ``spec_k`` tokens with the
+    cheap quantization-plane model, verify all of them (plus the bonus
+    position) in ONE full-precision chunk launch, accept the longest
+    matching prefix — a ``lax.while_loop`` over rounds instead of a scan
+    over tokens.
+
+    Bit-identity argument (the verifier IS the baseline): candidate j of a
+    round is the full model's argmax after the prompt, the committed tokens,
+    and drafts d_1..d_j; when every d_i (i ≤ j) matched candidate i-1, those
+    drafts ARE the committed greedy tokens, so candidate j equals what
+    ``_scan_generate_impl`` would emit — and rejected positions are never
+    emitted.  Cache consistency needs NO rollback for attention-KV families:
+    the verify chunk rewrites K/V at every chunk position with full-precision
+    activations (erasing nothing the draft pass computed — drafts run on a
+    throwaway fork of the carried cache), and K/V beyond the committed
+    length is masked by ``kv_len`` until the next round overwrites it.
+    That argument only covers KV-only families; ``scan_generate`` restricts
+    ``spec_k > 0`` to them (the batcher handles recurrent families with
+    restore + replay).
+
+    The cache/pool is allocated with ``spec_k`` rows of slack past
+    ``max_len``: a round at the buffer tail still writes k+1 speculative
+    positions, and JAX's clamped dynamic-slice writes would otherwise
+    silently corrupt the last committed rows.  Rows that already produced
+    ``steps`` tokens keep riding along (their writes land in the slack, the
+    emit buffer scatter parks their tokens in the slack columns) until every
+    row is finished.
+    """
+    b, s = prompt.shape
+    k = spec_k
+    alloc_len = max_len + k
+    if page_size:
+        from repro.kernels.ops import chunk_plan
+        from repro.serve.paging import init_paged_cache
+        alloc_len = -(-alloc_len // page_size) * page_size
+        npg = alloc_len // page_size
+        cache = init_paged_cache(cfg, b, alloc_len, page_size=page_size,
+                                 num_pages=1 + b * npg)
+        cache["page_table"] = (1 + jnp.arange(b * npg, dtype=jnp.int32)
+                               ).reshape(b, npg)
+        off = 0
+        for w in chunk_plan(s, prefill_chunk or s):
+            logits, _, cache = forward(params,
+                                       {"tokens": prompt[:, off:off + w]},
+                                       cfg, cache=cache,
+                                       cache_len=jnp.asarray(off, jnp.int32))
+            off += w
+    else:
+        cache = init_cache(cfg, b, alloc_len)
+        logits, _, cache = forward(params, {"tokens": prompt}, cfg,
+                                   cache=cache,
+                                   cache_len=jnp.zeros((), jnp.int32))
+    tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(prompt.dtype)
+    done0 = (tok0 == eos_tok.astype(tok0.dtype) if has_eos
+             else jnp.zeros((b,), bool))
+    # emit buffer col j holds token j+2 of the stream (tok0 is separate);
+    # spec_k slack columns absorb finished rows' rides-along writes
+    buf0 = jnp.zeros((b, steps + k), prompt.dtype)
+    count0 = jnp.ones((b,), jnp.int32)           # tokens emitted incl. tok0
+    stats0 = jnp.zeros((3,), jnp.int32)          # rounds, drafted, accepted
+
+    def cond(carry):
+        _, _, _, count, _, _ = carry
+        return jnp.any(count < steps)
+
+    def body(carry):
+        cache, tok, done, count, buf, stats = carry
+        done_in = done
+        clen = s + count - 1                              # (B,) per-row
+        # -- draft: k cheap forwards on a throwaway fork of the cache ------
+        dcache = cache
+        cur = tok[:, None]
+        drafts = []
+        for i in range(k):
+            dlogits, _, dcache = forward(draft_params, {"tokens": cur}, cfg,
+                                         cache=dcache, cache_len=clen + i)
+            cur = jnp.argmax(dlogits[:, -1], axis=-1
+                             ).astype(tok.dtype)[:, None]
+            drafts.append(cur[:, 0])
+        dv = jnp.stack(drafts, axis=1)                    # (B, k)
+        # -- verify: all k+1 positions in ONE full-precision launch --------
+        chunk = jnp.concatenate([tok[:, None], dv], axis=1)
+        vlogits, _, cache = forward(params, {"tokens": chunk}, cfg,
+                                    cache=cache, cache_len=clen)
+        yv = jnp.argmax(vlogits, axis=-1).astype(tok.dtype)   # (B, k+1)
+        # longest matching prefix; the committed tokens are the CANDIDATES
+        # (the full model's own argmaxes), never the drafts
+        match = (dv == yv[:, :k]).astype(jnp.int32)
+        acc = jnp.cumprod(match, axis=1).sum(axis=1)          # (B,) in 0..k
+        inc = acc + 1                                 # accepted + correction
+        if has_eos:
+            eos = eos_tok.astype(yv.dtype)
+            inc = jnp.where(done, k + 1, inc)
+            is_eos = (yv == eos).astype(jnp.int32)
+            prev_eos = (jnp.cumsum(is_eos, axis=1) - is_eos) > 0
+            emit = jnp.where(done[:, None] | prev_eos, eos, yv)
+            within = jnp.arange(k + 1, dtype=jnp.int32)[None, :] < inc[:, None]
+            done = done | jnp.any((emit == eos) & within, axis=1)
+        else:
+            emit = yv
+        tok = jnp.take_along_axis(emit, (inc - 1)[:, None], axis=1)[:, 0]
+        mask = (count < steps) & ~done_in        # rows whose drafts counted
+        stats = stats + jnp.stack([
+            jnp.asarray(1, jnp.int32),
+            k * mask.sum().astype(jnp.int32),
+            jnp.where(mask, acc, 0).sum().astype(jnp.int32)])
+        step_inc = jnp.minimum(inc, steps - count)        # frozen rows: 0
+        buf = jax.vmap(lambda row, upd, st: jax.lax.dynamic_update_slice(
+            row, upd, (st,)))(buf, emit, count - 1)
+        return cache, tok, done, count + step_inc, buf, stats
+
+    carry = (cache, tok0, done0, count0, buf0, stats0)
+    _, _, _, _, buf, stats = jax.lax.while_loop(cond, body, carry)
+    return jnp.concatenate([tok0[:, None], buf[:, :steps - 1]], axis=1), stats
+
+
+_spec_generate = partial(jax.jit, static_argnames=(
+    "cfg", "steps", "max_len", "has_eos", "spec_k", "page_size",
+    "prefill_chunk",
+))(_spec_generate_impl)
+
+
 def scan_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
                   max_len: int | None = None, eos_id: int | None = None,
-                  page_size: int = 0, prefill_chunk: int = 0, mesh=None):
+                  page_size: int = 0, prefill_chunk: int = 0, mesh=None,
+                  spec_k: int = 0, draft_bits: int = 2,
+                  skip_lowrank: bool = True, return_spec_stats: bool = False):
     """Fused greedy decoding: compiles once per (shape, steps), returns the
     (B, steps) token matrix with no per-token host sync.  ``page_size`` > 0
     prefills straight into the paged KV pool (chunked by ``prefill_chunk``;
     0 = one chunk) and routes every decode step through the Pallas
     decode-attention kernel (see serve/paging.py).
+
+    ``spec_k`` > 0 turns on self-speculative decoding: each rollout round
+    drafts ``spec_k`` tokens with the ``draft_bits`` high-order mantissa
+    plane of the SAME packed weights (serve/speculative.py; ``skip_lowrank``
+    drops the x@A prologue too) and verifies them in one chunk-shaped
+    full-precision launch — outputs stay bit-identical to ``spec_k=0``, the
+    full launch count drops by the acceptance factor.  Restricted to
+    KV-only families (dense/moe): the verify overwrite argument does not
+    cover recurrent state (the batcher handles those via restore+replay).
+    ``return_spec_stats`` also returns {"rounds", "drafted", "accepted"}.
 
     ``mesh`` (a 1-D ``('model',)`` serving mesh, see launch/mesh.py) runs
     the whole rollout tensor-parallel under shard_map: each device prefills
@@ -215,6 +353,34 @@ def scan_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
             f"tokens; raise max_len or lower steps")
     if page_size:
         max_len = -(-max_len // page_size) * page_size
+    if spec_k:
+        from repro.serve.speculative import (KV_ONLY_FAMILIES,
+                                             make_draft_params)
+        if cfg.family not in KV_ONLY_FAMILIES:
+            raise ValueError(
+                f"scan_generate(spec_k>0) supports KV-only families "
+                f"{KV_ONLY_FAMILIES}, not {cfg.family!r}: recurrent state "
+                f"integrates every chunk token, so rejected drafts need the "
+                f"batcher's restore+replay path (ContinuousBatcher supports "
+                f"speculation for those families)")
+        draft_params = make_draft_params(params, draft_bits=draft_bits,
+                                         skip_lowrank=skip_lowrank)
+        if mesh is not None:
+            from repro.sharding.serving import plan_for, tp_spec_generate
+            toks, stats = tp_spec_generate(
+                plan_for(cfg, mesh), params, draft_params, prompt, eos_tok,
+                steps=steps, max_len=max_len, has_eos=eos_id is not None,
+                spec_k=spec_k, page_size=page_size,
+                prefill_chunk=prefill_chunk)
+        else:
+            toks, stats = _spec_generate(
+                params, draft_params, prompt, eos_tok, cfg=cfg, steps=steps,
+                max_len=max_len, has_eos=eos_id is not None, spec_k=spec_k,
+                page_size=page_size, prefill_chunk=prefill_chunk)
+        if return_spec_stats:
+            r = [int(v) for v in stats]
+            return toks, {"rounds": r[0], "drafted": r[1], "accepted": r[2]}
+        return toks
     if mesh is not None:
         from repro.sharding.serving import plan_for, tp_scan_generate
         return tp_scan_generate(

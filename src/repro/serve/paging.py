@@ -473,6 +473,37 @@ def make_chunk_prefill(cfg, num_slots: int):
     return chunk_prefill
 
 
+def make_slot_chunk(cfg, num_slots: int):
+    """(params, cache, chunk, slot, pos) -> cache: replay ``chunk`` through
+    ONE slot's rows of a DENSE batch cache at absolute offset ``pos``.
+
+    The speculative-decode rollback primitive for recurrent families in
+    dense mode: the batched verify launch integrates all k+1 chunk tokens
+    into the slot's conv/ssm/rwkv rows, so a partial accept restores the
+    pre-round rows (``make_restore_slot``) and replays only the committed
+    tokens here — K/V rewrites are bit-identical to the verify's (same
+    model, same positions), and the recurrent rows end exactly where
+    token-by-token decoding would leave them.  Logits are discarded: the
+    committed tokens were already chosen by the verify launch.  ``slot`` and
+    ``pos`` are traced; one compile per replay width.
+    """
+    from repro.models.transformer import forward
+
+    def slot_chunk(params: Any, cache: Any, chunk: jax.Array,
+                   slot: jax.Array, pos: jax.Array) -> Any:
+        flat = flatten_dict(cache)
+        view = unflatten_dict({k: _slot_row(v, slot, num_slots)
+                               for k, v in flat.items()})
+        _, _, vnew = forward(params, {"tokens": chunk}, cfg,
+                             cache=view, cache_len=pos)
+        flatn = flatten_dict(vnew)
+        out = {k: _place_row(v, flatn[k], slot, num_slots)
+               for k, v in flat.items()}
+        return unflatten_dict(out)
+
+    return slot_chunk
+
+
 def make_fork_page():
     """(cache, src, dst) -> cache with physical page ``dst`` holding a copy
     of ``src`` across every pool leaf (all layers, one call per fork).

@@ -1,0 +1,90 @@
+"""Self-speculative decoding from the quantization hierarchy.
+
+QERA's serving decomposition ``W ≈ Q(W) + A·B`` means every packed layer
+already ships at multiple effective precisions inside ONE HBM-resident
+buffer: dropping the low-rank term and the low mantissa bits yields a
+strictly cheaper forward pass over the same bytes.  ``make_draft_params``
+builds the cheap view — a params pytree sharing the full tree's mant/exp
+arrays (no copy, no second HBM buffer) with a ``draft_bits`` marker that
+``models.layers.linear`` dispatches on: the dequant keeps only the top
+``draft_bits`` of each mantissa container (shift ``s = container -
+draft_bits``, scale compensated by ``2^s``) and, with ``skip_lowrank``,
+drops the ``x @ A`` prologue entirely.
+
+The speculative loops themselves live next to their serving surfaces —
+``serve.engine.scan_generate(spec_k=...)`` (draft k inside the scan, verify
+all k+1 positions in one chunk-shaped full-precision launch, accept the
+longest matching prefix) and ``ContinuousBatcher(spec_k=...)`` — because the
+verifier IS the existing full-precision path, accepted outputs are
+bit-identical to non-speculative greedy decoding.  docs/speculative.md has
+the bit layout, acceptance rule and rollback contract.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax.numpy as jnp
+
+from repro.quant.mxint import container_bits, draft_shift
+
+# Families whose decode cache is pure attention K/V: the verify launch
+# recomputes and overwrites K/V at every chunk position with the full model,
+# so draft-pass writes need no rollback.  Recurrent families (hybrid_mamba,
+# rwkv) additionally integrate per-token state and need the batcher's
+# restore-and-replay path; the engine's scan loop supports only these.
+KV_ONLY_FAMILIES = ("dense", "moe")
+
+
+def make_draft_params(params: Any, *, draft_bits: int = 2,
+                      skip_lowrank: bool = True) -> Any:
+    """Zero-copy draft view of a packed serving params tree.
+
+    Every packed-quantized dict ``{"mant", "exp", "bits", "block_size",
+    "lora_a", "lora_b"}`` becomes ``{"mant", "exp", "bits", "block_size",
+    "draft_bits", "draft_shift"}`` — the SAME mant/exp/bits arrays plus two
+    concrete 0-dim int32 leaves ``linear`` uses to extract the high-order
+    mantissa plane.  ``draft_bits`` is clamped per layer to the container
+    width (a 2-bit layer's draft IS the full mantissa).  With
+    ``skip_lowrank=False`` the lora factors ride along and the draft keeps
+    the low-rank correction at reduced mantissa precision.
+
+    Fake-quant dicts (``{"w_tilde", ...}``) degrade to the bare ``w_tilde``
+    leaf (the reconstruction term is the only thing to drop); plain float
+    leaves pass through unchanged — their "draft" equals the full path, so
+    speculation still verifies bit-identically, just with 100% acceptance.
+
+    Runs eagerly on concrete params (``int(p["bits"])``): call it OUTSIDE
+    jit and pass the result in — the draft tree's structure is what the
+    traced code dispatches on.  Works on sharded trees too: leaves are
+    reused, never transformed, so placement survives.
+    """
+    if draft_bits < 1:
+        raise ValueError(f"draft_bits must be >= 1, got {draft_bits}")
+    return _draft_view(params, draft_bits, skip_lowrank)
+
+
+def _draft_view(p: Any, draft_bits: int, skip_lowrank: bool) -> Any:
+    # Eager-only recursion (concrete `int(p["bits"])`, see the
+    # make_draft_params docstring) — deliberately NOT nested in the
+    # factory, whose inner defs the hot-path lint treats as traced.
+    if isinstance(p, Mapping):
+        if "mant" in p:
+            bits = int(p["bits"])
+            db = min(draft_bits, container_bits(bits))
+            out = {"mant": p["mant"], "exp": p["exp"], "bits": p["bits"],
+                   "block_size": p["block_size"],
+                   "draft_bits": jnp.asarray(db, jnp.int32),
+                   "draft_shift": jnp.asarray(draft_shift(bits, db),
+                                              jnp.int32)}
+            if not skip_lowrank:
+                out["lora_a"] = p["lora_a"]
+                out["lora_b"] = p["lora_b"]
+            return out
+        if "w_tilde" in p:
+            return p["w_tilde"] if skip_lowrank else dict(p)
+        return {k: _draft_view(v, draft_bits, skip_lowrank)
+                for k, v in p.items()}
+    if isinstance(p, (list, tuple)):
+        return type(p)(_draft_view(v, draft_bits, skip_lowrank) for v in p)
+    return p

@@ -59,7 +59,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
-from repro.quant.mxint import validate_packed_sharding
+from repro.quant.mxint import elems_per_byte, validate_packed_sharding
 from repro.sharding.rules import IN_PROJS, OUT_PROJS
 from repro.utils.trees import flatten_dict, unflatten_dict
 
@@ -184,7 +184,11 @@ def serving_param_specs(params: Mapping[str, Any], tp: int) -> dict:
             parent = path.rsplit("/", 1)[0]
             bits = int(np.asarray(flat[f"{parent}/bits"]))
             bs = int(np.asarray(flat[f"{parent}/block_size"]))
-            k = flat[f"{parent}/lora_a"].shape[-2]
+            lora_a = flat.get(f"{parent}/lora_a")
+            if lora_a is not None:
+                k = lora_a.shape[-2]
+            else:                       # draft views drop the lora factors
+                k = leaf.shape[-2] * elems_per_byte(bits)
             validate_packed_sharding(k, tp, bits, bs, name=parent)
     return unflatten_dict(out)
 
@@ -343,3 +347,32 @@ def tp_scan_generate(plan: ServingPlan, params, prompt, eos_tok, *,
                        out_specs=P(None, None))
         _TP_SCAN_CACHE[key] = fn
     return fn(params, prompt, eos_tok)
+
+
+def tp_spec_generate(plan: ServingPlan, params, draft_params, prompt,
+                     eos_tok, *, steps: int, max_len: int, has_eos: bool,
+                     spec_k: int, page_size: int = 0,
+                     prefill_chunk: int = 0):
+    """Tensor-parallel speculative rollout: the draft/verify while_loop runs
+    entirely inside ONE shard_map.  The draft view shares the full tree's
+    mant/exp buffers, so ``param_specs`` places its leaves on exactly the
+    same shards (the 0-dim ``draft_bits``/``draft_shift`` markers replicate)
+    and the draft pass needs the same 2-per-layer psums and nothing more —
+    speculation adds no collectives."""
+    from repro.serve.engine import _spec_generate_impl
+
+    key = (plan.cfg, plan.mesh, steps, max_len, has_eos, spec_k, page_size,
+           prefill_chunk, jax.tree.structure(params),
+           jax.tree.structure(draft_params))
+    fn = _TP_SCAN_CACHE.get(key)
+    if fn is None:
+        impl = partial(_spec_generate_impl, cfg=plan.local_cfg, steps=steps,
+                       max_len=max_len, has_eos=has_eos, spec_k=spec_k,
+                       page_size=page_size, prefill_chunk=prefill_chunk)
+        fn = plan.sjit(impl,
+                       in_specs=(plan.param_specs(params),
+                                 plan.param_specs(draft_params),
+                                 P(None, None), P()),
+                       out_specs=(P(None, None), P(None)))
+        _TP_SCAN_CACHE[key] = fn
+    return fn(params, draft_params, prompt, eos_tok)

@@ -198,8 +198,61 @@ def mode_psum():
     return out
 
 
+def mode_spec():
+    """Self-speculative decoding composes with tp=2: engine and batcher
+    token streams stay bit-identical to spec_k=0 while the drafts run the
+    REAL reduced-precision mantissa plane on packed per-device shards (the
+    draft view shares the full tree's shards; no extra collectives)."""
+    from repro.core import PTQConfig, quantize_params
+    from repro.core.api import pack_for_serving
+    from repro.models import Taps
+    from repro.models.config import ModelConfig
+    from repro.models.transformer import forward
+    from repro.serve.engine import scan_generate
+
+    cfg = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=64, head_dim=16,
+                      scan_layers=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    taps = Taps()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    forward(params, {"tokens": toks}, cfg, taps=taps)
+    from benchmarks.common import remap_stats
+    qcfg = PTQConfig(method="qera_approx", rank=8, quantizer="mxint4",
+                     skip_patterns=PTQConfig().skip_patterns)
+    packed = pack_for_serving(
+        quantize_params(params, qcfg,
+                        stats_by_path=remap_stats(taps.layer_stats())), qcfg)
+
+    out = {}
+    mesh = make_serving_mesh(2)
+    prompt = jnp.asarray(
+        np.stack([p[:8] for p in _prompts(cfg, 2, seed=3)])) % cfg.vocab_size
+    ref = np.asarray(scan_generate(packed, cfg, prompt, steps=10))
+    drafted = 0
+    for name, pk in (("dense", {}),
+                     ("paged", {"page_size": 8, "prefill_chunk": 4})):
+        for k in (2, 4):
+            got, stats = scan_generate(
+                packed, cfg, prompt, steps=10, spec_k=k, draft_bits=4,
+                mesh=mesh, return_spec_stats=True, **pk)
+            out[f"scan_{name}_k{k}_tp2"] = bool(
+                np.array_equal(ref, np.asarray(got)))
+            drafted += stats["drafted"]
+    out["drafted_some"] = drafted > 0
+    for name, kw in (("dense", {}),
+                     ("paged", {"paged": True, "page_size": 8}),
+                     ("prefix", {"paged": True, "page_size": 8,
+                                 "prefix_cache": True})):
+        refb = _serve(packed, cfg, **kw)
+        gotb = _serve(packed, cfg, mesh=mesh, spec_k=4, draft_bits=4, **kw)
+        out[f"batch_{name}_tp2"] = gotb == refb
+    return out
+
+
 MODES = {"identity": mode_identity, "storm": mode_storm,
-         "snapshot": mode_snapshot, "psum": mode_psum}
+         "snapshot": mode_snapshot, "psum": mode_psum, "spec": mode_spec}
 
 if __name__ == "__main__":
     print(json.dumps(MODES[sys.argv[1]]()))

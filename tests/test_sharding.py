@@ -90,6 +90,55 @@ def _run_dryrun_cell(arch: str, shape: str, mesh: str):
     return json.loads(open(fn).read())
 
 
+_ALLREDUCE_MODEL_SCRIPT = r"""
+import json
+from repro.launch.dryrun import collective_bytes, tp_allreduce_model
+from repro.models.config import ModelConfig
+
+cfg = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=64, head_dim=16)
+# Synthetic post-SPMD decode HLO: exactly 2 psums/layer x 2 layers on the
+# full (B=4, 1, d_model=64) f32 partial — what sharding/serving.py emits.
+hlo = "\n".join(
+    f"  %ar.{i} = f32[4,1,64]{{2,1,0}} all-reduce(f32[4,1,64]{{2,1,0}} %p.{i}),"
+    " replica_groups={{0,1}}, to_apply=%add" for i in range(4))
+meas = collective_bytes(hlo)
+out = {"measured": meas["all-reduce"], "count": meas["counts"]["all-reduce"],
+       "pred": {tp: tp_allreduce_model(cfg, batch=4, seq=1, tp=tp)
+                for tp in (1, 2, 4)}}
+print(json.dumps(out))
+"""
+
+
+def test_tp_allreduce_model_matches_hlo_convention():
+    """Regression: the analytic model must count bytes in the SAME
+    convention as ``collective_bytes`` (full payload doubled, tp-agnostic).
+    PR 7 shipped it with the physical ring fraction instead, predicting
+    half the measured bytes at tp=2 (ratio 0.5).  Runs in a subprocess
+    because importing ``repro.launch.dryrun`` forces the host device
+    count (XLA-flags isolation rule)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_DRYRUN_DEVICES="1", JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", _ALLREDUCE_MODEL_SCRIPT],
+                         capture_output=True, text=True, env=env, cwd=REPO,
+                         timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    d = json.loads(out.stdout.strip().splitlines()[-1])
+    payload = 4 * 1 * 64 * 4                      # (B, 1, d_model) f32
+    assert d["count"] == 4
+    assert d["measured"] == 4 * 2.0 * payload     # ring-doubled full shape
+    for tp in ("2", "4"):
+        pred = d["pred"][tp]
+        assert pred["per_device_bytes"] == d["measured"]      # ratio 1.0
+        assert pred["allreduce_count"] == d["count"]
+        # the physical wire estimate keeps the ring fraction and feeds
+        # predicted_s — it is NOT the HLO-comparable number
+        frac = 2.0 * (int(tp) - 1) / int(tp)
+        assert pred["ring_bytes"] == pytest.approx(
+            4 * frac * payload)
+    assert d["pred"]["1"]["per_device_bytes"] == 0.0
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [
     ("yi-34b", "train_4k"),              # dense train

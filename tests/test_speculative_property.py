@@ -1,0 +1,165 @@
+"""Property tests for self-speculative decoding (hypothesis).
+
+One law, stormed over the whole configuration space: for ANY combination
+of speculation depth k, draft precision, page geometry, prompt mix
+(including prompts that land exactly on page boundaries), fault storm and
+recurrent state, a ``ContinuousBatcher`` run with ``spec_k > 0``
+
+* emits token streams BIT-IDENTICAL to the same run at ``spec_k=0``, and
+* leaves the page pool's refcounts conserved after every tick
+  (``debug_invariants=True`` re-derives the accounting laws from scratch
+  per tick and raises on the first violation).
+
+Dense and paged+prefix modes are stormed here in-process; the tp=2 copy
+of the same law runs in ``tests/test_speculative.py`` through the
+subprocess worker (XLA-flags isolation rule).  The deterministic
+equivalents of these properties also live there, so this file skipping
+(hypothesis is an optional dependency) never removes the only coverage.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import PTQConfig, quantize_params
+from repro.core.api import pack_for_serving
+from repro.models import ModelConfig, Taps, forward, init_params
+from repro.serve.batching import ContinuousBatcher, Request
+
+pytest.importorskip("hypothesis")  # property tests skip without hypothesis
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+DENSE_CFG = ModelConfig(family="dense", num_layers=2, d_model=64,
+                        num_heads=4, num_kv_heads=2, d_ff=128,
+                        vocab_size=64, head_dim=16, scan_layers=False)
+HYBRID_CFG = ModelConfig(family="hybrid_mamba", num_layers=4, d_model=32,
+                         num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                         vocab_size=64, ssm_state=8, ssm_head_dim=8,
+                         ssm_chunk=4, attn_every=2, scan_layers=False)
+_RECURRENT_SKIPS = PTQConfig().skip_patterns + (r"d_skip", r"mu_",
+                                                r"bonus", r"ln_")
+
+
+def _packed_dense():
+    params = init_params(DENSE_CFG, jax.random.PRNGKey(0))
+    taps = Taps()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              DENSE_CFG.vocab_size)
+    forward(params, {"tokens": toks}, DENSE_CFG, taps=taps)
+    from benchmarks.common import remap_stats
+    qcfg = PTQConfig(method="qera_approx", rank=8, quantizer="mxint4")
+    return pack_for_serving(
+        quantize_params(params, qcfg,
+                        stats_by_path=remap_stats(taps.layer_stats())), qcfg)
+
+
+def _packed_hybrid():
+    params = init_params(HYBRID_CFG, jax.random.PRNGKey(2))
+    qcfg = PTQConfig(method="zeroquant_v2", rank=4, quantizer="mxint4",
+                     skip_patterns=_RECURRENT_SKIPS)
+    return pack_for_serving(quantize_params(params, qcfg), qcfg)
+
+
+@pytest.fixture(scope="module")
+def packed_dense():
+    return _packed_dense()
+
+
+@pytest.fixture(scope="module")
+def packed_hybrid():
+    return _packed_hybrid()
+
+
+def _run(params, cfg, prompts, max_new, *, storm_seed=None, **kw):
+    b = ContinuousBatcher(params, cfg, num_slots=3, max_len=48,
+                          debug_invariants=kw.get("paged", False),
+                          nan_retry_limit=10, **kw)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    if storm_seed is not None:
+        from repro.runtime.fault_tolerance import RestartPolicy
+        from repro.serve.faults import FaultInjector
+        from repro.serve.supervisor import ServingSupervisor
+        sup = ServingSupervisor(
+            b, injector=FaultInjector.storm(seed=storm_seed, ticks=30,
+                                            p_spike=0.2, p_nan=0.2,
+                                            crash_ticks=(5,),
+                                            spike_duration=2),
+            snapshot_every=2,
+            policy=RestartPolicy(max_restarts=4, backoff_base_s=0.0),
+            sleep=lambda _: None)
+        for r in reqs:
+            assert sup.submit(r).accepted
+        sup.run(max_ticks=500)
+    else:
+        for r in reqs:
+            b.submit(r)
+        b.run()
+    if kw.get("paged"):
+        from repro.analysis.runtime import check_page_accounting
+        errs = check_page_accounting(b.pool, b.slot_pages, b.page_table)
+        assert not errs, errs
+    return {r.rid: list(r.output) for r in reqs}
+
+
+def _prompts(cfg, lens, seed, page_size):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size, size=page_size).astype(np.int32)
+    out = []
+    for i, n in enumerate(lens):
+        tail = rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+        # odd requests share a page-aligned preamble: speculative spans must
+        # CoW-fork shared pages, never write them
+        out.append(np.concatenate([pre, tail]) if i % 2 else tail)
+    return out
+
+
+@settings(max_examples=10, deadline=None)
+@given(spec_k=st.integers(1, 4),
+       draft_bits=st.sampled_from([2, 4]),
+       page_size=st.sampled_from([4, 8]),
+       # lengths straddle multiples of both page sizes (boundary storms)
+       lens=st.lists(st.integers(1, 17), min_size=2, max_size=4),
+       seed=st.integers(0, 2**16))
+def test_spec_batcher_identity_and_refcounts(packed_dense, spec_k,
+                                             draft_bits, page_size, lens,
+                                             seed):
+    prompts = _prompts(DENSE_CFG, lens, seed, page_size)
+    for kw in ({}, {"paged": True, "page_size": page_size},
+               {"paged": True, "page_size": page_size,
+                "prefix_cache": True}):
+        ref = _run(packed_dense, DENSE_CFG, prompts, 6, **kw)
+        got = _run(packed_dense, DENSE_CFG, prompts, 6, spec_k=spec_k,
+                   draft_bits=draft_bits, **kw)
+        assert got == ref, f"diverged under {kw or 'dense'}"
+
+
+@settings(max_examples=6, deadline=None)
+@given(spec_k=st.integers(1, 4),
+       storm_seed=st.integers(0, 2**16),
+       seed=st.integers(0, 2**16))
+def test_spec_survives_fault_storm(packed_dense, spec_k, storm_seed, seed):
+    prompts = _prompts(DENSE_CFG, [5, 9, 13], seed, 8)
+    kw = dict(paged=True, page_size=8, num_pages=23, prefix_cache=True)
+    ref = _run(packed_dense, DENSE_CFG, prompts, 6, **kw)
+    got = _run(packed_dense, DENSE_CFG, prompts, 6, spec_k=spec_k,
+               draft_bits=4, storm_seed=storm_seed, **kw)
+    assert got == ref
+
+
+@settings(max_examples=6, deadline=None)
+@given(spec_k=st.integers(1, 3),
+       draft_bits=st.sampled_from([2, 4]),
+       lens=st.lists(st.integers(1, 13), min_size=2, max_size=3),
+       seed=st.integers(0, 2**16))
+def test_spec_hybrid_recurrent_state(packed_hybrid, spec_k, draft_bits,
+                                     lens, seed):
+    """Partial accepts on a recurrent family exercise the restore+replay
+    path: the SSM rows must be rebuilt exactly, for any acceptance
+    pattern the draft plane produces."""
+    prompts = _prompts(HYBRID_CFG, lens, seed, 8)
+    for kw in ({}, {"paged": True, "page_size": 8}):
+        ref = _run(packed_hybrid, HYBRID_CFG, prompts, 5, **kw)
+        got = _run(packed_hybrid, HYBRID_CFG, prompts, 5, spec_k=spec_k,
+                   draft_bits=draft_bits, **kw)
+        assert got == ref, f"diverged under {kw or 'dense'}"
