@@ -46,6 +46,12 @@ HEADLINES = {
         ("speculative", ("best", "acceptance_rate")),
     "spec_batcher_speedup":
         ("speculative", ("batcher", "wallclock_speedup")),
+    "mixed_error_ratio":
+        ("mixed_precision", ("quality_summary", "mean_error_ratio")),
+    "mixed_plan_wins":
+        ("mixed_precision", ("quality_summary", "wins")),
+    "mixed_tokens_per_sec":
+        ("mixed_precision", ("serving", "tokens_per_sec_mixed")),
 }
 
 

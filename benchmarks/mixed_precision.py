@@ -1,0 +1,198 @@
+"""Mixed-precision allocation benchmark: equal HBM, spent better.
+
+The allocator (``core/allocate.py``) minimizes the summed QERA expected
+output error under the SAME weights-HBM budget the uniform mxint4/r32
+operating point spends.  Sections:
+
+* **quality** — for each audited registry arch (reduced shapes, calibrated
+  second moments): the uniform reference error, the allocated mixed-plan
+  error, and the byte budgets of both.  The run FAILS unless the mixed
+  plan is strictly better on at least ``MIN_WINS`` archs at no more HBM —
+  the tentpole acceptance bar, asserted where CI can see it.
+* **serving** — the calibrated bench LM quantized+packed twice (uniform
+  vs allocated plan at equal budget): decode tokens/sec of both trees
+  through ``scan_generate``, plus the autotuner warming the mixed tree's
+  decode geometries (cache hit/miss counts recorded — the second warm
+  must be 100% hits, the determinism contract).
+
+Results land in ``experiments/bench/mixed_precision.json`` and the
+consolidated ``bench.json`` (section ``mixed_precision``).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import LM_CFG, calib_batches, calibrate, pretrained_lm
+from repro.configs import get_arch
+from repro.core import PTQConfig, quantize_params
+from repro.core.allocate import (
+    LayerChoice,
+    allocate_plan,
+    eligible_shapes,
+    plan_bytes,
+    plan_expected_error,
+    uniform_plan,
+)
+from repro.core.api import pack_for_serving
+from repro.models import init_params
+from repro.models.config import reduced
+from repro.serve.engine import scan_generate
+
+BENCH_JSON = (Path(__file__).resolve().parent.parent / "experiments"
+              / "bench" / "mixed_precision.json")
+
+QUALITY_ARCHS = ("minicpm-2b", "yi-34b", "phi3-mini-3.8b")
+MIN_WINS = 2
+REFERENCE = LayerChoice("mxint4", 32)
+B, PROMPT_LEN, STEPS = 4, 8, 16
+
+
+def _calibrated_arch(arch: str):
+    cfg = reduced(get_arch(arch), scan_layers=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    return cfg, params, calibrate(params, cfg, toks)
+
+
+def _quality_row(arch: str, qcfg: PTQConfig) -> dict:
+    cfg, params, stats = _calibrated_arch(arch)
+    shapes = eligible_shapes(params, qcfg.skips)
+    uni = uniform_plan(REFERENCE.quantizer, REFERENCE.rank)
+    budget = plan_bytes(shapes, uni)
+    plan = allocate_plan(params, stats, reference=REFERENCE,
+                         skips=qcfg.skips)
+    err_uni = plan_expected_error(params, stats, uni, skips=qcfg.skips)
+    err_mix = plan_expected_error(params, stats, plan, skips=qcfg.skips)
+    mix_bytes = plan_bytes(shapes, plan)
+    return {
+        "arch": cfg.name,
+        "budget_bytes": budget,
+        "mixed_bytes": mix_bytes,
+        "uniform_error": err_uni,
+        "mixed_error": err_mix,
+        "error_ratio": err_mix / err_uni if err_uni > 0 else None,
+        "n_layers": len(plan.assignments),
+        "n_formats_used": len({c.quantizer
+                               for c in plan.assignments.values()}),
+        "win": bool(err_mix < err_uni and mix_bytes <= budget),
+    }
+
+
+def _tokens_per_sec(packed, cfg, prompt) -> float:
+    out = scan_generate(packed, cfg, prompt, STEPS)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = scan_generate(packed, cfg, prompt, STEPS)
+    jax.block_until_ready(out)
+    return B * STEPS / (time.perf_counter() - t0)
+
+
+def _serving_section(qcfg: PTQConfig) -> dict:
+    from repro.kernels import autotune as at
+    params = pretrained_lm()
+    stats = calibrate(params, LM_CFG, calib_batches(8))
+    shapes = eligible_shapes(params, qcfg.skips)
+    plan = allocate_plan(params, stats, reference=REFERENCE,
+                        skips=qcfg.skips)
+    uni_cfg = PTQConfig(method="qera_approx", rank=REFERENCE.rank,
+                        quantizer=REFERENCE.quantizer,
+                        skip_patterns=qcfg.skip_patterns)
+    packed_uni = pack_for_serving(
+        quantize_params(params, uni_cfg, stats_by_path=stats), uni_cfg)
+    packed_mix = pack_for_serving(
+        quantize_params(params, qcfg, stats_by_path=stats, plan=plan),
+        qcfg, plan=plan)
+
+    # warm the autotuner over the mixed tree's decode geometries, twice:
+    # first pass measures (miss), second must be all hits (determinism)
+    geoms = at.plan_shapes_for_params(packed_mix, m=B)
+    hits = {"first": 0, "second": 0}
+    for label in ("first", "second"):
+        for m, k, n, bits, bs in geoms:
+            _, hit = at.autotune(m, k, n, bits=bits, block_size=bs,
+                                 rank=8, reps=1)
+            hits[label] += int(hit)
+
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, PROMPT_LEN), 0,
+                                LM_CFG.vocab_size)
+    return {
+        "arch": LM_CFG.name,
+        "budget_bytes": plan_bytes(shapes, uniform_plan(
+            REFERENCE.quantizer, REFERENCE.rank)),
+        "mixed_bytes": plan_bytes(shapes, plan),
+        "uniform_error": plan_expected_error(
+            params, stats, uniform_plan(REFERENCE.quantizer, REFERENCE.rank),
+            skips=qcfg.skips),
+        "mixed_error": plan_expected_error(params, stats, plan,
+                                           skips=qcfg.skips),
+        "tokens_per_sec_uniform": _tokens_per_sec(packed_uni, LM_CFG,
+                                                  prompt),
+        "tokens_per_sec_mixed": _tokens_per_sec(packed_mix, LM_CFG, prompt),
+        "autotune_geometries": len(geoms),
+        "autotune_hits_first_pass": hits["first"],
+        "autotune_hits_second_pass": hits["second"],
+        "autotune_deterministic": hits["second"] == len(geoms),
+    }
+
+
+def run(csv_rows: list | None = None) -> dict:
+    qcfg = PTQConfig(method="qera_approx", rank=8, quantizer="mxint4")
+    quality = [_quality_row(a, qcfg) for a in QUALITY_ARCHS]
+    wins = sum(r["win"] for r in quality)
+    serving = _serving_section(qcfg)
+
+    results = {
+        "reference": {"quantizer": REFERENCE.quantizer,
+                      "rank": REFERENCE.rank},
+        "quality": quality,
+        "quality_summary": {
+            "wins": wins,
+            "archs": len(quality),
+            "mean_error_ratio": float(np.mean(
+                [r["error_ratio"] for r in quality
+                 if r["error_ratio"] is not None])),
+        },
+        "serving": serving,
+    }
+
+    BENCH_JSON.parent.mkdir(parents=True, exist_ok=True)
+    BENCH_JSON.write_text(json.dumps(results, indent=1, sort_keys=True))
+
+    if csv_rows is not None:
+        for r in quality:
+            csv_rows.append(
+                f"mixed_precision/{r['arch']},,"
+                f"err_ratio={r['error_ratio']:.4f}"
+                f" win={int(r['win'])}")
+        csv_rows.append(
+            f"mixed_precision/serving,,"
+            f"tps_mixed={serving['tokens_per_sec_mixed']:.1f}"
+            f" tps_uniform={serving['tokens_per_sec_uniform']:.1f}")
+
+    # ---- acceptance bars ---------------------------------------------------
+    assert wins >= MIN_WINS, (
+        f"mixed plan beat uniform {REFERENCE.quantizer}/r{REFERENCE.rank} "
+        f"on only {wins}/{len(quality)} archs (need {MIN_WINS}): "
+        f"{[(r['arch'], r['error_ratio']) for r in quality]}")
+    assert all(r["mixed_bytes"] <= r["budget_bytes"] for r in quality), \
+        "allocator overdrew its HBM budget"
+    assert serving["autotune_deterministic"], (
+        "autotune cache: second warm pass was not 100% hits "
+        f"({serving['autotune_hits_second_pass']}"
+        f"/{serving['autotune_geometries']})")
+    print(f"mixed_precision: {wins}/{len(quality)} archs strictly better "
+          f"at equal HBM; serving "
+          f"{serving['tokens_per_sec_mixed']:.1f} tok/s mixed vs "
+          f"{serving['tokens_per_sec_uniform']:.1f} uniform")
+    return results
+
+
+if __name__ == "__main__":
+    run()

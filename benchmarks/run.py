@@ -12,6 +12,9 @@
                       predicted-vs-measured all-reduce bytes (BENCH json)
   speculative         self-speculative decoding: acceptance, launches per
                       token, wall-clock model (BENCH json)
+  mixed_precision     per-layer QuantPlan vs uniform mxint4/r32 at equal
+                      HBM: expected-error wins + tok/s + autotune
+                      determinism (BENCH json)
   roofline            §Roofline from the dry-run artifacts
   consolidate         merge per-section jsons -> bench.json + trend vs
                       the committed benchmarks/baseline artifact
@@ -29,8 +32,8 @@ import traceback
 
 BENCHES = ["fig1_output_error", "fig3_calib_size", "table1_qpeft",
            "table3_ptq", "table8_runtime", "kernel_bench",
-           "decode_throughput", "tp_serving", "speculative", "roofline",
-           "consolidate"]
+           "decode_throughput", "tp_serving", "speculative",
+           "mixed_precision", "roofline", "consolidate"]
 
 
 def main() -> None:

@@ -57,6 +57,23 @@ def _build_report(args):
                             continue
                         report.cells.append(cell)
                         report.extend(found)
+        if args.plan_sweep:
+            from repro.core.allocate import mixed_reference_plan
+            plan = mixed_reference_plan()
+            for arch in args.arch:
+                cfg = get_arch(arch)
+                for tp in args.tp:
+                    cell = f"{arch} x mixed-plan x tp{tp}"
+                    found = audit_arch(cfg, bits=4, block_size=32, rank=32,
+                                       tp=tp, backend=args.backend,
+                                       plan=plan)
+                    if found is None:
+                        report.skip(cell, "unservable: validate_tp refuses "
+                                          "this (family, tp) — clean "
+                                          "refusal, not a violation")
+                        continue
+                    report.cells.append(cell)
+                    report.extend(found)
         report.extend(audit_serving_retraces())
 
     if "trace" in layers:
@@ -112,6 +129,10 @@ def main(argv=None) -> int:
                     help="speculative draft lengths to audit (0 = plain "
                          "decode; k>0 adds the draft-plane GEMMs and the "
                          "batched (k+1)-token verify launch)")
+    ap.add_argument("--plan-sweep", action="store_true", dest="plan_sweep",
+                    help="also audit every arch under the heterogeneous "
+                         "mixed_reference_plan (per-projection bits/rank) — "
+                         "implied by --all")
     ap.add_argument("--layers", default="launch,trace,lint",
                     help="comma-set of launch|trace|lint")
     ap.add_argument("--lint-only", action="store_true",
@@ -129,6 +150,8 @@ def main(argv=None) -> int:
 
     if args.lint_only:
         args.layers = "lint"
+    if args.all:
+        args.plan_sweep = True
     if args.arch is None or args.all:
         from repro.configs.registry import ASSIGNED_ARCHS
         args.arch = list(ASSIGNED_ARCHS)

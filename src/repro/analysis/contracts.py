@@ -347,26 +347,37 @@ def audit_decode_attention(b: int, h: int, hkv: int, d: int, *,
                            page_size: int, npages: int,
                            dtype: str = "float32", backend: str = "tpu",
                            where: str = "") -> list[Violation]:
-    """Mirror of kernels/decode_attention.py: grid (B, Hkv, npages)."""
+    """Mirror of kernels/decode_attention.py: grid (B, Hkv/hb, npages).
+
+    ``hb`` comes from the kernel's own ``pick_kv_block`` (single source of
+    truth): the per-layer block plan batches ``hb`` kv heads per grid step
+    so the q/out/acc tiles hold ``hb·G`` real rows (command-r-plus G=12 →
+    24, phi3.5-moe G=4 → 8, llama4-maverick G=5 → 40 — full sublane tiles,
+    no waste).  When no divisor of Hkv aligns, the kernel zero-pads the
+    rows to the 8-sublane grid EXPLICITLY and crops on the way out, so the
+    audited BlockSpec — like the launched one — is always aligned; the
+    old G ∉ 8ℤ QERA002 warning class is gone by construction."""
+    from repro.kernels.decode_attention import pick_kv_block
+
     if hkv < 1 or h % hkv:
         return [Violation(
             "QERA003", ERROR, where,
             f"H={h} query heads do not divide Hkv={hkv} kv heads — GQA "
             f"grouping q.reshape(B, Hkv, G, D) is impossible")]
     g = h // hkv
-    plan = LaunchPlan("decode_attention", where, (b, hkv, npages), (
-        Block("q", (1, 1, g, d), dtype),
-        Block("k_page", (1, 1, page_size, d), dtype),
-        Block("v_page", (1, 1, page_size, d), dtype),
-        Block("out", (1, 1, g, d), dtype, kind="out"),
-        Block("m", (g, 1), "float32", kind="scratch"),
-        Block("l", (g, 1), "float32", kind="scratch"),
-        Block("acc", (g, d), "float32", kind="scratch"),
+    min_sub = MIN_SUBLANE[ITEMSIZE[dtype]]
+    hb = pick_kv_block(hkv, g, min_sub)
+    rows = -(-(hb * g) // min_sub) * min_sub       # kernel's explicit pad
+    plan = LaunchPlan("decode_attention", where, (b, hkv // hb, npages), (
+        Block("q", (1, 1, rows, d), dtype),
+        Block("k_page", (1, hb, page_size, d), dtype),
+        Block("v_page", (1, hb, page_size, d), dtype),
+        Block("out", (1, 1, rows, d), dtype, kind="out"),
+        Block("m", (rows, 1), "float32", kind="scratch"),
+        Block("l", (rows, 1), "float32", kind="scratch"),
+        Block("acc", (rows, d), "float32", kind="scratch"),
     ))
-    return check_plan(
-        plan, backend=backend,
-        suggestion="" if g % MIN_SUBLANE[ITEMSIZE[dtype]] == 0 else
-        "a GQA group G that is a multiple of 8 fills whole sublane tiles")
+    return check_plan(plan, backend=backend, suggestion="")
 
 
 def audit_prefill_attention(b: int, h: int, hkv: int, d: int, *, chunk: int,
@@ -481,30 +492,46 @@ def projection_dims(cfg) -> list[tuple[str, int, int, str]]:
 def audit_arch(cfg, *, bits: int, block_size: int, tp: int = 1,
                rank: int = 16, num_slots: int = 8, prefill_m: int = 256,
                chunk: int = 64, page_size: int = 32, spec_k: int = 0,
-               backend: str = "tpu") -> list[Violation] | None:
+               backend: str = "tpu",
+               plan=None) -> list[Violation] | None:
     """Static launch audit of one (arch, format, tp[, spec_k]) cell at FULL
     model shapes: every projection GEMM in both decode and prefill regimes,
     the paged attention kernels, the dense flash kernel, and the on-device
     repack.  ``spec_k`` > 0 additionally audits the speculative-decode
     launches: the draft-plane GEMM at decode M (no low-rank blocks) and the
     k+1-token verify — the fused GEMM at M = num_slots*(spec_k+1) rows plus
-    the chunk-prefill attention kernel at chunk = spec_k+1.  Returns None
-    when the cell is unservable by design (validate_tp refuses it loudly) —
-    a clean refusal is the contract working, not a violation."""
+    the chunk-prefill attention kernel at chunk = spec_k+1.  ``plan`` (a
+    ``core.allocate.QuantPlan`` keyed by projection NAME — see
+    ``mixed_reference_plan``) makes the audit heterogeneous: each
+    projection's launches are checked at its own (bits, block_size, rank)
+    and the global ``bits``/``block_size``/``rank`` become the fallback for
+    unlisted projections.  Returns None when the cell is unservable by
+    design (validate_tp refuses it loudly) — a clean refusal is the
+    contract working, not a violation."""
     from repro.quant.mxint import validate_packed_sharding
-    cell = f"{cfg.name} x mxint{bits} x tp{tp}"
+    fmt = "plan" if plan is not None else f"mxint{bits}"
+    cell = f"{cfg.name} x {fmt} x tp{tp}"
     if tp > 1:
         from repro.sharding.serving import validate_tp
         try:
             validate_tp(cfg, tp)
         except ValueError:
             return None
+
+    def point(name: str) -> tuple[int, int, int]:
+        if plan is None or name not in plan.assignments:
+            return bits, block_size, rank
+        c = plan.choice(name)
+        spec = c.spec()
+        return spec.bits, spec.block_size, c.rank
+
     out: list[Violation] = []
     for name, k, n, role in projection_dims(cfg):
+        p_bits, p_bs, p_rank = point(name)
         k_loc, n_loc = k, n
         if tp > 1 and role == "row":
             try:
-                k_loc = validate_packed_sharding(k, tp, bits, block_size,
+                k_loc = validate_packed_sharding(k, tp, p_bits, p_bs,
                                                  name=name)
             except ValueError as e:
                 out.append(Violation(
@@ -516,21 +543,21 @@ def audit_arch(cfg, *, bits: int, block_size: int, tp: int = 1,
             n_loc = n // tp
         for regime, m in (("decode", num_slots), ("prefill", prefill_m)):
             out += audit_quantized_matmul(
-                m, k_loc, n_loc, rank, bits=bits, block_size=block_size,
+                m, k_loc, n_loc, p_rank, bits=p_bits, block_size=p_bs,
                 backend=backend, where=f"{cell} / {name} ({regime} m={m})")
         if spec_k > 0:
             out += audit_quantized_matmul_draft(
-                num_slots, k_loc, n_loc, bits=bits, block_size=block_size,
+                num_slots, k_loc, n_loc, bits=p_bits, block_size=p_bs,
                 backend=backend,
                 where=f"{cell} / {name} (draft m={num_slots})")
             m_v = num_slots * (spec_k + 1)
             out += audit_quantized_matmul(
-                m_v, k_loc, n_loc, rank, bits=bits, block_size=block_size,
+                m_v, k_loc, n_loc, p_rank, bits=p_bits, block_size=p_bs,
                 backend=backend,
                 where=f"{cell} / {name} (verify k={spec_k} m={m_v})")
         if tp == 1:
             out += audit_quantize_weights(
-                k, n, bits=bits, block_size=block_size, backend=backend,
+                k, n, bits=p_bits, block_size=p_bs, backend=backend,
                 where=f"{cell} / {name} (repack)")
     h_loc = cfg.num_heads // tp
     kv_loc = max(cfg.num_kv_heads // tp, 1)

@@ -32,3 +32,12 @@ from repro.core.api import (
     quantize_linear,
     quantize_params,
 )
+from repro.core.allocate import (
+    LayerChoice,
+    QuantPlan,
+    allocate_plan,
+    describe_packed_plan,
+    plan_bytes,
+    plan_expected_error,
+    uniform_plan,
+)

@@ -1,0 +1,454 @@
+"""Calibration-driven mixed rank/bit allocation: the :class:`QuantPlan`.
+
+QERA's closed-form reconstruction makes every layer's output error
+*predictable from calibration statistics*: with the scaled-SVD solver the
+rank-k correction ``C_k`` is the best rank-k approximation of ``S (W - W̃)``
+(S = Rxx^{1/2} for qera_exact, diag(sqrt(E[x²])) for qera_approx), so the
+expected output error after reconstruction is exactly the tail energy
+
+    E(fmt, k) = Σ_{i > k} σ_i²      (σ = singular values of S (W - W̃))
+
+— one quantize + one SVD per (layer, format) yields the FULL error-vs-rank
+curve.  That turns mixed-precision allocation into a separable budgeted
+selection problem: pick one ``(format, rank)`` per layer minimizing the
+summed expected error under a global weights-HBM budget (SERQ-style
+saliency scoring; Preserve-Then-Quantize-style rank/bit trade, PAPERS.md).
+
+The allocator solves it in two phases, both deterministic:
+
+1. a Lagrangian sweep — for a bisected multiplier λ each layer
+   independently picks ``argmin(error + λ · bytes)``, which lands on the
+   lower convex hull of each layer's (bytes, error) cloud;
+2. a greedy refill — leftover budget is spent on the single best
+   ``Δerror/Δbyte`` upgrade until nothing fits, so any slack the hull
+   rounding left is converted into strictly lower error.
+
+The result is a :class:`QuantPlan`: an explicit ``path -> (quantizer,
+rank)`` assignment plus a default, JSON round-trippable, consumed by
+``core.api.quantize_params`` / ``pack_for_serving`` and carried through
+serving snapshots (``serve/supervisor.py``).  ``docs/allocation.md`` has
+the budget math and the plan file format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import LayerStats
+from repro.quant.mxint import MXINT_CONFIGS, mxint_fake_quant
+
+# formats the allocator considers by default: same 32-wide exponent blocks
+# (so one plan never mixes block sizes inside one packed granule contract)
+# spanning 2..8 mantissa bits.
+DEFAULT_FORMATS = ("mxint8", "mxint4", "mxint3", "mxint2_bs32")
+DEFAULT_RANKS = (8, 16, 32, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerChoice:
+    """One layer's operating point: MXINT format + reconstruction rank."""
+
+    quantizer: str
+    rank: int
+
+    def spec(self):
+        return MXINT_CONFIGS[self.quantizer]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPlan:
+    """path -> :class:`LayerChoice` with a default for unlisted paths.
+
+    ``assignments`` keys are the flattened param paths
+    ``quantize_params`` walks (stacked 3-D leaves may carry per-slice
+    ``{path}:{i}`` keys, falling back to ``{path}``).  ``meta`` records how
+    the plan was made (budget, predicted errors) — informational only,
+    excluded from equality.
+    """
+
+    assignments: Mapping[str, LayerChoice]
+    default: LayerChoice = LayerChoice("mxint4", 32)
+    method: str = "qera_approx"
+    meta: Mapping[str, Any] = dataclasses.field(default_factory=dict,
+                                                compare=False)
+
+    def choice(self, path: str) -> LayerChoice:
+        c = self.assignments.get(path)
+        if c is None and ":" in path:        # stacked-slice key fallback
+            c = self.assignments.get(path.rsplit(":", 1)[0])
+        return c if c is not None else self.default
+
+    def to_json_dict(self) -> dict:
+        return {
+            "version": 1,
+            "method": self.method,
+            "default": dataclasses.asdict(self.default),
+            "assignments": {p: dataclasses.asdict(c)
+                            for p, c in sorted(self.assignments.items())},
+            "meta": dict(self.meta),
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping[str, Any]) -> "QuantPlan":
+        return cls(
+            assignments={p: LayerChoice(**c)
+                         for p, c in d.get("assignments", {}).items()},
+            default=LayerChoice(**d["default"]),
+            method=d.get("method", "qera_approx"),
+            meta=dict(d.get("meta", {})))
+
+    def save(self, path) -> None:
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(self.to_json_dict(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path) -> "QuantPlan":
+        with open(path, encoding="utf-8") as f:
+            return cls.from_json_dict(json.load(f))
+
+
+def uniform_plan(quantizer: str = "mxint4", rank: int = 32,
+                 method: str = "qera_approx") -> QuantPlan:
+    """The scalar-PTQConfig operating point as a degenerate plan."""
+    return QuantPlan(assignments={}, default=LayerChoice(quantizer, rank),
+                     method=method)
+
+
+# ---------------------------------------------------------------------------
+# budget math (mirrors benchmarks/kernel_bench._weight_bytes)
+# ---------------------------------------------------------------------------
+
+def choice_bytes(k: int, n: int, choice: LayerChoice, *,
+                 lowrank_bytes: int = 4) -> int:
+    """Weights-HBM bytes of one (k, n) linear at ``choice``: packed
+    mantissas (bits/8 per element), one int8 exponent per block, and the
+    two low-rank factors (float32 by default — ``PTQConfig.lowrank_dtype``)."""
+    spec = choice.spec()
+    mant = k * n * spec.bits // 8
+    exp = (k // spec.block_size) * n
+    lowrank = (k + n) * choice.rank * lowrank_bytes
+    return mant + exp + lowrank
+
+
+def plan_bytes(shapes: Mapping[str, tuple[int, int]], plan: QuantPlan, *,
+               lowrank_bytes: int = 4) -> int:
+    """Total weights-HBM bytes of ``plan`` over ``path -> (k, n)`` shapes."""
+    return sum(choice_bytes(k, n, plan.choice(p), lowrank_bytes=lowrank_bytes)
+               for p, (k, n) in shapes.items())
+
+
+def eligible_shapes(params: Mapping[str, Any], skips: Callable[[str], bool]
+                    ) -> dict[str, tuple[int, int]]:
+    """path -> (k, n) of every weight ``quantize_params`` would quantize
+    (2-D leaves; stacked 3-D leaves contribute one ``{path}:{i}`` entry per
+    slice)."""
+    from repro.utils.trees import flatten_dict
+    out: dict[str, tuple[int, int]] = {}
+    for path, leaf in flatten_dict(dict(params)).items():
+        if not hasattr(leaf, "ndim") or skips(path):
+            continue
+        if leaf.ndim == 2:
+            out[path] = (int(leaf.shape[0]), int(leaf.shape[1]))
+        elif leaf.ndim == 3:
+            for i in range(leaf.shape[0]):
+                out[f"{path}:{i}"] = (int(leaf.shape[1]), int(leaf.shape[2]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-layer error curves
+# ---------------------------------------------------------------------------
+
+def error_curve(w: jax.Array, stats: LayerStats | None, quantizer: str, *,
+                method: str = "qera_approx") -> np.ndarray:
+    """Cumulative-tail expected-error curve of one layer at one format.
+
+    Returns ``tail`` with ``tail[r] = E(format, rank=r)`` for r in
+    [0, min(k, n)]: the energy of ``S (W - W̃)`` not captured by the best
+    rank-r reconstruction (paper Eq. 15 under the solver's S-weighting).
+    ``S`` follows the solver family: Rxx^{1/2} when full second moments are
+    available and ``method`` wants them, diag(sqrt(E[x²])) for the
+    qera_approx/lqer scaling (identity when no stats at all — plain Fro).
+    """
+    w32 = w.astype(jnp.float32)
+    spec = MXINT_CONFIGS[quantizer]
+    err = w32 - mxint_fake_quant(w32, spec.bits, spec.block_size)
+    if method == "qera_exact" and stats is not None and stats.rxx is not None:
+        from repro.core.sqrtm import psd_sqrt_eigh
+        rxx_sqrt, _ = psd_sqrt_eigh(stats.rxx.astype(jnp.float32),
+                                    compute_inverse=False)
+        s_err = rxx_sqrt @ err
+    elif stats is not None and stats.mean_x2 is not None:
+        s = jnp.sqrt(jnp.maximum(stats.mean_x2.astype(jnp.float32), 1e-12))
+        s_err = s[:, None] * err
+    else:
+        s_err = err
+    sv = jnp.linalg.svd(s_err, compute_uv=False)
+    energy = np.asarray(sv, dtype=np.float64) ** 2
+    total = float(energy.sum())
+    tail = total - np.concatenate([[0.0], np.cumsum(energy)])
+    return np.maximum(tail, 0.0)
+
+
+def plan_expected_error(params: Mapping[str, Any],
+                        stats_by_path: Mapping[str, LayerStats],
+                        plan: QuantPlan, *,
+                        skips: Callable[[str], bool] | None = None,
+                        stats_key_fn: Callable[[str], str] | None = None
+                        ) -> float:
+    """Summed QERA expected output error of ``plan`` over a params tree —
+    the allocator objective evaluated at an arbitrary plan (used by the
+    mixed_precision bench to score uniform vs mixed at equal HBM)."""
+    from repro.core.api import PTQConfig
+    skips = skips or PTQConfig().skips
+    stats_key_fn = stats_key_fn or (lambda p: p)
+    weights = _eligible_weights(params, skips)
+    total = 0.0
+    for path, w in weights.items():
+        c = plan.choice(path)
+        curve = _stacked_curve(path, w, stats_by_path, stats_key_fn,
+                               c.quantizer, plan.method)
+        total += float(curve[min(c.rank, len(curve) - 1)])
+    return total
+
+
+def _eligible_weights(params: Mapping[str, Any],
+                      skips: Callable[[str], bool]) -> dict[str, jax.Array]:
+    """path -> 2-D or 3-D weight leaf.  Stacked (scanned) 3-D leaves stay
+    WHOLE: all slices of one stacked leaf must share a choice (mant/exp/lora
+    shapes must stack), so the allocator decides them jointly."""
+    from repro.utils.trees import flatten_dict
+    out: dict[str, jax.Array] = {}
+    for path, leaf in flatten_dict(dict(params)).items():
+        if not hasattr(leaf, "ndim") or skips(path):
+            continue
+        if leaf.ndim in (2, 3):
+            out[path] = leaf
+    return out
+
+
+def _stacked_curve(path, w, stats_by_path, stats_key_fn, fmt, method):
+    """Summed error curve over a leaf's slices (one slice for 2-D)."""
+    if w.ndim == 2:
+        st = _stats_for(stats_by_path, stats_key_fn, path)
+        return error_curve(w, st, fmt, method=method)
+    curves = []
+    for i in range(w.shape[0]):
+        st = _stats_for(stats_by_path, stats_key_fn, f"{path}:{i}")
+        curves.append(error_curve(w[i], st, fmt, method=method))
+    return np.sum(curves, axis=0)
+
+
+def _stats_for(stats_by_path, stats_key_fn, path):
+    if ":" in path:
+        base, i = path.rsplit(":", 1)
+        return (stats_by_path.get(f"{stats_key_fn(base)}:{i}")
+                or stats_by_path.get(stats_key_fn(base)))
+    return stats_by_path.get(stats_key_fn(path))
+
+
+# ---------------------------------------------------------------------------
+# the allocator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _Candidate:
+    choice: LayerChoice
+    bytes: int
+    error: float
+
+
+def _layer_candidates(path: str, w, stats_by_path, stats_key_fn, *,
+                      formats: Iterable[str], ranks: Iterable[int],
+                      method: str, lowrank_bytes: int) -> list[_Candidate]:
+    k, n = int(w.shape[-2]), int(w.shape[-1])
+    mult = int(w.shape[0]) if w.ndim == 3 else 1
+    out: list[_Candidate] = []
+    for fmt in formats:
+        spec = MXINT_CONFIGS[fmt]
+        if k % spec.block_size:
+            continue                 # unpackable at this format: skip
+        curve = _stacked_curve(path, w, stats_by_path, stats_key_fn, fmt,
+                               method)
+        for r in ranks:
+            if r >= min(k, n):
+                continue
+            out.append(_Candidate(LayerChoice(fmt, r),
+                                  mult * choice_bytes(k, n, LayerChoice(fmt, r),
+                                                      lowrank_bytes=lowrank_bytes),
+                                  float(curve[r])))
+    return out
+
+
+def allocate_plan(params: Mapping[str, Any],
+                  stats_by_path: Mapping[str, LayerStats] | None = None, *,
+                  budget_bytes: int | None = None,
+                  reference: LayerChoice = LayerChoice("mxint4", 32),
+                  formats: Iterable[str] = DEFAULT_FORMATS,
+                  ranks: Iterable[int] = DEFAULT_RANKS,
+                  method: str = "qera_approx",
+                  skips: Callable[[str], bool] | None = None,
+                  stats_key_fn: Callable[[str], str] | None = None,
+                  lowrank_bytes: int = 4) -> QuantPlan:
+    """Minimize summed QERA expected output error under a weights-HBM
+    budget.
+
+    ``budget_bytes`` defaults to the bytes the uniform ``reference``
+    operating point spends — "same HBM as uniform mxint4/r32, spent
+    better".  Layers whose K no candidate format divides keep the
+    reference choice (they stay fake-quant in ``pack_for_serving`` anyway)
+    and are charged outside the optimization.
+
+    Deterministic: candidate order, the λ bisection, and the greedy refill
+    are all fixed functions of (params, stats, arguments).
+    """
+    from repro.core.api import PTQConfig
+    skips = skips or PTQConfig().skips
+    stats_key_fn = stats_key_fn or (lambda p: p)
+    ranks = tuple(sorted(set(int(r) for r in ranks)))
+    formats = tuple(formats)
+
+    weights = _eligible_weights(params, skips)
+    paths = sorted(weights)
+    cands: dict[str, list[_Candidate]] = {}
+    fixed: dict[str, LayerChoice] = {}
+    fixed_bytes = 0
+    def ref_bytes(w) -> int:
+        mult = int(w.shape[0]) if w.ndim == 3 else 1
+        return mult * choice_bytes(int(w.shape[-2]), int(w.shape[-1]),
+                                   reference, lowrank_bytes=lowrank_bytes)
+
+    for p in paths:
+        w = weights[p]
+        cs = _layer_candidates(p, w, stats_by_path or {}, stats_key_fn,
+                               formats=formats, ranks=ranks, method=method,
+                               lowrank_bytes=lowrank_bytes)
+        if not cs:
+            fixed[p] = reference
+            fixed_bytes += ref_bytes(w)
+            continue
+        cands[p] = cs
+
+    if budget_bytes is None:
+        budget_bytes = sum(ref_bytes(weights[p]) for p in paths)
+    budget = budget_bytes - fixed_bytes
+
+    def pick_at(lam: float) -> dict[str, _Candidate]:
+        out = {}
+        for p, cs in cands.items():
+            out[p] = min(cs, key=lambda c: (c.error + lam * c.bytes,
+                                            c.bytes))
+        return out
+
+    def total_bytes(sel: dict[str, _Candidate]) -> int:
+        return sum(c.bytes for c in sel.values())
+
+    # λ = 0 is "spend freely"; if even that fits, it is optimal.
+    sel = pick_at(0.0)
+    if total_bytes(sel) > budget:
+        lo, hi = 0.0, 1e-12
+        while total_bytes(pick_at(hi)) > budget:
+            hi *= 4.0
+            if hi > 1e12:
+                break
+        for _ in range(80):                      # bisect λ
+            mid = 0.5 * (lo + hi)
+            if total_bytes(pick_at(mid)) > budget:
+                lo = mid
+            else:
+                hi = mid
+        sel = pick_at(hi)
+        if total_bytes(sel) > budget:            # no feasible λ: all-min
+            sel = {p: min(cs, key=lambda c: (c.bytes, c.error))
+                   for p, cs in cands.items()}
+
+    # greedy refill: spend leftover budget on the best error/byte upgrade
+    while True:
+        spent = total_bytes(sel)
+        best = None                              # (gain_rate, -gain, path, cand)
+        for p in sorted(cands):
+            cur = sel[p]
+            for c in cands[p]:
+                extra = c.bytes - cur.bytes
+                gain = cur.error - c.error
+                if gain <= 0 or spent + extra > budget:
+                    continue
+                rate = gain / max(extra, 1)
+                if best is None or rate > best[0] + 1e-18:
+                    best = (rate, gain, p, c)
+        if best is None:
+            break
+        sel[best[2]] = best[3]
+
+    assignments = {p: c.choice for p, c in sel.items()}
+    assignments.update(fixed)
+    expected = sum(c.error for c in sel.values())
+    return QuantPlan(
+        assignments=assignments, default=reference, method=method,
+        meta={"budget_bytes": int(budget_bytes),
+              "plan_bytes": int(total_bytes(sel) + fixed_bytes),
+              "expected_error": float(expected),
+              "formats": list(formats), "ranks": list(ranks),
+              "fixed_paths": sorted(fixed)})
+
+
+def mixed_reference_plan() -> QuantPlan:
+    """A deterministic heterogeneous plan keyed by PROJECTION ROLE
+    (``analysis.contracts.projection_dims`` names), not param paths — the
+    static analysis sweep's stand-in for a calibrated plan: every registry
+    arch gets audited under per-leaf heterogeneous contracts without
+    needing weights or stats.  The shape mirrors what calibrated
+    allocations actually produce: attention out/down projections (the
+    saliency-heavy ones in SERQ's measurements) ride high-bit/low-rank,
+    the wide FFN in-projections absorb the budget cut."""
+    return QuantPlan(
+        assignments={
+            "wq": LayerChoice("mxint4", 32),
+            "wk": LayerChoice("mxint8", 16),
+            "wv": LayerChoice("mxint8", 16),
+            "wo": LayerChoice("mxint8", 32),
+            "wi": LayerChoice("mxint3", 64),
+            "wg": LayerChoice("mxint3", 64),
+            "wu": LayerChoice("mxint3", 64),
+            "wd": LayerChoice("mxint4", 32),
+            "lm_head": LayerChoice("mxint8", 16),
+        },
+        default=LayerChoice("mxint4", 32))
+
+
+# ---------------------------------------------------------------------------
+# packed-tree introspection (snapshot round-trip validation)
+# ---------------------------------------------------------------------------
+
+def describe_packed_plan(params: Any) -> dict[str, dict[str, int]]:
+    """Derive the *effective* plan of a packed/quantized params tree:
+    ``path -> {"bits", "block_size", "rank"}`` for packed leaves,
+    ``{"rank"}`` for fake-quant leaves.  Two serving trees agree on
+    precision layout iff their descriptions are equal — what
+    ``serve/supervisor.py`` stores in (and checks against) snapshots so a
+    mixed-precision server round-trips exactly."""
+    from repro.utils.trees import flatten_dict
+    out: dict[str, dict[str, int]] = {}
+    flat = flatten_dict(dict(params)) if isinstance(params, Mapping) else {}
+    for path, leaf in flat.items():
+        parent, _, last = path.rpartition("/")
+        if last == "mant":
+            k = parent or path
+            bits = int(np.asarray(jax.device_get(flat[f"{parent}/bits"]))
+                       .reshape(-1)[0])
+            bs = int(np.asarray(jax.device_get(flat[f"{parent}/block_size"]))
+                     .reshape(-1)[0])
+            d = out.setdefault(k, {})
+            d["bits"], d["block_size"] = bits, bs
+        elif last == "w_tilde":
+            out.setdefault(parent or path, {})
+        elif last == "lora_a":
+            out.setdefault(parent or path, {})["rank"] = int(
+                leaf.shape[-1])
+    return out

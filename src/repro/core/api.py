@@ -68,18 +68,29 @@ def quantize_params(params: Mapping[str, Any], cfg: PTQConfig,
                     stats_by_path: Mapping[str, LayerStats] | None = None,
                     key: jax.Array | None = None,
                     stats_key_fn: Callable[[str], str] | None = None,
-                    verbose: bool = False) -> dict[str, Any]:
+                    verbose: bool = False, plan=None) -> dict[str, Any]:
     """Quantize every eligible 2-D weight in a params tree.
 
     ``stats_by_path`` maps a weight's flattened path (or its stats key) to the
     calibration LayerStats of that layer's *input*.  For stacked (scanned)
     layers — leaves with ndim == 3, (num_layers, m, n) — per-layer stats keys
     ``{path}:{i}`` are used when present, else a shared ``{path}`` entry.
+
+    ``plan`` (a ``core.allocate.QuantPlan``) overrides ``cfg.quantizer`` /
+    ``cfg.rank`` per path — heterogeneous mixed-precision quantization from
+    one call.  Stacked leaves take the plan's choice for the whole stack
+    (all slices of one leaf must share mant/lora shapes to stack).
     """
     if key is None:
         key = jax.random.PRNGKey(0)
     stats_by_path = stats_by_path or {}
     stats_key_fn = stats_key_fn or (lambda p: p)
+
+    def cfg_for(path: str) -> PTQConfig:
+        if plan is None:
+            return cfg
+        c = plan.choice(path)
+        return dataclasses.replace(cfg, quantizer=c.quantizer, rank=c.rank)
 
     flat = flatten_dict(dict(params))
     out: dict[str, Any] = {}
@@ -90,17 +101,20 @@ def quantize_params(params: Mapping[str, Any], cfg: PTQConfig,
         if leaf.ndim == 2:
             st = stats_by_path.get(stats_key_fn(path))
             key, sub = jax.random.split(key)
-            out[path] = quantize_linear(leaf, cfg, stats=st, key=sub)
+            lcfg = cfg_for(path)
+            out[path] = quantize_linear(leaf, lcfg, stats=st, key=sub)
             if verbose:
-                print(f"quantized {path} {leaf.shape} [{cfg.method}/{cfg.quantizer}]")
+                print(f"quantized {path} {leaf.shape} "
+                      f"[{lcfg.method}/{lcfg.quantizer}/r{lcfg.rank}]")
         elif leaf.ndim == 3 and not cfg.skips(path):
             # stacked layers: quantize each slice with its own stats
+            lcfg = cfg_for(path)
             slices = []
             for i in range(leaf.shape[0]):
                 st = (stats_by_path.get(f"{stats_key_fn(path)}:{i}")
                       or stats_by_path.get(stats_key_fn(path)))
                 key, sub = jax.random.split(key)
-                slices.append(quantize_linear(leaf[i], cfg, stats=st, key=sub))
+                slices.append(quantize_linear(leaf[i], lcfg, stats=st, key=sub))
             out[path] = {
                 k: jnp.stack([s[k] for s in slices]) for k in slices[0]
             }
@@ -115,7 +129,7 @@ def dequantized_weight(qlin: Mapping[str, jax.Array]) -> jax.Array:
 
 
 def pack_for_serving(qparams: Mapping[str, Any], cfg: PTQConfig,
-                     packed: bool = True, mesh=None) -> dict:
+                     packed: bool = True, mesh=None, plan=None) -> dict:
     """Convert quantized linears to the PACKED layout the Pallas kernel
     consumes: {"mant" int8, "exp" int8, "bits", "block_size", lora_a/b}.
 
@@ -132,14 +146,28 @@ def pack_for_serving(qparams: Mapping[str, Any], cfg: PTQConfig,
     device_put with its tensor-parallel NamedSharding from
     ``sharding/serving.py`` — in-projections column-parallel, out-projections
     row-parallel, everything else replicated — so the packed buffers land
-    pre-sharded and shard_map never reshuffles them."""
+    pre-sharded and shard_map never reshuffles them.
+
+    With ``plan`` (a ``core.allocate.QuantPlan``), every leaf packs at ITS
+    OWN format — the packed tree carries per-leaf 0-dim ``bits`` /
+    ``block_size`` markers that ``models.layers.linear`` and the sharding
+    validators already dispatch on, so one serving tree mixes mxint8/4/3/2
+    layers freely."""
     from repro.quant.mxint import MXINT_CONFIGS, mxint_quantize, pack_mantissa
 
     if cfg.quantizer not in MXINT_CONFIGS:
         raise ValueError(f"packing supports MXINT formats, got {cfg.quantizer}")
-    spec = MXINT_CONFIGS[cfg.quantizer]
 
-    def pack(leaf):
+    def spec_for(path: str):
+        if plan is None:
+            return MXINT_CONFIGS[cfg.quantizer]
+        fmt = plan.choice(path).quantizer
+        if fmt not in MXINT_CONFIGS:
+            raise ValueError(f"packing supports MXINT formats, got {fmt} "
+                             f"for {path}")
+        return MXINT_CONFIGS[fmt]
+
+    def pack(leaf, spec):
         if not (isinstance(leaf, Mapping) and "w_tilde" in leaf):
             return leaf
         w = leaf["w_tilde"]
@@ -166,7 +194,7 @@ def pack_for_serving(qparams: Mapping[str, Any], cfg: PTQConfig,
                 grouped[path] = flat[path]
             continue
         leaf = {k: flat[f"{parent}/{k}"] for k in ("w_tilde", "lora_a", "lora_b")}
-        group = pack(leaf)
+        group = pack(leaf, spec_for(parent))
         for k, v in group.items():
             grouped[f"{parent}/{k}"] = v
         done.add(parent)

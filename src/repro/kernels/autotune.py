@@ -1,0 +1,269 @@
+"""Measured block-plan autotuner for the fused MXINT matmul kernels.
+
+``pick_blocks`` is a heuristic: one divisor-and-alignment rule for every
+``(M, K, N, format)``.  With heterogeneous :class:`~repro.core.allocate.
+QuantPlan` serving trees a single rule is untenable — each layer now has
+its own ``(bits, block_size, epb)`` packing geometry, and the best
+``(bm, bn, bk)`` differs per layer.  This module measures instead of
+guessing:
+
+- ``autotune(...)`` times every legal candidate plan on the live backend
+  via the same blocked-wall-clock harness ``benchmarks/kernel_bench`` uses
+  and persists the winner under ``experiments/autotune/{backend}.json``;
+- ``lookup(...)`` is the zero-cost hot-path read: the serving wrappers
+  (``kernels.ops.quantized_matmul*``) consult it at TRACE time (shapes are
+  static under jit) and fall back to ``pick_blocks`` on a miss, so
+  behavior without a cache is bit-for-bit the heuristic's.
+
+Measurement NEVER happens implicitly: serving only ever reads the cache.
+Populate it offline (``python -m repro.kernels.autotune`` or the
+kernel_bench/mixed_precision benches).  Because jit traces capture the
+plan, load caches (``warm``) before the first forward pass of a process.
+
+Determinism contract (checked by CI's autotune smoke): candidate
+enumeration is a pure function of the key; a cache hit returns the stored
+plan without re-measuring; and the JSON file is written with sorted keys,
+so hit/miss behavior and file bytes are reproducible run-to-run (only the
+measured ``us`` field depends on the machine).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import pick_blocks
+from repro.quant.mxint import elems_per_byte, mxint_quantize, pack_mantissa
+
+DEFAULT_CACHE_DIR = os.path.join("experiments", "autotune")
+ENV_CACHE_DIR = "QERA_AUTOTUNE_DIR"
+
+# candidate cap grids the enumerator sweeps (each triple is filtered
+# through pick_blocks, so only legal, deduped plans are ever measured)
+_CAP_M = (32, 64, 128, 256)
+_CAP_N = (64, 128, 256)
+_CAP_K = (64, 128, 256)
+
+# in-memory cache: backend -> {key: entry}; _LOADED marks backends whose
+# file has been read (including "file absent"), so the hot-path lookup is
+# one dict probe after the first call.
+_CACHE: dict[str, dict[str, dict[str, Any]]] = {}
+_LOADED: set[tuple[str, str]] = set()
+
+
+def cache_dir(root: str | None = None) -> str:
+    return root or os.environ.get(ENV_CACHE_DIR, DEFAULT_CACHE_DIR)
+
+
+def cache_path(backend: str, root: str | None = None) -> str:
+    return os.path.join(cache_dir(root), f"{backend}.json")
+
+
+def plan_key(m: int, k: int, n: int, *, bits: int, block_size: int,
+             epb: int) -> str:
+    return f"m{m}_k{k}_n{n}_b{bits}_bs{block_size}_e{epb}"
+
+
+def current_backend() -> str:
+    return "tpu" if jax.default_backend() == "tpu" else "interpret"
+
+
+def candidate_plans(m: int, k: int, n: int, *, block_size: int,
+                    epb: int = 1) -> list[tuple[int, int, int, bool]]:
+    """Deterministic, deduplicated legal ``(bm, bn, bk, decode)`` plans:
+    the cap-grid product filtered through ``pick_blocks`` (which owns
+    legality — divisibility, packing granularity, sublane alignment)."""
+    seen = []
+    for cm in _CAP_M:
+        for cn in _CAP_N:
+            for ck in _CAP_K:
+                try:
+                    plan = pick_blocks(m, k, n, block_size=block_size,
+                                       epb=epb, block_m=cm, block_n=cn,
+                                       block_k=ck)
+                except ValueError:
+                    continue
+                if plan not in seen:
+                    seen.append(plan)
+    return seen
+
+
+def _load(backend: str, root: str | None = None) -> dict[str, dict[str, Any]]:
+    key = (backend, cache_dir(root))
+    store = _CACHE.setdefault(backend, {})
+    if key in _LOADED:
+        return store
+    path = cache_path(backend, root)
+    if os.path.exists(path):
+        with open(path, encoding="utf-8") as f:
+            store.update(json.load(f))
+    _LOADED.add(key)
+    return store
+
+
+def _save(backend: str, root: str | None = None) -> str:
+    path = cache_path(backend, root)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(_CACHE.get(backend, {}), f, indent=1, sort_keys=True)
+    return path
+
+
+def reset(backend: str | None = None) -> None:
+    """Drop the in-memory cache (tests / cache-dir switches). Does not
+    touch files, but DOES clear the jit traces that captured old plans."""
+    if backend is None:
+        _CACHE.clear()
+        _LOADED.clear()
+    else:
+        _CACHE.pop(backend, None)
+        for k in [k for k in _LOADED if k[0] == backend]:
+            _LOADED.discard(k)
+    jax.clear_caches()
+
+
+def lookup(m: int, k: int, n: int, *, bits: int, block_size: int,
+           epb: int = 1, backend: str | None = None,
+           root: str | None = None) -> tuple[int, int, int, bool] | None:
+    """Hot-path cache probe: the tuned ``(bm, bn, bk, decode)`` for this
+    launch geometry, or None (caller falls back to ``pick_blocks``)."""
+    backend = backend or current_backend()
+    e = _load(backend, root).get(
+        plan_key(m, k, n, bits=bits, block_size=block_size, epb=epb))
+    if e is None:
+        return None
+    return int(e["bm"]), int(e["bn"]), int(e["bk"]), bool(e["decode"])
+
+
+def _timed_us(fn, reps: int = 3) -> float:
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def autotune(m: int, k: int, n: int, *, bits: int, block_size: int,
+             rank: int = 32, packed: bool = True, reps: int = 3,
+             backend: str | None = None, root: str | None = None,
+             force: bool = False) -> tuple[dict[str, Any], bool]:
+    """Measure-and-cache the best block plan for one launch geometry.
+
+    Returns ``(entry, hit)``: ``entry`` is the cached record ``{"bm",
+    "bn", "bk", "decode", "us", "candidates"}``; ``hit`` is True when the
+    plan came from the cache without re-measuring (the determinism the CI
+    smoke asserts).  ``force=True`` re-measures and overwrites.
+    """
+    from repro.kernels.ops import quantized_matmul
+
+    backend = backend or current_backend()
+    epb = elems_per_byte(bits) if packed else 1
+    key = plan_key(m, k, n, bits=bits, block_size=block_size, epb=epb)
+    store = _load(backend, root)
+    if key in store and not force:
+        return store[key], True
+
+    cands = candidate_plans(m, k, n, block_size=block_size, epb=epb)
+    if not cands:
+        raise ValueError(f"no legal block plan for {key}")
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(keys[0], (m, k), jnp.float32)
+    w = jax.random.normal(keys[1], (k, n), jnp.float32) * 0.1
+    a = jax.random.normal(keys[2], (k, rank), jnp.float32) * 0.05
+    b = jax.random.normal(keys[3], (rank, n), jnp.float32) * 0.05
+    mant, exp = mxint_quantize(w, bits, block_size)
+    mant = mant.reshape(k, n)
+    if packed:
+        mant = pack_mantissa(mant, bits)
+
+    interpret = backend != "tpu"
+    best = None
+    for bm, bn, bk, decode in cands:
+        # feed the caps straight through so pick_blocks reproduces exactly
+        # this candidate inside the wrapper
+        us = _timed_us(
+            lambda bm=bm, bn=bn, bk=bk: quantized_matmul(
+                x, mant, exp, a, b, bits=bits, block_size=block_size,
+                block_m=bm, block_n=bn, block_k=bk, interpret=interpret),
+            reps=reps)
+        if best is None or us < best["us"]:
+            best = {"bm": bm, "bn": bn, "bk": bk, "decode": decode,
+                    "us": round(us, 2)}
+    best["candidates"] = len(cands)
+    store[key] = best
+    _save(backend, root)
+    return best, False
+
+
+def autotune_shapes(shapes: Iterable[tuple[int, int, int, int, int]], *,
+                    rank: int = 32, backend: str | None = None,
+                    root: str | None = None, reps: int = 3,
+                    verbose: bool = False) -> dict[str, Any]:
+    """Tune a batch of ``(m, k, n, bits, block_size)`` geometries; returns
+    ``key -> entry`` for the batch (hits included)."""
+    out = {}
+    for m, k, n, bits, bs in shapes:
+        entry, hit = autotune(m, k, n, bits=bits, block_size=bs, rank=rank,
+                              backend=backend, root=root, reps=reps)
+        out[plan_key(m, k, n, bits=bits, block_size=bs,
+                     epb=elems_per_byte(bits))] = entry
+        if verbose:
+            tag = "hit " if hit else "tuned"
+            print(f"[{tag}] m={m} k={k} n={n} bits={bits} bs={bs} -> "
+                  f"bm={entry['bm']} bn={entry['bn']} bk={entry['bk']} "
+                  f"({entry['us']}us)")
+    return out
+
+
+def plan_shapes_for_params(packed_params, m: int = 8
+                           ) -> list[tuple[int, int, int, int, int]]:
+    """The decode-shaped launch geometries of a packed serving tree — what
+    a server would tune before going live.  ``m`` is the slot count."""
+    from repro.utils.trees import flatten_dict
+
+    flat = flatten_dict(dict(packed_params))
+    shapes = []
+    for path, leaf in flat.items():
+        if not path.endswith("/mant"):
+            continue
+        parent = path.rsplit("/", 1)[0]
+        bits = int(jax.device_get(flat[f"{parent}/bits"]).reshape(-1)[0])
+        bs = int(jax.device_get(flat[f"{parent}/block_size"]).reshape(-1)[0])
+        epb = elems_per_byte(bits)
+        rows, n = int(leaf.shape[-2]), int(leaf.shape[-1])
+        k = rows * epb
+        entry = (m, k, n, bits, bs)
+        if entry not in shapes:
+            shapes.append(entry)
+    return shapes
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="measure-and-cache MXINT matmul block plans")
+    ap.add_argument("--m", type=int, default=8)
+    ap.add_argument("--k", type=int, default=256)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=32)
+    ap.add_argument("--rank", type=int, default=32)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--cache-dir", default=None)
+    args = ap.parse_args(argv)
+    entry, hit = autotune(args.m, args.k, args.n, bits=args.bits,
+                          block_size=args.block_size, rank=args.rank,
+                          reps=args.reps, root=args.cache_dir)
+    print(json.dumps({"hit": hit, **entry}, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

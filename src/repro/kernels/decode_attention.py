@@ -14,11 +14,26 @@ Layout (see serve/paging.py for the pool):
   page_table  (B, npages) int32    slot's logical page j -> physical page
   kv_len      (B,) int32           live tokens per slot (masks page tails)
 
-grid = (B, Hkv, npages) with the page axis innermost; the page table and
-kv_len ride in as **scalar prefetch** (``PrefetchScalarGridSpec``) so the
-K/V BlockSpec index_map can gather ``pt[b, p]`` before the body runs — the
-kernel never touches pages the slot does not own.  All G = H/Hkv query heads
-of one kv head are processed in a single block (one MXU dot per page).
+grid = (B, Hkv / hb, npages) with the page axis innermost; the page table
+and kv_len ride in as **scalar prefetch** (``PrefetchScalarGridSpec``) so
+the K/V BlockSpec index_map can gather ``pt[b, p]`` before the body runs —
+the kernel never touches pages the slot does not own.
+
+**KV-head blocking** (``pick_kv_block``): when the GQA group G = H/Hkv is
+not sublane-aligned (G ∉ 8ℤ — command-r-plus G=12, phi3.5-moe G=4,
+llama4-maverick G=5), a single-group q tile wastes most of its 8-sublane
+rows.  The per-layer block plan instead batches ``hb`` consecutive kv heads
+per grid step — the smallest divisor of Hkv with ``hb·G % 8 == 0`` — so the
+q/out/acc tiles hold ``hb·G`` real rows and fill whole sublane tiles
+(G=12 → hb=2 → 24 rows; G=4 → hb=2 → 8; G=5 → hb=8 → 40).  Scores for the
+``hb``-head block come from ONE MXU dot against the page's ``hb`` heads
+flattened to (hb·ps, d); a head-match mask (row's kv head == column's kv
+head) kills the cross-head terms.  Numerics are unchanged: masked columns
+underflow to exact 0.0 in the exp, and each head's live columns stay a
+ps-aligned contiguous run, so the per-row reductions see the same values
+in the same tree order as the single-head launch.  When no divisor aligns
+(or G already does), ``hb = 1`` and any remaining pad rows are explicit
+zero-q rows cropped on the way out.
 
 Online-softmax state (m, l, acc) lives in VMEM scratch across the page
 sweep, exactly like the prefill flash kernel.  Tokens at ``ids >= kv_len``
@@ -40,8 +55,22 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def pick_kv_block(hkv: int, g: int, min_sub: int = 8) -> int:
+    """KV heads per decode-attention grid step: the smallest divisor ``hb``
+    of ``hkv`` that makes the q-tile row count ``hb * g`` sublane-aligned
+    (1 when ``g`` already is, or when no divisor aligns — the launch then
+    pads rows explicitly).  Mirrored by ``analysis.contracts.
+    audit_decode_attention``; keep this the single source of truth."""
+    if g % min_sub == 0:
+        return 1
+    for hb in range(1, hkv + 1):
+        if hkv % hb == 0 and (hb * g) % min_sub == 0:
+            return hb
+    return 1
+
+
 def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, sm_scale: float, page_size: int):
+            acc_ref, *, sm_scale: float, page_size: int, g: int, hb: int):
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -51,15 +80,22 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
-    k = k_ref[0, 0].astype(jnp.float32)            # (ps, d)
-    v = v_ref[0, 0].astype(jnp.float32)
+    q = q_ref[0, 0].astype(jnp.float32)            # (rows_pad, d)
+    d = q.shape[-1]
+    k = k_ref[0].astype(jnp.float32).reshape(hb * page_size, d)
+    v = v_ref[0].astype(jnp.float32).reshape(hb * page_size, d)
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
-    ids = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(ids < len_ref[b], s, NEG_INF)    # causal == length mask
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    ids = p * page_size + col % page_size          # token id of the column
+    # row's kv head (pad rows clamp to the last real head — they are
+    # cropped, any value is fine) must match the column's kv head
+    same_head = jnp.minimum(row // g, hb - 1) == col // page_size
+    live = (ids < len_ref[b]) & same_head          # causal == length mask
+    s = jnp.where(live, s, NEG_INF)
 
-    m_prev = m_ref[...]                            # (G, 1)
+    m_prev = m_ref[...]                            # (rows_pad, 1)
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
     pexp = jnp.exp(s - m_new)
     alpha = jnp.exp(m_prev - m_new)
@@ -90,34 +126,41 @@ def decode_attention_pallas(
     npages = page_table.shape[1]
     if sm_scale is None:
         sm_scale = 1.0 / (d ** 0.5)
-    qg = q.reshape(bsz, hkv, g, d)
+
+    hb = pick_kv_block(hkv, g)
+    nhb = hkv // hb
+    rows = hb * g
+    rows_pad = -(-rows // 8) * 8
+    qg = q.reshape(bsz, nhb, rows, d)
+    if rows_pad != rows:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, rows_pad - rows), (0, 0)))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,            # page_table, kv_len
-        grid=(bsz, hkv, npages),
+        grid=(bsz, nhb, npages),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d),
+            pl.BlockSpec((1, 1, rows_pad, d),
                          lambda b, h_, p, pt, ln: (b, h_, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, d),
+            pl.BlockSpec((1, hb, page_size, d),
                          lambda b, h_, p, pt, ln: (pt[b, p], h_, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, d),
+            pl.BlockSpec((1, hb, page_size, d),
                          lambda b, h_, p, pt, ln: (pt[b, p], h_, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
+        out_specs=pl.BlockSpec((1, 1, rows_pad, d),
                                lambda b, h_, p, pt, ln: (b, h_, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((rows_pad, 1), jnp.float32),
+            pltpu.VMEM((rows_pad, 1), jnp.float32),
+            pltpu.VMEM((rows_pad, d), jnp.float32),
         ],
     )
     kernel = functools.partial(_kernel, sm_scale=sm_scale,
-                               page_size=page_size)
+                               page_size=page_size, g=g, hb=hb)
     # contract: decode_attention
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+        out_shape=jax.ShapeDtypeStruct((bsz, nhb, rows_pad, d), q.dtype),
         interpret=interpret,
     )(page_table, kv_len.astype(jnp.int32), qg, k_pages, v_pages)
-    return out.reshape(bsz, h, d)
+    return out[:, :, :rows, :].reshape(bsz, h, d)

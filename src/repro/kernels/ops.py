@@ -130,6 +130,26 @@ def pick_blocks(m: int, k: int, n: int, *, block_size: int, epb: int = 1,
     return bm, bn, bk, decode
 
 
+def _block_plan(m: int, k: int, n: int, *, bits: int, block_size: int,
+                epb: int, block_m: int, block_n: int,
+                block_k: int) -> tuple[int, int, int, bool]:
+    """Tuned-or-heuristic block plan for one fused-matmul launch.
+
+    When the caller left every cap at the default, consult the measured
+    autotune cache (``kernels.autotune.lookup`` — a dict probe at TRACE
+    time; shapes are static under jit) and take the tuned ``(bm, bn, bk,
+    decode)`` on a hit.  Explicit caps and cache misses fall through to the
+    ``pick_blocks`` heuristic, so behavior without a cache is unchanged.
+    """
+    if block_m == 128 and block_n == 128 and block_k == 128:
+        from repro.kernels.autotune import lookup
+        tuned = lookup(m, k, n, bits=bits, block_size=block_size, epb=epb)
+        if tuned is not None:
+            return tuned
+    return pick_blocks(m, k, n, block_size=block_size, epb=epb,
+                       block_m=block_m, block_n=block_n, block_k=block_k)
+
+
 def pick_quant_bn(n: int, cap: int = 2048) -> int:
     """Lane-block width for the on-device repack (``quantize_weights``).
 
@@ -179,7 +199,8 @@ def quantized_matmul(x: jax.Array, mant: jax.Array, exp: jax.Array,
             f"mantissa rows {mant.shape[0]} match neither flat K={k} nor "
             f"packed K/epb={k // epb} (bits={bits})")
 
-    bm, bn, bk, decode = pick_blocks(m, k, n, block_size=block_size,
+    bm, bn, bk, decode = _block_plan(m, k, n, bits=bits,
+                                     block_size=block_size,
                                      epb=epb if packed else 1,
                                      block_m=block_m, block_n=block_n,
                                      block_k=block_k)
@@ -228,7 +249,8 @@ def quantized_matmul_draft(x: jax.Array, mant: jax.Array, exp: jax.Array, *,
             f"mantissa rows {mant.shape[0]} match neither flat K={k} nor "
             f"packed K/epb={k // epb} (bits={bits})")
 
-    bm, bn, bk, decode = pick_blocks(m, k, n, block_size=block_size,
+    bm, bn, bk, decode = _block_plan(m, k, n, bits=bits,
+                                     block_size=block_size,
                                      epb=epb if packed else 1,
                                      block_m=block_m, block_n=block_n,
                                      block_k=block_k)

@@ -67,6 +67,18 @@ def main():
                     help="qera_exact|qera_approx|lqer|zeroquant_v2|loftq")
     ap.add_argument("--bits", default="mxint4")
     ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--plan", default=None,
+                    help="path to a QuantPlan JSON (core/allocate.py): "
+                         "per-layer (format, rank) overrides for --quantize "
+                         "instead of the uniform --bits/--rank point")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding: draft k tokens per tick "
+                         "with the reduced-precision weight view, verify in "
+                         "one full-precision launch (serve/speculative.py)")
+    ap.add_argument("--draft-bits", type=int, default=4,
+                    help="mantissa bits of the speculative draft plane; "
+                         "draft_bits=2 accepts ~0% (docs/speculative.md) — "
+                         "warned here, refused under --strict")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
@@ -151,7 +163,13 @@ def main():
         # pure shape math — refuses a mis-sharded config in milliseconds,
         # before any device, mesh, or parameter exists
         from repro.analysis import strict_audit
+        from repro.serve.speculative import check_spec_config
         tp_degree = args.tp if args.tp and args.tp > 1 else 1
+        spec_msg = check_spec_config(args.spec_k, args.draft_bits,
+                                     where="--strict")
+        if spec_msg is not None:
+            print(f"--strict: refusing to serve: {spec_msg}")
+            raise SystemExit(2)
         rep = strict_audit(cfg, quantizer=args.bits, tp=tp_degree)
         for v in rep.violations:
             print(f"  {v}")
@@ -177,8 +195,16 @@ def main():
         stats = remap_stats(taps.layer_stats())
         qcfg = PTQConfig(method=args.quantize, rank=args.rank,
                          quantizer=args.bits)
-        params = quantize_params(params, qcfg, stats_by_path=stats)
-        print(f"quantized with {args.quantize}/{args.bits} rank {args.rank}")
+        plan = None
+        if args.plan:
+            from repro.core import QuantPlan
+            plan = QuantPlan.load(args.plan)
+            print(f"loaded QuantPlan {args.plan}: "
+                  f"{len(plan.assignments)} per-layer assignments, "
+                  f"default {plan.default.quantizer}/r{plan.default.rank}")
+        params = quantize_params(params, qcfg, stats_by_path=stats, plan=plan)
+        print(f"quantized with {args.quantize}/{args.bits} rank {args.rank}"
+              + (" (per-layer plan overrides)" if plan else ""))
 
     mesh = None
     if args.mesh or (args.tp is not None and args.tp > 1):
@@ -195,7 +221,8 @@ def main():
                                 num_pages=args.num_pages,
                                 prefix_cache=args.prefix_cache,
                                 nan_retry_limit=args.nan_retry_limit,
-                                mesh=mesh)
+                                mesh=mesh, spec_k=args.spec_k,
+                                draft_bits=args.draft_bits)
     rng = np.random.default_rng(7)
     # shared few-shot preamble on half the requests so --prefix-cache has
     # real hits to report (production traffic is dominated by shared

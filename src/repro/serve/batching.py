@@ -208,7 +208,10 @@ class ContinuousBatcher:
         # committed token streams are bit-identical to spec_k=0.
         if spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        from repro.serve.speculative import check_spec_config
+        check_spec_config(spec_k, draft_bits, where="ContinuousBatcher")
         self.spec_k = spec_k
+        self.draft_bits = draft_bits
         # recurrent families integrate per-token state for every chunk
         # position; partial accepts restore-and-replay (``_replay_slot``)
         self._recurrent = cfg.family in ("hybrid_mamba", "rwkv")

@@ -355,7 +355,9 @@ def scan_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
         max_len = -(-max_len // page_size) * page_size
     if spec_k:
         from repro.serve.speculative import (KV_ONLY_FAMILIES,
+                                             check_spec_config,
                                              make_draft_params)
+        check_spec_config(spec_k, draft_bits, where="scan_generate")
         if cfg.family not in KV_ONLY_FAMILIES:
             raise ValueError(
                 f"scan_generate(spec_k>0) supports KV-only families "

@@ -22,6 +22,7 @@ the bit layout, acceptance rule and rollback contract.
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, Mapping
 
 import jax.numpy as jnp
@@ -34,6 +35,32 @@ from repro.quant.mxint import container_bits, draft_shift
 # rwkv) additionally integrate per-token state and need the batcher's
 # restore-and-replay path; the engine's scan loop supports only these.
 KV_ONLY_FAMILIES = ("dense", "moe")
+
+
+# Below this draft mantissa width the draft's argmax diverges from the
+# verifier on essentially every token (docs/speculative.md measures ~0%
+# acceptance at draft_bits=2): every draft launch is wasted work.
+MIN_USEFUL_DRAFT_BITS = 3
+
+
+def check_spec_config(spec_k: int, draft_bits: int, *,
+                      where: str = "") -> str | None:
+    """Warn (loudly) about the known-useless speculative configuration.
+
+    Returns the warning text when ``spec_k > 0`` rides on a draft plane
+    too narrow to ever be accepted (None when the config is fine), and
+    emits it as a ``UserWarning`` — callers that should hard-refuse
+    (``launch/serve.py --strict``) raise on the non-None return instead of
+    silently burning a draft+verify launch per token."""
+    if spec_k <= 0 or draft_bits >= MIN_USEFUL_DRAFT_BITS:
+        return None
+    msg = (f"speculative decoding with draft_bits={draft_bits} accepts ~0% "
+           f"of drafted tokens (docs/speculative.md): every spec_k={spec_k} "
+           f"draft launch is wasted work on top of the verify pass. Use "
+           f"draft_bits >= {MIN_USEFUL_DRAFT_BITS} or spec_k=0."
+           + (f" [{where}]" if where else ""))
+    warnings.warn(msg, UserWarning, stacklevel=3)
+    return msg
 
 
 def make_draft_params(params: Any, *, draft_bits: int = 2,

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.ckpt import CheckpointManager
+from repro.core.allocate import describe_packed_plan
 from repro.runtime.fault_tolerance import RestartPolicy, SimulatedFailure
 from repro.serve.batching import ContinuousBatcher, Request, _Admission
 
@@ -120,7 +121,14 @@ def capture_state(batcher: ContinuousBatcher) -> tuple[dict, dict]:
             "nan_guard": b.nan_guard, "nan_retry_limit": b.nan_retry_limit,
             "family": b.cfg.family,
             "tp": b.plan.tp if b.plan is not None else 1,
+            "spec_k": b.spec_k,
+            "draft_bits": getattr(b, "draft_bits", 2),
         },
+        # the effective per-layer precision layout (path -> bits/block_size/
+        # rank, derived from the packed tree) — a mixed-precision QuantPlan
+        # server restores ONLY into a batcher whose params agree leaf-for-
+        # leaf, so heterogeneous serving round-trips exactly
+        "quant_plan": describe_packed_plan(b.params),
         # tensor-parallel batchers record the serving-mesh spec and store
         # every SHARDED cache leaf as a stacked (tp, ...) array of its
         # per-device shards (see ServingPlan.to_host_shards) — restore
@@ -199,6 +207,21 @@ def apply_state(batcher: ContinuousBatcher, host: dict, dev: dict,
             f"batcher runs tp={have_tp}; rebuild the batcher with "
             f"mesh=make_serving_mesh(tp={snap_tp}) to restore it "
             f"(mesh spec in snapshot: {host.get('mesh')})")
+    # precision-layout compatibility: a mixed-precision snapshot must land
+    # on params with the SAME per-layer (bits, block_size, rank) layout —
+    # a silently different plan would replay greedy streams on different
+    # weights.  ``.get`` keeps pre-plan snapshots restorable unchecked.
+    snap_plan = host.get("quant_plan")
+    if snap_plan is not None:
+        have_plan = describe_packed_plan(b.params)
+        if snap_plan != have_plan:
+            diff = sorted(
+                p for p in set(snap_plan) | set(have_plan)
+                if snap_plan.get(p) != have_plan.get(p))[:8]
+            raise ValueError(
+                f"snapshot quant plan does not match this batcher's params "
+                f"(first differing layers: {diff}); re-quantize/pack with "
+                f"the snapshot's QuantPlan before restoring")
     requests = dict(requests or {})
     by_rid: dict[int, Request] = {}
     for rs in host["requests"]:
@@ -295,7 +318,8 @@ def load_snapshot(manager: CheckpointManager, params: Any, cfg: Any, *,
         num_pages=g["num_pages"] or None, chunk_tokens=g["chunk_tokens"],
         prefix_cache=g["prefix_cache"], fault_injector=fault_injector,
         nan_guard=g["nan_guard"], nan_retry_limit=g["nan_retry_limit"],
-        mesh=mesh)
+        mesh=mesh, spec_k=g.get("spec_k", 0),
+        draft_bits=g.get("draft_bits", 2))
     by_rid = apply_state(batcher, host, dev, requests)
     return batcher, by_rid
 

@@ -126,6 +126,34 @@ def validate_tp(cfg: ModelConfig, tp: int) -> None:
                 f"(config {cfg.name!r})")
 
 
+def validate_plan_tp(shapes: Mapping[str, tuple[int, int]], plan: Any,
+                     tp: int) -> None:
+    """Per-leaf packed-granule preflight of a heterogeneous QuantPlan.
+
+    ``shapes`` maps flattened param paths to their (K, N)
+    (``core.allocate.eligible_shapes``); each leaf is validated at ITS OWN
+    plan format — row-parallel shards must hold whole exponent blocks and
+    whole packed bytes of that leaf's (bits, block_size), column-parallel
+    shards must divide N — so a mixed-precision plan is refused before any
+    weight is quantized, with the offending layer named."""
+    if tp <= 1:
+        return
+    from repro.quant.mxint import MXINT_CONFIGS
+
+    for path in sorted(shapes):
+        k, n = shapes[path]
+        role = tp_role(path)
+        c = plan.choice(path)
+        spec = MXINT_CONFIGS[c.quantizer]
+        if role == "row":
+            validate_packed_sharding(k, tp, spec.bits, spec.block_size,
+                                     name=f"{path} ({c.quantizer})")
+        elif role == "column" and n % tp:
+            raise ValueError(
+                f"plan leaf {path!r} N={n} does not divide across tp={tp} "
+                f"devices")
+
+
 def tp_local_cfg(cfg: ModelConfig, tp: int) -> ModelConfig:
     """The PER-DEVICE config the model runs with inside shard_map.
 

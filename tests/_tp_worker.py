@@ -251,8 +251,63 @@ def mode_spec():
     return out
 
 
+def mode_plan():
+    """A heterogeneous QuantPlan serves at tp=2: validate_plan_tp accepts
+    the per-leaf granules, and the sharded batcher is token-identical to
+    the single-device batcher on the SAME mixed packed tree (dense and
+    paged), with the per-leaf (bits, block_size, rank) markers intact."""
+    from repro.core import PTQConfig, quantize_params
+    from repro.core.allocate import (LayerChoice, QuantPlan,
+                                     describe_packed_plan, eligible_shapes)
+    from repro.core.api import pack_for_serving
+    from repro.models import Taps
+    from repro.models.config import ModelConfig
+    from repro.models.transformer import forward
+    from repro.sharding.serving import validate_plan_tp
+
+    cfg = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=64, head_dim=16,
+                      scan_layers=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    taps = Taps()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    forward(params, {"tokens": toks}, cfg, taps=taps)
+    from benchmarks.common import remap_stats
+    qcfg = PTQConfig(method="qera_approx", rank=8, quantizer="mxint4",
+                     skip_patterns=PTQConfig().skip_patterns)
+    fmts = ("mxint8", "mxint4", "mxint3", "mxint2_bs32")
+    shapes = eligible_shapes(params, qcfg.skips)
+    bases = sorted({p.split(":")[0] for p in shapes})
+    plan = QuantPlan(
+        assignments={p: LayerChoice(fmts[i % len(fmts)], (4, 8)[i % 2])
+                     for i, p in enumerate(bases)},
+        default=LayerChoice("mxint4", 8), method="qera_approx")
+    out = {}
+    try:
+        validate_plan_tp(shapes, plan, 2)
+        out["plan_tp_ok"] = True
+    except ValueError as e:
+        return {"plan_tp_ok": False, "error": str(e)}
+    packed = pack_for_serving(
+        quantize_params(params, qcfg, stats_by_path=remap_stats(
+            taps.layer_stats()), plan=plan), qcfg, plan=plan)
+    desc = describe_packed_plan(packed)
+    out["mixed_markers"] = len({(e["bits"], e.get("rank"))
+                                for e in desc.values() if "bits" in e}) > 2
+    mesh = make_serving_mesh(2)
+    for name, kw in (("dense", {}), ("paged", {"paged": True,
+                                               "page_size": 8})):
+        ref = _serve(packed, cfg, **kw)
+        got = _serve(packed, cfg, mesh=mesh, **kw)
+        out[f"{name}_tp2"] = got == ref
+        out[f"{name}_nonempty"] = all(len(v) for v in ref.values())
+    return out
+
+
 MODES = {"identity": mode_identity, "storm": mode_storm,
-         "snapshot": mode_snapshot, "psum": mode_psum, "spec": mode_spec}
+         "snapshot": mode_snapshot, "psum": mode_psum, "spec": mode_spec,
+         "plan": mode_plan}
 
 if __name__ == "__main__":
     print(json.dumps(MODES[sys.argv[1]]()))

@@ -1,0 +1,121 @@
+"""Measured block-plan autotuner: determinism, cache hit/miss, hot-path.
+
+The CI smoke asserts the determinism contract: candidate enumeration is a
+pure function of the launch key, a second ``autotune`` call is a cache HIT
+that returns the stored plan without re-measuring, and the persisted JSON
+is keyed/sorted reproducibly.  The hot-path test checks the serving
+wrappers actually consume the tuned plan (and stay numerically correct).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as at
+from repro.kernels.ops import quantized_matmul
+from repro.kernels.ref import mxint_matmul_lowrank_ref
+from repro.quant.mxint import mxint_quantize, pack_mantissa
+
+
+@pytest.fixture()
+def cache(tmp_path, monkeypatch):
+    monkeypatch.setenv(at.ENV_CACHE_DIR, str(tmp_path))
+    at.reset()
+    yield tmp_path
+    at.reset()
+
+
+def test_candidate_enumeration_deterministic():
+    a = at.candidate_plans(8, 128, 128, block_size=32, epb=2)
+    b = at.candidate_plans(8, 128, 128, block_size=32, epb=2)
+    assert a == b and a
+    assert len(set(a)) == len(a)          # deduped
+    # every candidate is a legal pick_blocks outcome at its own caps
+    from repro.kernels.ops import pick_blocks
+    for bm, bn, bk, decode in a:
+        got = pick_blocks(8, 128, 128, block_size=32, epb=2,
+                          block_m=bm, block_n=bn, block_k=bk)
+        assert got == (bm, bn, bk, decode)
+
+
+def test_autotune_miss_then_hit(cache):
+    kw = dict(bits=4, block_size=32, rank=8, reps=1, backend="interpret")
+    e1, hit1 = at.autotune(8, 64, 64, **kw)
+    e2, hit2 = at.autotune(8, 64, 64, **kw)
+    assert (hit1, hit2) == (False, True)
+    assert (e1["bm"], e1["bn"], e1["bk"], e1["decode"]) == \
+        (e2["bm"], e2["bn"], e2["bk"], e2["decode"])
+    # persisted under the env-pointed dir with a stable key
+    path = cache / "interpret.json"
+    assert path.exists()
+    store = json.loads(path.read_text())
+    key = at.plan_key(8, 64, 64, bits=4, block_size=32, epb=2)
+    assert key in store
+    assert store[key]["candidates"] == e1["candidates"]
+    # lookup is the zero-cost read of the same entry
+    got = at.lookup(8, 64, 64, bits=4, block_size=32, epb=2,
+                    backend="interpret")
+    assert got == (e1["bm"], e1["bn"], e1["bk"], e1["decode"])
+    # unknown geometry -> None (callers fall back to pick_blocks)
+    assert at.lookup(8, 96, 64, bits=4, block_size=32, epb=2,
+                     backend="interpret") is None
+
+
+def test_tuned_hot_path_matches_reference(cache):
+    """quantized_matmul consults the cache at default caps; the tuned plan
+    must produce the same math as the reference."""
+    m, k, n, r = 8, 64, 64, 8
+    at.autotune(m, k, n, bits=4, block_size=32, rank=r, reps=1,
+                backend="interpret")
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(keys[0], (m, k), jnp.float32)
+    w = jax.random.normal(keys[1], (k, n), jnp.float32) * 0.1
+    a = jax.random.normal(keys[2], (k, r), jnp.float32) * 0.05
+    b = jax.random.normal(keys[3], (r, n), jnp.float32) * 0.05
+    mant, exp = mxint_quantize(w, 4, 32)
+    mant = pack_mantissa(mant.reshape(k, n), 4)
+    out = quantized_matmul(x, mant, exp, a, b, bits=4, block_size=32,
+                           interpret=True)
+    ref = mxint_matmul_lowrank_ref(x, mant, exp, a, b, 4, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_explicit_caps_bypass_cache(cache):
+    """Explicit block caps are the caller's choice — the cache must not
+    override them (this is also what keeps autotune's own measurement
+    loop from consulting the cache it is building)."""
+    m, k, n, r = 8, 64, 64, 8
+    at.autotune(m, k, n, bits=4, block_size=32, rank=r, reps=1,
+                backend="interpret")
+    from repro.kernels.ops import _block_plan
+    tuned = _block_plan(m, k, n, bits=4, block_size=32, epb=2,
+                        block_m=128, block_n=128, block_k=128)
+    assert tuned[:3] == at.lookup(m, k, n, bits=4, block_size=32, epb=2,
+                                  backend="interpret")[:3]
+    pinned = _block_plan(m, k, n, bits=4, block_size=32, epb=2,
+                         block_m=32, block_n=64, block_k=64)
+    from repro.kernels.ops import pick_blocks
+    assert pinned == pick_blocks(m, k, n, block_size=32, epb=2,
+                                 block_m=32, block_n=64, block_k=64)
+
+
+def test_plan_shapes_for_params(cache):
+    """A packed serving tree yields its decode launch geometries."""
+    from repro.core import PTQConfig, quantize_params
+    from repro.core.api import pack_for_serving
+    from repro.models import ModelConfig, init_params
+    cfg = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=64, head_dim=16)
+    qcfg = PTQConfig(method="loftq", rank=8, quantizer="mxint4",
+                     skip_patterns=PTQConfig().skip_patterns)
+    packed = pack_for_serving(quantize_params(init_params(
+        cfg, jax.random.PRNGKey(0)), qcfg), qcfg)
+    shapes = at.plan_shapes_for_params(packed, m=8)
+    assert shapes
+    assert all(s[0] == 8 and s[3] == 4 and s[4] == 32 for s in shapes)
+    ks = {(s[1], s[2]) for s in shapes}
+    assert (64, 128) in ks or (128, 64) in ks

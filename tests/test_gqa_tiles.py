@@ -1,0 +1,82 @@
+"""Sublane-aligned KV-head tiles for GQA decode attention.
+
+``pick_kv_block`` groups KV heads per grid step so the q-tile row count
+(``hb * g``) is 8-sublane aligned whenever a divisor of ``hkv`` allows it;
+the kernel zero-pads the rows explicitly otherwise.  Covered here: the
+chooser's arithmetic, kernel-vs-oracle numerics across every alignment
+regime (grouped, already-aligned, padded), and the acceptance bar — the
+static auditor reports ZERO decode-attention sublane warnings for the
+documented GQA offenders (command-r-plus, phi3.5-moe, llama4-maverick)
+across the full tp sweep.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.kernels.decode_attention import pick_kv_block
+from repro.kernels.ops import decode_attention
+from repro.kernels.ref import decode_attention_ref
+
+GQA_OFFENDERS = ("command-r-plus-104b", "phi3.5-moe-42b-a6.6b",
+                 "llama4-maverick-400b-a17b")
+
+
+def test_pick_kv_block_arithmetic():
+    assert pick_kv_block(8, 8) == 1       # aligned g: one KV head per step
+    assert pick_kv_block(2, 16) == 1
+    assert pick_kv_block(8, 12) == 2      # command-r-plus: 2*12 = 24 rows
+    assert pick_kv_block(4, 4) == 2       # phi3.5-moe: 2*4 = 8 rows
+    assert pick_kv_block(8, 5) == 8       # llama4-maverick: 8*5 = 40 rows
+    assert pick_kv_block(3, 2) == 1       # no divisor aligns -> pad path
+    assert pick_kv_block(1, 12) == 1      # tp-sharded to one KV head
+    # the chosen tile always divides hkv
+    for hkv in (1, 2, 3, 4, 5, 8, 12):
+        for g in (1, 2, 4, 5, 7, 8, 12):
+            hb = pick_kv_block(hkv, g)
+            assert hkv % hb == 0
+            # alignment achieved whenever ANY divisor could achieve it
+            aligned = any(hkv % d == 0 and (d * g) % 8 == 0
+                          for d in range(1, hkv + 1))
+            assert ((hb * g) % 8 == 0) == aligned or hb == 1
+
+
+@pytest.mark.parametrize("hkv,g", [
+    (8, 12),   # grouped: hb=2, 24 rows, no pad
+    (4, 4),    # grouped: hb=2, exactly 8 rows
+    (8, 5),    # grouped: hb=8, 40 rows
+    (3, 2),    # unalignable: hb=1, 2 rows padded to 8
+    (2, 8),    # already aligned: hb=1, no pad
+])
+def test_gqa_kernel_vs_oracle(hkv, g):
+    b, d, ps, npg, ptot = 3, 16, 8, 4, 16
+    h = hkv * g
+    ks = jax.random.split(jax.random.PRNGKey(hkv * 31 + g), 3)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (ptot, hkv, ps, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (ptot, hkv, ps, d), jnp.float32)
+    pt = jnp.asarray(np.random.RandomState(0).choice(
+        np.arange(1, ptot), (b, npg), replace=False).astype(np.int32))
+    kv_len = jnp.asarray([5, 17, 32], jnp.int32)
+    got = decode_attention(q, kp, vp, pt, kv_len, interpret=True)
+    want = decode_attention_ref(q, kp, vp, pt, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", GQA_OFFENDERS)
+def test_no_gqa_sublane_warnings(arch):
+    """The documented GQA sublane-waste warnings are gone by construction:
+    the auditor mirrors pick_kv_block and checks the launched (grouped,
+    padded) geometry."""
+    from repro.analysis.contracts import audit_arch
+    cfg = get_arch(arch)
+    for tp in (1, 2, 4, 8):
+        found = audit_arch(cfg, bits=4, block_size=32, tp=tp, backend="tpu")
+        if found is None:
+            continue                      # clean validate_tp refusal
+        bad = [v for v in found if "decode_attention" in v.message
+               or "decode_attention" in v.where]
+        assert not bad, [str(v) for v in bad]

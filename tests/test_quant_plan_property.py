@@ -1,0 +1,83 @@
+"""Hypothesis storm over heterogeneous packed trees.
+
+Randomized sweeps of the per-leaf (format, rank) degrees of freedom a
+QuantPlan introduces: every leaf of a mixed tree must pack -> unpack
+bit-identically at ITS OWN (bits, block_size, epb), the plan JSON codec
+must round-trip arbitrary assignments, and the budget formula must be
+consistent under composition.  The deterministic end-to-end coverage
+(quantize -> pack -> serve) lives in test_quant_plan.py; this module is
+the fuzzer on top.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allocate import LayerChoice, QuantPlan, choice_bytes
+from repro.quant.mxint import (
+    MXINT_CONFIGS,
+    container_bits,
+    pack_mxint,
+    unpack_mxint,
+)
+
+pytest.importorskip("hypothesis")  # property tests skip without hypothesis
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+FORMATS = sorted(MXINT_CONFIGS)
+
+_leaf = st.tuples(st.sampled_from(FORMATS),
+                  st.integers(1, 4),       # exponent blocks along K
+                  st.integers(1, 6))       # N columns
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(_leaf, min_size=1, max_size=5),
+       st.integers(0, 2 ** 31 - 1))
+def test_heterogeneous_tree_pack_unpack_bit_identity(leaves, seed):
+    """A tree mixing every format: each leaf's packed storage dequantizes
+    bit-identically to its own flat layout — no cross-leaf leakage of
+    (bits, block_size, epb)."""
+    key = jax.random.PRNGKey(seed)
+    for i, (fmt, kb, n) in enumerate(leaves):
+        spec = MXINT_CONFIGS[fmt]
+        k = kb * spec.block_size
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (k, n), jnp.float32) * 2.0
+        packed = pack_mxint(w, spec.bits, spec.block_size)
+        flat = pack_mxint(w, spec.bits, spec.block_size, packed=False)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_mxint(packed)), np.asarray(unpack_mxint(flat)),
+            err_msg=f"leaf {i} fmt={fmt} k={k} n={n}")
+        # measured HBM bytes follow the CONTAINER bit-width per leaf
+        assert packed.mant.nbytes == k * n * container_bits(spec.bits) // 8
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.dictionaries(
+    st.text(st.sampled_from("abqkvwod/"), min_size=1, max_size=12),
+    st.tuples(st.sampled_from(FORMATS), st.sampled_from([0, 4, 8, 16, 64])),
+    max_size=8),
+    st.sampled_from(FORMATS), st.sampled_from([8, 32]))
+def test_plan_json_roundtrip_arbitrary(assigns, dfmt, drank):
+    plan = QuantPlan(
+        assignments={p: LayerChoice(f, r) for p, (f, r) in assigns.items()},
+        default=LayerChoice(dfmt, drank), method="qera_exact")
+    back = QuantPlan.from_json_dict(plan.to_json_dict())
+    assert back.assignments == plan.assignments
+    assert back.default == plan.default and back.method == plan.method
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from(FORMATS), st.integers(1, 8), st.integers(1, 512),
+       st.sampled_from([0, 4, 16, 64]))
+def test_choice_bytes_formula(fmt, kb, n, rank):
+    spec = MXINT_CONFIGS[fmt]
+    k = kb * spec.block_size
+    c = LayerChoice(fmt, rank)
+    got = choice_bytes(k, n, c)
+    assert got == k * n * spec.bits // 8 + (k // spec.block_size) * n \
+        + (k + n) * rank * 4
+    # monotone in rank and bits
+    assert got >= choice_bytes(k, n, LayerChoice(fmt, 0))

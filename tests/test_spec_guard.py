@@ -1,0 +1,59 @@
+"""Guard against the useless speculative configuration.
+
+``spec_k > 0`` with ``draft_bits = 2`` accepts ~0% of drafts
+(docs/speculative.md): every entry point warns loudly, and ``--strict``
+serving refuses outright with exit code 2.
+"""
+
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import pytest
+
+from repro.models import ModelConfig, init_params
+from repro.serve.batching import ContinuousBatcher
+from repro.serve.speculative import MIN_USEFUL_DRAFT_BITS, check_spec_config
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CFG = ModelConfig(family="dense", num_layers=2, d_model=32, num_heads=4,
+                  num_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8)
+
+
+def test_check_spec_config_verdicts():
+    assert MIN_USEFUL_DRAFT_BITS == 3
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")            # good configs stay silent
+        assert check_spec_config(0, 2) is None    # spec off: anything goes
+        assert check_spec_config(4, 4) is None
+        assert check_spec_config(4, 3) is None
+    with pytest.warns(UserWarning, match="draft_bits=2"):
+        msg = check_spec_config(4, 2, where="here")
+    assert msg is not None and "here" in msg and "~0%" in msg
+
+
+def test_batcher_warns_on_useless_spec():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    with pytest.warns(UserWarning, match="ContinuousBatcher"):
+        ContinuousBatcher(params, CFG, num_slots=2, max_len=32, spec_k=2,
+                          draft_bits=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ContinuousBatcher(params, CFG, num_slots=2, max_len=32, spec_k=2,
+                          draft_bits=4)
+
+
+def test_strict_serving_refuses_useless_spec():
+    """--strict exits 2 BEFORE any parameter exists, naming the guard."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "minicpm-2b",
+         "--reduced", "--strict", "--spec-k", "4", "--draft-bits", "2"],
+        capture_output=True, text=True, timeout=240,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+             "JAX_PLATFORMS": "cpu"}, cwd=REPO)
+    assert out.returncode == 2, out.stdout + out.stderr
+    assert "refusing to serve" in out.stdout
+    assert "draft_bits" in out.stdout

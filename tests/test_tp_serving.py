@@ -280,3 +280,12 @@ def test_tp_one_allreduce_per_projection_pair():
         found, want, violations = res[f"psums_scan_{scan}"]
         assert found == want and not violations, res
     assert res["kernel_column_close"] and res["kernel_row_close"], res
+
+
+@pytest.mark.slow
+def test_tp_mixed_plan_identity():
+    """A heterogeneous QuantPlan (per-leaf bits/rank) shards at tp=2 and
+    stays token-identical to the single-device batcher on the same mixed
+    packed tree (dense + paged); validate_plan_tp accepts the granules."""
+    res = _worker("plan")
+    assert res == {k: True for k in res}, res
